@@ -1,0 +1,27 @@
+"""Shared benchmark plumbing.
+
+Every benchmark emits ``name,us_per_call,derived`` CSV rows via ``emit``:
+us_per_call = wall microseconds per primitive call (controller step /
+train step / packing call), derived = the paper-facing metric
+(speedup x, accuracy, throughput tokens/s, ...).
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+@contextmanager
+def timed():
+    t = {}
+    t0 = time.perf_counter()
+    yield t
+    t["s"] = time.perf_counter() - t0

@@ -1,0 +1,75 @@
+"""Figure 1 analogue: execution-timeline utilization of the generation
+pool, synchronous vs asynchronous.
+
+The paper's Fig. 1 shows sync inference devices idling while (a) the
+longest sequence in the batch finishes and (b) training runs.  We
+measure generation-pool utilization = fraction of virtual time with
+active decode slots, from the same simulator runs as Table 1.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.configs.base import RLConfig
+from repro.core import AsyncRLController
+from repro.core.simulator import (HardwareModel, SimEngine, SimPromptStream,
+                                  SimTrainer, WorkloadModel, make_llm_timing)
+
+STEPS = 5
+
+
+class _UtilizationController(AsyncRLController):
+    """Tracks busy (any active slot) vs idle generation time."""
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self.busy = 0.0
+        self.slot_time = 0.0          # slot-weighted utilization
+        self._slots = kw["engine"].n_slots
+
+    def run(self, n_steps, **kw):
+        orig_step = self.engine.step
+        orig_decode = self.timing.decode_step
+
+        def step_wrapper():
+            n = self.engine.n_active
+            dt = orig_decode(n)
+            self.busy += dt
+            self.slot_time += dt * n / self._slots
+            return orig_step()
+
+        self.engine.step = step_wrapper
+        return super().run(n_steps, **kw)
+
+
+def _run(colocated):
+    hw = HardwareModel()
+    wl = WorkloadModel(n_params=7e9)
+    devices = 128
+    if colocated:
+        timing = make_llm_timing(hw, wl, n_gen_devices=devices,
+                                 n_train_devices=devices, colocated=True)
+        rl = RLConfig(batch_size=256, max_staleness=0, interruptible=False)
+    else:
+        timing = make_llm_timing(hw, wl, n_gen_devices=96, n_train_devices=32)
+        rl = RLConfig(batch_size=256, max_staleness=4, interruptible=True)
+    eng = SimEngine(n_slots=1024, mean_len=6000, max_len=28_672,
+                    prompt_len=1024, seed=0)
+    ctl = _UtilizationController(engine=eng, trainer=SimTrainer(),
+                                 prompt_stream=SimPromptStream(1024), rl=rl,
+                                 timing=timing)
+    ctl.run(STEPS)
+    total = max(ctl.clock, 1e-9)
+    return ctl.busy / total, ctl.slot_time / total
+
+
+def main():
+    with timed() as t:
+        busy_s, slots_s = _run(colocated=True)
+        busy_a, slots_a = _run(colocated=False)
+    emit("fig1_gen_pool_utilization", 1e6 * t["s"] / (2 * STEPS),
+         f"sync_busy={busy_s:.2f};sync_slot_util={slots_s:.2f};"
+         f"areal_busy={busy_a:.2f};areal_slot_util={slots_a:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Figure 5c / Appendix C.3 analogue: effective training throughput vs
+max staleness eta (the staleness-throughput trade-off).
+
+Paper result (8 GPUs, 1.5B, Table 7): 27.1k tok/s at eta=0 rising to
+~52k at eta>=8 — throughput saturates once generation fully hides
+behind training.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.configs.base import RLConfig
+from repro.core import AsyncRLController
+from repro.core.simulator import (HardwareModel, SimEngine, SimPromptStream,
+                                  SimTrainer, WorkloadModel, make_llm_timing)
+
+STEPS = 6
+
+
+def main():
+    hw = HardwareModel()
+    wl = WorkloadModel(n_params=1.5e9)
+    base = None
+    for eta in (0, 1, 2, 4, 8, 16):
+        timing = make_llm_timing(hw, wl, n_gen_devices=6, n_train_devices=2)
+        rl = RLConfig(batch_size=64 * 16, max_staleness=eta,
+                      interruptible=True)
+        eng = SimEngine(n_slots=2048, mean_len=2000, max_len=7168,
+                        prompt_len=1024, seed=0)
+        ctl = AsyncRLController(engine=eng, trainer=SimTrainer(),
+                                prompt_stream=SimPromptStream(1024), rl=rl,
+                                timing=timing)
+        with timed() as t:
+            ctl.run(STEPS)
+        thr = ctl.effective_throughput()
+        base = base or thr
+        emit(f"fig5c_eta{eta}", 1e6 * t["s"] / STEPS,
+             f"{thr:.0f}tok/s;x{thr / base:.2f}_vs_eta0")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""§Roofline report: per (arch x shape x mesh) three-term roofline from
+the dry-run artifacts (runs/dryrun), with dominant-bottleneck
+classification and MODEL_FLOPS/HLO_FLOPs useful-compute ratio."""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import emit
+from repro.launch import roofline
+
+
+def main():
+    default = "runs/dryrun_final" if os.path.isdir("runs/dryrun_final") \
+        else "runs/dryrun"
+    d = os.environ.get("DRYRUN_DIR", default)
+    if not os.path.isdir(d):
+        emit("roofline_missing", 0.0, f"no_dryrun_artifacts_in_{d}")
+        return
+    rows = [r for r in roofline.load_rows(d) if r.variant == ""]
+    for r in rows:
+        if r.status != "ok":
+            emit(f"roofline_{r.arch}_{r.shape}_{r.mesh}", 0.0,
+                 f"status={r.status}")
+            continue
+        emit(f"roofline_{r.arch}_{r.shape}_{r.mesh}",
+             r.total_s * 1e6,
+             f"C={r.compute_s:.2e}s;M={r.memory_s:.2e}s;"
+             f"X={r.collective_s:.2e}s;dom={r.dominant};"
+             f"useful={r.useful_ratio:.2f};fits={'Y' if r.fits else 'N'}")
+
+
+if __name__ == "__main__":
+    main()

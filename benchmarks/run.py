@@ -1,0 +1,57 @@
+"""Benchmark driver — one module per paper table/figure.
+
+  fig1_timeline          Fig. 1: generation-pool utilization sync vs async
+  table1_end_to_end      Table 1: sync vs async end-to-end hours
+  fig4_scaling           Fig. 4: strong-scaling of effective throughput
+  table2_staleness       Table 2 / Fig. 5a-b: REAL staleness x objective runs
+  table8_rloo            App. C.4 Table 8: RLOO vs GRPO staleness tolerance
+  fig5c_throughput       Fig. 5c / Table 7: throughput vs eta
+  fig6a_dynamic_batching Fig. 6a: Algorithm 1 vs static micro-batching
+  fig6b_interruptible    Fig. 6b: interruptible-generation ablation
+  roofline_report        Roofline terms from the dry-run artifacts
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (fig1_timeline, fig4_scaling, fig5c_throughput,
+                        fig6a_dynamic_batching, fig6b_interruptible,
+                        roofline_report, table1_end_to_end,
+                        table2_staleness, table8_rloo)
+from benchmarks.common import emit
+
+MODULES = [
+    ("fig1", fig1_timeline),
+    ("table1", table1_end_to_end),
+    ("fig4", fig4_scaling),
+    ("table2", table2_staleness),
+    ("table8", table8_rloo),
+    ("fig5c", fig5c_throughput),
+    ("fig6a", fig6a_dynamic_batching),
+    ("fig6b", fig6b_interruptible),
+    ("roofline", roofline_report),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    failed = False
+    for name, mod in MODULES:
+        if only and name != only:
+            continue
+        try:
+            mod.main()
+        except Exception:
+            failed = True
+            emit(f"{name}_ERROR", 0.0, "see_stderr")
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Table 1 analogue: end-to-end training hours, synchronous (colocated)
+vs AReaL (disaggregated 75/25, interruptible, eta staleness) at equal
+device count — via the calibrated discrete-event simulator.
+
+Paper result: up to 2.77x end-to-end speedup (1.5B: 41.0h -> 14.8h).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.configs.base import RLConfig
+from repro.core import AsyncRLController
+from repro.core.simulator import (HardwareModel, SimEngine, SimPromptStream,
+                                  SimTrainer, WorkloadModel, make_llm_timing)
+
+# (name, params, devices(=8*nodes), eta, mean response len)
+SETTINGS = [
+    ("1.5b_math_16nodes", 1.5e9, 128, 8, 6000),
+    ("7b_math_24nodes", 7e9, 192, 8, 8000),
+    ("14b_code_32nodes", 14e9, 256, 4, 8000),
+    ("32b_code_48nodes", 32e9, 384, 4, 10000),
+]
+STEPS = 8               # simulated PPO steps (paper: 250/80; linear scale-up)
+BATCH = 512
+MAX_LEN = 28_672
+
+
+def _run(n_params, devices, eta, mean_len, *, colocated, steps=STEPS, seed=0):
+    hw = HardwareModel()
+    wl = WorkloadModel(n_params=n_params)
+    if colocated:
+        timing = make_llm_timing(hw, wl, n_gen_devices=devices,
+                                 n_train_devices=devices, colocated=True)
+        rl = RLConfig(batch_size=BATCH, max_staleness=0, interruptible=False)
+    else:
+        ng = int(devices * 0.75)
+        timing = make_llm_timing(hw, wl, n_gen_devices=ng,
+                                 n_train_devices=devices - ng)
+        rl = RLConfig(batch_size=BATCH, max_staleness=eta, interruptible=True)
+    eng = SimEngine(n_slots=4 * BATCH, mean_len=mean_len, max_len=MAX_LEN,
+                    prompt_len=1024, seed=seed)
+    ctl = AsyncRLController(engine=eng, trainer=SimTrainer(),
+                            prompt_stream=SimPromptStream(1024), rl=rl,
+                            timing=timing)
+    hist = ctl.run(steps)
+    return hist[-1].clock, ctl
+
+
+def main():
+    for name, n, dev, eta, mlen in SETTINGS:
+        with timed() as t1:
+            t_sync, _ = _run(n, dev, eta, mlen, colocated=True)
+        with timed() as t2:
+            t_async, ctl = _run(n, dev, eta, mlen, colocated=False)
+        speedup = t_sync / t_async
+        emit(f"table1_{name}_sync_hours", 1e6 * t1["s"] / STEPS,
+             f"{t_sync / 3600:.2f}h_per_{STEPS}steps")
+        emit(f"table1_{name}_areal_hours", 1e6 * t2["s"] / STEPS,
+             f"{t_async / 3600:.2f}h_per_{STEPS}steps")
+        emit(f"table1_{name}_speedup", 1e6 * (t1["s"] + t2["s"]) / STEPS,
+             f"{speedup:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

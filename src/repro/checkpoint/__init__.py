@@ -1,0 +1,3 @@
+from repro.checkpoint.io import load, save
+
+__all__ = ["load", "save"]

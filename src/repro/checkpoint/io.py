@@ -1,0 +1,69 @@
+"""Versioned checkpointing: flat-key npz of the param/optimizer pytrees
+plus a JSON metadata sidecar (policy version, step, config name).
+
+This backs AReaL's "distributed storage" for trainer->rollout weight
+publication at laptop scale, and makes training resumable.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    flat = {}
+    paths_leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in paths_leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub":      # ml_dtypes (bf16 etc) -> f32;
+            arr = np.asarray(jnp.asarray(leaf).astype(jnp.float32))
+        flat[key] = arr                       # true dtype restored from the
+    return flat                               # template on load
+
+
+def save(path: str, params, *, opt_state=None, meta: Optional[Dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = {f"p:{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        arrays.update({f"o:{k}": v for k, v in _flatten(opt_state).items()})
+    np.savez(path, **arrays)
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta or {}, f, indent=2)
+
+
+def load(path: str, params_like, opt_state_like=None) -> Tuple[Any, Any, Dict]:
+    """Restore into the structure of ``params_like`` (treedef template)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    meta = {}
+    meta_path = path.replace(".npz", "") + ".npz.meta.json"
+    if os.path.exists(path + ".meta.json"):
+        meta_path = path + ".meta.json"
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            meta = json.load(f)
+
+    def restore(tree, tag):
+        flat = _flatten(tree)
+        out = {}
+        for k in flat:
+            out[k] = data[f"{tag}:{k}"]
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+        new_leaves = []
+        for (path, leaf) in paths:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            arr = jnp.asarray(out[key]).astype(leaf.dtype).reshape(leaf.shape)
+            new_leaves.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+    params = restore(params_like, "p")
+    opt_state = restore(opt_state_like, "o") if opt_state_like is not None else None
+    return params, opt_state, meta

@@ -1,0 +1,30 @@
+"""AReaL core: the paper's contribution as composable modules.
+
+  ppo          standard (Eq. 2) + decoupled (Eq. 5) PPO objectives
+  advantages   critic-free GRPO / RLOO / MC estimators (App. B.1, C.4)
+  staleness    Eq. 3 admission control + staleness statistics
+  buffer       oldest-first, use-once trajectory replay buffer
+  batching     Algorithm 1 dynamic micro-batching + sequence packing
+  rollout      interruptible continuous-batching generation engine
+  trainer      PPO trainer worker (pack -> prox recompute -> minibatches)
+  controller   virtual-clock rollout controller (Fig. 2/3 data flow)
+  simulator    cluster-scale discrete-event model (same controller)
+  reward       rule-based reward service
+  weights      versioned parameter store (trainer -> rollout publication)
+"""
+from repro.core.buffer import ReplayBuffer, Trajectory
+from repro.core.controller import AsyncRLController, StepLog, TimingModel
+from repro.core.reward import RewardService
+from repro.core.rollout import Finished, RolloutEngine
+from repro.core.staleness import StalenessController, StalenessStats
+from repro.core.trainer import PPOTrainer, TrainMetrics
+from repro.core.weights import ParameterStore
+
+__all__ = [
+    "AsyncRLController", "Finished", "ParameterStore", "PPOTrainer",
+    "ReplayBuffer", "RewardService", "RolloutEngine", "StalenessController",
+    "StalenessStats", "StepLog", "TimingModel", "TrainMetrics", "Trajectory",
+]
+from repro.core.evaluate import EvalResult, evaluate  # noqa: E402
+
+__all__ += ["EvalResult", "evaluate"]

@@ -1,0 +1,126 @@
+"""Dynamic micro-batch allocation (paper Algorithm 1) + padding-free
+sequence packing.
+
+Algorithm 1: sort sequences by length descending; each sequence goes to
+a new micro-batch if fewer than k_min exist or none can fit it, otherwise
+to the fitting micro-batch with the fewest sequences.  Every micro-batch
+respects the token budget C.
+
+Packing: each micro-batch becomes fixed-shape arrays (rows, pack_len)
+with cumulative segment ids and within-segment positions, so one jit
+signature serves any mix of lengths (block-diagonal attention via
+segment masking).  This is the TPU-side consequence of Alg. 1 — XLA
+needs static shapes, so the "padding-free" property becomes "padding
+bounded by the bucket remainder" (measured by ``padding_fraction``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+def dynamic_batching(seq_lens: Sequence[int], capacity: int,
+                     min_microbatches: int = 1) -> List[List[int]]:
+    """Paper Algorithm 1.  Returns micro-batches as lists of indices into
+    ``seq_lens``.  Sequences longer than ``capacity`` get singleton
+    micro-batches (cannot be split)."""
+    order = sorted(range(len(seq_lens)), key=lambda i: -seq_lens[i])
+    batches: List[List[int]] = []
+    loads: List[int] = []
+    for i in order:
+        s = seq_lens[i]
+        fits = [j for j in range(len(batches)) if loads[j] + s <= capacity]
+        if len(batches) < min_microbatches or not fits:
+            batches.append([i])
+            loads.append(s)
+        else:
+            j = min(fits, key=lambda j: len(batches[j]))    # fewest sequences
+            batches[j].append(i)
+            loads[j] += s
+    return batches
+
+
+def static_batching(seq_lens: Sequence[int], n_microbatches: int) -> List[List[int]]:
+    """Baseline: fixed number of micro-batches, round-robin by arrival
+    order (the 'standard micro-batching strategy' of Section 7.5)."""
+    batches: List[List[int]] = [[] for _ in range(n_microbatches)]
+    for i in range(len(seq_lens)):
+        batches[i % n_microbatches].append(i)
+    return [b for b in batches if b]
+
+
+@dataclass
+class PackedBatch:
+    """Fixed-shape packed arrays for one micro-batch."""
+    tokens: np.ndarray          # (R, L) int32
+    positions: np.ndarray       # (R, L) int32 within-segment positions
+    segment_ids: np.ndarray     # (R, L) int32; -1 = padding
+    loss_mask: np.ndarray       # (R, L) float32; 1 on response tokens
+    advantages: np.ndarray      # (R, L) float32
+    behav_logprob: np.ndarray   # (R, L) float32
+    seq_index: np.ndarray       # (R, L) int32 source sequence (-1 pad)
+
+    @property
+    def n_tokens(self) -> int:
+        return int((self.segment_ids >= 0).sum())
+
+    @property
+    def padding_fraction(self) -> float:
+        return 1.0 - self.n_tokens / self.tokens.size
+
+
+def pack_sequences(seqs: List[Dict], pack_len: int, rows: int = 0) -> PackedBatch:
+    """Greedy first-fit packing of variable-length sequences into
+    (rows, pack_len) with segment ids.
+
+    Each seq dict: tokens (list[int]), loss_mask (list[float]),
+    advantage (float, broadcast over response tokens),
+    behav_logprob (list[float] aligned with tokens).
+    """
+    lens = [len(s["tokens"]) for s in seqs]
+    assert all(l <= pack_len for l in lens), "sequence exceeds pack length"
+    # first-fit decreasing row assignment
+    order = sorted(range(len(seqs)), key=lambda i: -lens[i])
+    row_of: Dict[int, int] = {}
+    row_loads: List[int] = []
+    for i in order:
+        placed = False
+        for r, load in enumerate(row_loads):
+            if load + lens[i] <= pack_len:
+                row_of[i] = r
+                row_loads[r] += lens[i]
+                placed = True
+                break
+        if not placed:
+            row_of[i] = len(row_loads)
+            row_loads.append(lens[i])
+    n_rows = max(rows, len(row_loads)) or 1
+
+    shape = (n_rows, pack_len)
+    tokens = np.zeros(shape, np.int32)
+    positions = np.zeros(shape, np.int32)
+    segment_ids = np.full(shape, -1, np.int32)
+    loss_mask = np.zeros(shape, np.float32)
+    advantages = np.zeros(shape, np.float32)
+    behav_lp = np.zeros(shape, np.float32)
+    seq_index = np.full(shape, -1, np.int32)
+
+    offsets = [0] * n_rows
+    for seg, i in enumerate(order):
+        r = row_of[i]
+        o = offsets[r]
+        L = lens[i]
+        s = seqs[i]
+        tokens[r, o:o + L] = s["tokens"]
+        positions[r, o:o + L] = np.arange(L)
+        segment_ids[r, o:o + L] = seg
+        loss_mask[r, o:o + L] = s["loss_mask"]
+        advantages[r, o:o + L] = np.asarray(s["loss_mask"], np.float32) * s["advantage"]
+        behav_lp[r, o:o + L] = s["behav_logprob"]
+        seq_index[r, o:o + L] = i
+        offsets[r] = o + L
+
+    return PackedBatch(tokens, positions, segment_ids, loss_mask,
+                       advantages, behav_lp, seq_index)

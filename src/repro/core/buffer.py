@@ -1,0 +1,67 @@
+"""Trajectory replay buffer (Section 4.1, Trainer Workers).
+
+Semantics from the paper: trainer workers accumulate rollouts until the
+configured batch size, *older trajectories are prioritized* when forming
+a batch, and every sample is used exactly once ("data from the replay
+buffer is used only once").
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+
+@dataclass
+class Trajectory:
+    rid: int                          # request id
+    prompt_id: int                    # group id (prompt) for GRPO/RLOO
+    prompt_tokens: List[int]
+    response_tokens: List[int]
+    behav_logprobs: List[float]       # per response token, at generation time
+    versions: List[int]               # per-token producing policy version
+    behavior_version: int             # version at submission (for staleness)
+    reward: float = 0.0
+    answer: Any = None
+    meta: Dict = field(default_factory=dict)
+    submit_time: float = 0.0
+    finish_time: float = 0.0
+
+    @property
+    def length(self) -> int:
+        return len(self.prompt_tokens) + len(self.response_tokens)
+
+    @property
+    def n_versions(self) -> int:
+        return len(set(self.versions)) if self.versions else 1
+
+
+class ReplayBuffer:
+    """FIFO-by-age, use-once buffer; thread-safe."""
+
+    def __init__(self):
+        self._items: List[Trajectory] = []
+        self._lock = threading.Lock()
+        self.total_added = 0
+        self.total_consumed = 0
+
+    def add(self, traj: Trajectory) -> None:
+        with self._lock:
+            self._items.append(traj)
+            self.total_added += 1
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._items)
+
+    def pop_batch(self, batch_size: int) -> Optional[List[Trajectory]]:
+        """Oldest-first batch; None if not enough data yet.  Each returned
+        trajectory leaves the buffer permanently (use-once)."""
+        with self._lock:
+            if len(self._items) < batch_size:
+                return None
+            self._items.sort(key=lambda t: (t.behavior_version, t.rid))
+            batch = self._items[:batch_size]
+            self._items = self._items[batch_size:]
+            self.total_consumed += batch_size
+            return batch

@@ -1,0 +1,201 @@
+"""Rollout controller (Section 4.1, Figure 2/3): the bridge between
+rollout workers, the reward service, the replay buffer, and trainer
+workers.
+
+The controller runs the *real* JAX computation (generation + PPO updates)
+under an explicit **virtual clock** driven by a TimingModel.  This gives
+deterministic, measurable concurrency semantics on a single-host CPU —
+the structure of AReaL's asynchronous pipeline without nondeterministic
+threads:
+
+  * rollout workers decode continuously; each decode step advances the
+    clock by the generation-pool cost of one token step;
+  * when a global batch is available, the trainer becomes busy for the
+    training-pool cost; the weights it produces are applied when the
+    clock reaches its completion time — generation in between keeps
+    using the old weights, exactly like Figure 3;
+  * weight application triggers the engine's interruption + re-prefill
+    (or waits for drain in the non-interruptible ablation);
+  * admission respects the staleness controller (Eq. 3);
+  * reward computation and weight transfer are pipelined (latency-only).
+
+The same controller drives the pure-timing cluster simulator
+(core/simulator.py provides stub engine/trainer with the same duck-typed
+API), which is how the paper-scale scaling figures are produced.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import RLConfig
+from repro.core.buffer import ReplayBuffer, Trajectory
+from repro.core.reward import RewardService
+from repro.core.staleness import StalenessController, StalenessStats
+
+
+@dataclass
+class TimingModel:
+    """Virtual-time costs (seconds).  Defaults are laptop-scale stand-ins;
+    launch/roofline.py derives cluster-scale values from dry-run terms."""
+    decode_step: Callable[[int], float] = lambda n_active: 1.0
+    prefill: Callable[[int], float] = lambda n_tokens: 0.0
+    train_step: Callable[[int], float] = lambda n_tokens: 40.0
+    weight_sync: float = 0.0
+    reward_latency: float = 0.0          # pipelined: latency only
+    colocated: bool = False              # sync baseline: gen and train share
+                                         # devices, so phases serialize
+
+
+@dataclass
+class StepLog:
+    version: int
+    clock: float
+    reward_mean: float
+    accuracy: float
+    staleness_mean: float
+    staleness_max: int
+    n_tokens: int
+    gen_tokens_total: int
+    interruptions: int
+    loss: float = 0.0
+    diag: Dict = field(default_factory=dict)
+
+
+class AsyncRLController:
+    def __init__(self, *, engine, trainer, prompt_stream, rl: RLConfig,
+                 timing: Optional[TimingModel] = None,
+                 reward: Optional[RewardService] = None,
+                 on_step: Optional[Callable] = None):
+        self.engine = engine
+        self.trainer = trainer
+        self.stream = prompt_stream
+        self.rl = rl
+        self.timing = timing or TimingModel()
+        self.reward = reward or RewardService(rl.reward_correct,
+                                              rl.reward_incorrect)
+        self.buffer = ReplayBuffer()
+        self.stal = StalenessController(batch_size=rl.batch_size,
+                                        max_staleness=(math.inf
+                                                       if rl.max_staleness < 0
+                                                       else rl.max_staleness))
+        self.stal_stats = StalenessStats()
+        self.clock = 0.0
+        self.history: List[StepLog] = []
+        self.on_step = on_step
+        self._next_rid = 0
+        self._train_batch = None
+        self._train_done_at = 0.0
+
+    # ---- pieces -----------------------------------------------------------
+    def _admit(self) -> None:
+        if self.engine.has_pending_weights:
+            return        # non-interruptible drain: no new admissions
+        free = len(self.engine.free_slots())
+        reqs = []
+        while free > len(reqs) and self.stal.can_submit(len(reqs) + 1):
+            prob, gid = self.stream.next_request()
+            reqs.append({"rid": self._next_rid, "prompt_id": gid,
+                         "prompt": prob.prompt_tokens, "answer": prob.answer})
+            self._next_rid += 1
+        if reqs:
+            n = self.engine.admit(reqs, clock=self.clock)
+            assert n == len(reqs)
+            self.stal.submit(n)
+            self.clock += self.timing.prefill(
+                sum(len(r["prompt"]) for r in reqs))
+
+    def _collect(self, finished) -> None:
+        for f in finished:
+            r = self.reward.score(f.response, f.answer)
+            self.buffer.add(Trajectory(
+                rid=f.rid, prompt_id=f.prompt_id,
+                prompt_tokens=f.prompt, response_tokens=f.response,
+                behav_logprobs=f.logprobs, versions=f.versions,
+                behavior_version=f.behavior_version, reward=r,
+                answer=f.answer, submit_time=f.submit_time,
+                finish_time=self.clock + self.timing.reward_latency))
+
+    def _maybe_start_training(self) -> None:
+        if self._train_batch is not None:
+            return
+        batch = self.buffer.pop_batch(self.rl.batch_size)
+        if batch is None:
+            return
+        self._train_batch = batch
+        cost = self.timing.train_step(sum(t.length for t in batch))
+        self._train_done_at = self.clock + cost
+        if self.timing.colocated:
+            # synchronous/colocated baseline: generation pauses while the
+            # shared devices run the PPO update
+            self.clock = self._train_done_at
+
+    def _maybe_finish_training(self) -> None:
+        if self._train_batch is None or self.clock < self._train_done_at:
+            return
+        batch = self._train_batch
+        self._train_batch = None
+        for t in batch:
+            self.stal_stats.record(
+                max(0, self.stal.policy_version - t.behavior_version))
+        metrics = self.trainer.train_step(batch)
+        self.stal.on_policy_update(self.trainer.version)
+        self.clock += self.timing.weight_sync
+        inflight = self.engine.inflight_tokens()
+        applied = self.engine.update_weights(
+            self.trainer.params, self.trainer.version,
+            interruptible=self.rl.interruptible)
+        if applied and inflight:
+            # interruption overhead: re-prefill of every in-flight prefix
+            self.clock += self.timing.prefill(inflight)
+        log = StepLog(
+            version=self.trainer.version, clock=self.clock,
+            reward_mean=metrics.reward_mean,
+            accuracy=self.reward.recent_accuracy,
+            staleness_mean=metrics.staleness_mean,
+            staleness_max=metrics.staleness_max,
+            n_tokens=metrics.n_tokens,
+            gen_tokens_total=self.engine.tokens_generated,
+            interruptions=self.engine.interruptions,
+            loss=metrics.loss, diag=metrics.diag)
+        self.history.append(log)
+        if self.on_step:
+            self.on_step(log)
+
+    # ---- main loop ----------------------------------------------------------
+    def run(self, n_steps: int, max_wallclock: float = float("inf")) -> List[StepLog]:
+        target = self.trainer.version + n_steps
+        stall_guard = 0
+        while self.trainer.version < target and self.clock < max_wallclock:
+            self._maybe_finish_training()
+            self.engine.maybe_apply_pending()
+            self._admit()
+            self._maybe_start_training()
+            if self.engine.n_active > 0:
+                finished = self.engine.step()
+                self.clock += self.timing.decode_step(self.engine.n_active)
+                self._collect(finished)
+                stall_guard = 0
+            elif self._train_batch is not None:
+                self.clock = max(self.clock, self._train_done_at)
+                stall_guard = 0
+            else:
+                stall_guard += 1
+                if stall_guard > 10:
+                    raise RuntimeError(
+                        "controller stalled: no active slots, no training, "
+                        "no admissible requests (check eta/batch/slots)")
+                self.clock += 1e-6
+        return self.history
+
+    # ---- derived metrics ----------------------------------------------------
+    def effective_throughput(self) -> float:
+        """Paper Sec 7.3: rate of consuming generated tokens during PPO
+        updates (tokens/virtual-second)."""
+        if not self.history:
+            return 0.0
+        toks = sum(h.n_tokens for h in self.history)
+        return toks / max(self.history[-1].clock, 1e-9)

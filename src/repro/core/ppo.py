@@ -1,0 +1,82 @@
+"""PPO objectives: standard (Eq. 2) and AReaL's decoupled objective (Eq. 5).
+
+The decoupled objective disentangles the *behavior* policy (generated the
+tokens; logprobs recorded by the rollout worker, possibly spanning
+several policy versions per trajectory — Proposition 1) from the
+*proximal* policy (the parameters right before the current update step;
+logprobs recomputed when the global batch arrives):
+
+    J = E[ (pi_prox / pi_behav) * min(u A, clip(u, 1-eps, 1+eps) A) ],
+    u = pi_theta / pi_prox.
+
+With prox == behav this reduces exactly to standard PPO (tested).  All
+inputs are per-token; ``mask`` selects response (action) tokens.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_mean(x, mask, axis=None, eps: float = 1e-8):
+    return jnp.sum(x * mask, axis=axis) / (jnp.sum(mask, axis=axis) + eps)
+
+
+def ppo_loss(logprob_new, logprob_behav, logprob_prox, advantages, mask, *,
+             clip_eps: float = 0.2, decoupled: bool = True,
+             ratio_clip: float = 10.0) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Per-token PPO surrogate.  All args (..., T) float32; mask in {0,1}.
+
+    Returns (scalar loss, diagnostics dict).  ``ratio_clip`` bounds the
+    behavior importance weight pi_prox/pi_behav for numerical safety with
+    very stale data (the surrogate's min/clip already bounds u).
+    """
+    lp_new = logprob_new.astype(jnp.float32)
+    lp_behav = jax.lax.stop_gradient(logprob_behav.astype(jnp.float32))
+    lp_prox = jax.lax.stop_gradient(logprob_prox.astype(jnp.float32))
+    adv = jax.lax.stop_gradient(advantages.astype(jnp.float32))
+    mask = mask.astype(jnp.float32)
+
+    if decoupled:
+        center = lp_prox
+        behav_weight = jnp.clip(jnp.exp(lp_prox - lp_behav), 0.0, ratio_clip)
+    else:
+        center = lp_behav
+        behav_weight = jnp.ones_like(lp_behav)
+
+    u = jnp.exp(lp_new - center)                     # trust-region ratio
+    clipped = jnp.clip(u, 1.0 - clip_eps, 1.0 + clip_eps)
+    surr = jnp.minimum(u * adv, clipped * adv)
+    loss = -masked_mean(behav_weight * surr, mask)
+
+    diag = {
+        "clip_frac": masked_mean((jnp.abs(u - 1.0) > clip_eps).astype(jnp.float32), mask),
+        "approx_kl": masked_mean(center - lp_new, mask),
+        "behav_kl": masked_mean(lp_prox - lp_behav, mask),
+        "ratio_mean": masked_mean(u, mask),
+        "behav_weight_mean": masked_mean(behav_weight, mask),
+        "entropy_proxy": -masked_mean(lp_new, mask),
+    }
+    return loss, diag
+
+
+def gather_logprobs(logits, tokens):
+    """Per-token log pi(token).  logits: (B, S, V) fp32; tokens: (B, S)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    chosen = jnp.take_along_axis(logits, tokens[..., None], axis=-1)[..., 0]
+    return chosen - logz
+
+
+def next_token_logprobs(logits, tokens, loss_mask=None):
+    """Align logits_t -> predicts token_{t+1} (causal LM scoring).
+
+    logits: (B, S, V); tokens: (B, S).  Returns (B, S) where entry t is
+    log p(token_t | tokens_<t); entry 0 is 0 (no prediction for BOS).
+    """
+    lp = gather_logprobs(logits[:, :-1].astype(jnp.float32), tokens[:, 1:])
+    lp = jnp.concatenate([jnp.zeros_like(lp[:, :1]), lp], axis=1)
+    if loss_mask is not None:
+        lp = lp * loss_mask
+    return lp

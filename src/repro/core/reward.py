@@ -1,0 +1,48 @@
+"""Reward service (Section 4.1): rule-based verification of generated
+responses, decoupled from the accelerator path.
+
+In AReaL this is a CPU worker pool whose latency is pipelined behind
+generation; here verification is exact string matching on the synthetic
+math task, executed host-side, and the *latency model* (TimingModel in
+controller.py) accounts for its pipelined cost.  The service records
+accuracy statistics used by the benchmarks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List
+
+from repro.data import tasks, tokenizer
+
+
+@dataclass
+class RewardService:
+    reward_correct: float = 5.0
+    reward_incorrect: float = -5.0
+    n_evaluated: int = 0
+    n_correct: int = 0
+    recent: List[float] = field(default_factory=list)
+    recent_window: int = 512
+
+    def score(self, response_tokens, answer) -> float:
+        """Reward at the final token: +5 correct / -5 incorrect (App. B.1)."""
+        if answer is None:
+            ok = False          # simulator fast-path: no decode needed
+        else:
+            text = tokenizer.decode(response_tokens)
+            ok = tasks.verify(text, str(answer))
+        self.n_evaluated += 1
+        self.n_correct += int(ok)
+        r = self.reward_correct if ok else self.reward_incorrect
+        self.recent.append(1.0 if ok else 0.0)
+        if len(self.recent) > self.recent_window:
+            self.recent = self.recent[-self.recent_window:]
+        return r
+
+    @property
+    def accuracy(self) -> float:
+        return self.n_correct / self.n_evaluated if self.n_evaluated else 0.0
+
+    @property
+    def recent_accuracy(self) -> float:
+        return sum(self.recent) / len(self.recent) if self.recent else 0.0

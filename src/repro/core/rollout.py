@@ -1,0 +1,279 @@
+"""Interruptible rollout worker (Section 4.1).
+
+A continuous-batching generation engine over ``n_slots`` concurrent
+requests with two request types, mirroring the paper:
+
+  * ``generate``        — admit prompts into free slots (group prefill +
+                          cache scatter), then stream decode steps.
+  * ``update_weights``  — interrupt all in-flight generations, discard
+                          the KV caches / recurrent states computed under
+                          the old weights, RE-PREFILL every prefix under
+                          the new weights, and continue decoding.  The
+                          kept tokens retain the behavior logprobs and
+                          policy-version tags recorded when they were
+                          sampled — a single trajectory may span several
+                          policy versions (Proposition 1).
+
+Device state is one batched cache pytree; host state is per-slot
+bookkeeping.  All jit signatures are static: admission groups are padded
+to ``n_slots`` rows and dummy rows scatter to an out-of-range slot id
+(dropped).  For recurrent/hybrid architectures the "KV recompute" is a
+state re-scan through the same prefill path (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RLConfig
+from repro.data import tokenizer
+
+
+@dataclass
+class Slot:
+    active: bool = False
+    rid: int = -1
+    prompt_id: int = -1
+    prompt: List[int] = field(default_factory=list)
+    response: List[int] = field(default_factory=list)
+    logprobs: List[float] = field(default_factory=list)
+    versions: List[int] = field(default_factory=list)
+    behavior_version: int = 0
+    pending: int = 0                   # sampled token not yet fed to cache
+    answer: object = None
+    submit_time: float = 0.0
+
+    @property
+    def history_len(self) -> int:
+        """Tokens already ingested by the cache (prompt + fed responses)."""
+        return len(self.prompt) + len(self.response) - (1 if self.response else 0)
+
+
+@dataclass
+class Finished:
+    rid: int
+    prompt_id: int
+    prompt: List[int]
+    response: List[int]
+    logprobs: List[float]
+    versions: List[int]
+    behavior_version: int
+    answer: object
+    submit_time: float
+    truncated: bool
+
+
+class RolloutEngine:
+    """Batched, interruptible generation engine for a decoder-only LM."""
+
+    def __init__(self, model, params, *, n_slots: int, prompt_len: int,
+                 max_gen_len: int, temperature: float = 1.0,
+                 eos_id: int = tokenizer.EOS, seed: int = 0,
+                 version: int = 0, dtype=jnp.float32):
+        self.model = model
+        self.cfg: ModelConfig = model.cfg
+        self.params = params
+        self.version = version
+        self.n_slots = n_slots
+        self.prompt_len = prompt_len
+        self.max_gen_len = max_gen_len
+        self.max_len = prompt_len + max_gen_len
+        self.temperature = temperature
+        self.eos_id = eos_id
+        self.dtype = dtype
+        self._rng = jax.random.key(seed)
+        self._step_count = 0
+
+        self.slots = [Slot() for _ in range(n_slots)]
+        self.cache = model.init_cache(n_slots, self.max_len, dtype)
+        self._pending_weights: Optional[Tuple] = None
+
+        # stats
+        self.tokens_generated = 0
+        self.interruptions = 0
+        self.prefill_tokens = 0
+        self.reprefill_tokens = 0
+
+        self._jit_decode = jax.jit(self._decode_fn)
+        self._jit_prefill = jax.jit(self._prefill_fn)
+        self._jit_insert = jax.jit(self.model.cache_insert)
+
+    # ---- jit bodies -------------------------------------------------------
+    def _sample(self, logits, rng):
+        lf = logits.astype(jnp.float32)
+        # mask padded vocab tail
+        v = self.cfg.vocab_size
+        lf = jnp.where(jnp.arange(lf.shape[-1]) < v, lf, -1e30)
+        if self.temperature <= 0.0:            # greedy (evaluation protocol)
+            tok = jnp.argmax(lf, axis=-1)
+        else:
+            if self.temperature != 1.0:
+                lf = lf / self.temperature
+            tok = jax.random.categorical(rng, lf, axis=-1)
+        lp = jax.nn.log_softmax(lf, axis=-1)
+        lp_tok = jnp.take_along_axis(lp, tok[..., None], axis=-1)[..., 0]
+        return tok.astype(jnp.int32), lp_tok
+
+    def _decode_fn(self, params, token, cache, rng):
+        logits, cache = self.model.decode_step(params, token, cache)
+        tok, lp = self._sample(logits, rng)
+        return tok, lp, cache
+
+    def _prefill_fn(self, params, tokens, lengths, rng):
+        """Group prefill over (G, L) right-padded tokens -> fresh sub-cache
+        + first sampled token per row."""
+        g = tokens.shape[0]
+        cache = self.model.init_cache(g, self.max_len, self.dtype)
+        logits, cache = self.model.prefill(params, tokens, cache, length=lengths)
+        tok, lp = self._sample(logits, rng)
+        return tok, lp, cache
+
+    def _next_rng(self):
+        self._step_count += 1
+        return jax.random.fold_in(self._rng, self._step_count)
+
+    # ---- public API -------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if not s.active]
+
+    def inflight_tokens(self) -> int:
+        return sum(s.history_len for s in self.slots if s.active)
+
+    @property
+    def n_active(self) -> int:
+        return sum(s.active for s in self.slots)
+
+    def admit(self, requests: Sequence[Dict], clock: float = 0.0) -> int:
+        """requests: dicts with rid, prompt_id, prompt (list[int]), answer.
+        Returns number admitted (bounded by free slots)."""
+        free = self.free_slots()
+        take = list(requests)[:len(free)]
+        if not take:
+            return 0
+        g = self.n_slots
+        toks = np.zeros((g, self.prompt_len), np.int32)
+        lens = np.zeros((g,), np.int32)
+        slot_ids = np.full((g,), self.n_slots + 1, np.int32)   # OOB -> dropped
+        for j, req in enumerate(take):
+            p = list(req["prompt"])[: self.prompt_len]
+            toks[j, :len(p)] = p
+            lens[j] = len(p)
+            slot_ids[j] = free[j]
+        lens = np.maximum(lens, 1)
+        tok0, lp0, sub_cache = self._jit_prefill(
+            self.params, jnp.asarray(toks), jnp.asarray(lens), self._next_rng())
+        self.cache = self._jit_insert(self.cache, sub_cache, jnp.asarray(slot_ids))
+        tok0 = np.asarray(tok0)
+        lp0 = np.asarray(lp0)
+        for j, req in enumerate(take):
+            s = self.slots[free[j]]
+            s.active = True
+            s.rid = req["rid"]
+            s.prompt_id = req.get("prompt_id", req["rid"])
+            s.prompt = list(req["prompt"])[: self.prompt_len]
+            s.response = [int(tok0[j])]
+            s.logprobs = [float(lp0[j])]
+            s.versions = [self.version]
+            s.behavior_version = self.version
+            s.pending = int(tok0[j])
+            s.answer = req.get("answer")
+            s.submit_time = clock
+            self.prefill_tokens += int(lens[j])
+        return len(take)
+
+    def step(self) -> List[Finished]:
+        """One decode step across all slots; returns finished trajectories."""
+        if self.n_active == 0:
+            return []
+        pend = np.array([s.pending for s in self.slots], np.int32)
+        tok, lp, self.cache = self._jit_decode(
+            self.params, jnp.asarray(pend), self.cache, self._next_rng())
+        tok = np.asarray(tok)
+        lp = np.asarray(lp)
+        finished: List[Finished] = []
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                continue
+            # the pending token is now ingested; the new sample continues it
+            t_new, lp_new = int(tok[i]), float(lp[i])
+            s.response.append(t_new)
+            s.logprobs.append(lp_new)
+            s.versions.append(self.version)
+            s.pending = t_new
+            self.tokens_generated += 1
+            done = t_new == self.eos_id
+            trunc = len(s.response) >= self.max_gen_len
+            if done or trunc:
+                finished.append(Finished(
+                    rid=s.rid, prompt_id=s.prompt_id, prompt=s.prompt,
+                    response=list(s.response), logprobs=list(s.logprobs),
+                    versions=list(s.versions),
+                    behavior_version=s.behavior_version, answer=s.answer,
+                    submit_time=s.submit_time, truncated=trunc and not done))
+                self.slots[i] = Slot()
+        return finished
+
+    # ---- update_weights (the interruption path) ---------------------------
+    def update_weights(self, params, version: int, *,
+                       interruptible: bool = True) -> bool:
+        """Returns True if applied now; False if deferred (non-interruptible
+        mode with in-flight requests — the Fig. 6b baseline)."""
+        if not interruptible and self.n_active > 0:
+            self._pending_weights = (params, version)
+            return False
+        self.params = params
+        self.version = version
+        if self.n_active > 0:
+            self._reprefill_all()
+            self.interruptions += 1
+        return True
+
+    def maybe_apply_pending(self) -> bool:
+        if self._pending_weights is not None and self.n_active == 0:
+            params, version = self._pending_weights
+            self._pending_weights = None
+            self.params = params
+            self.version = version
+            return True
+        return False
+
+    @property
+    def has_pending_weights(self) -> bool:
+        return self._pending_weights is not None
+
+    def _reprefill_all(self) -> None:
+        """Discard all device state computed under the old weights and
+        recompute it for every in-flight prefix under the new weights.
+        The prefix fed back is history = prompt + response[:-1]; the last
+        sampled token stays ``pending`` and the ordinary decode loop
+        continues — identical to uninterrupted generation had the weights
+        never changed (tested: Prop. 1 equivalence when params are equal).
+        """
+        g = self.n_slots
+        L = self.max_len
+        toks = np.zeros((g, L), np.int32)
+        lens = np.zeros((g,), np.int32)
+        slot_ids = np.full((g,), self.n_slots + 1, np.int32)
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                continue
+            hist = (s.prompt + s.response[:-1])[:L]
+            toks[i, :len(hist)] = hist
+            lens[i] = len(hist)
+            slot_ids[i] = i
+            self.reprefill_tokens += len(hist)
+        lens = np.maximum(lens, 1)
+        # Full-width re-prefill (one flash-attention/scan pass per slot batch;
+        # same jit as admission, traced once more for the (n_slots, max_len)
+        # signature).  The sampled token is discarded — the decode loop
+        # continues from each slot's kept ``pending`` token.  A constant key
+        # keeps the decode RNG stream untouched, so an interruption with
+        # unchanged weights is bit-identical to no interruption (Prop. 1 test).
+        _, _, sub_cache = self._jit_prefill(
+            self.params, jnp.asarray(toks), jnp.asarray(lens), jax.random.key(0))
+        self.cache = self._jit_insert(self.cache, sub_cache,
+                                      jnp.asarray(slot_ids))

@@ -1,0 +1,48 @@
+"""Versioned parameter store — AReaL's 'distributed storage' between
+trainer workers and rollout workers.
+
+The trainer publishes (version, params); rollout workers pull the latest.
+Optionally spills each published version to a checkpoint directory.
+``history`` keeps the last few versions so the proximal-policy recompute
+and debugging can reference them.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+from repro import checkpoint
+
+
+class ParameterStore:
+    def __init__(self, keep: int = 2, ckpt_dir: Optional[str] = None,
+                 ckpt_every: int = 0):
+        self._lock = threading.Lock()
+        self._latest: Optional[Tuple[int, Any]] = None
+        self._history: Dict[int, Any] = {}
+        self.keep = keep
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.publishes = 0
+
+    def publish(self, version: int, params, meta: Optional[Dict] = None) -> None:
+        with self._lock:
+            self._latest = (version, params)
+            self._history[version] = params
+            for v in sorted(self._history):
+                if len(self._history) <= self.keep:
+                    break
+                if v != version:
+                    del self._history[v]
+            self.publishes += 1
+        if self.ckpt_dir and self.ckpt_every and version % self.ckpt_every == 0:
+            checkpoint.save(f"{self.ckpt_dir}/v{version:06d}.npz", params,
+                            meta={"version": version, **(meta or {})})
+
+    def latest(self) -> Optional[Tuple[int, Any]]:
+        with self._lock:
+            return self._latest
+
+    def get(self, version: int):
+        with self._lock:
+            return self._history.get(version)

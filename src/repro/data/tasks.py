@@ -1,0 +1,73 @@
+"""Synthetic verifiable math task (the laptop-scale stand-in for
+DeepScaleR/DeepCoder data): arithmetic expressions with an exact
+string-matched answer, verified by the rule-based reward service.
+
+Prompt format:   "<q> a op b = ?"        (or three-operand variants)
+Expected answer: the decimal result; the model is rewarded +5/-5 on
+exact match of the first integer token span in its response (paper
+Appendix B.1 rewards).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import List, Optional
+
+import numpy as np
+
+from repro.data import tokenizer
+
+
+@dataclass
+class Problem:
+    pid: int
+    prompt_text: str
+    answer: str
+
+    @property
+    def prompt_tokens(self) -> List[int]:
+        return tokenizer.encode(self.prompt_text, bos=True)
+
+
+_INT_RE = re.compile(r"-?\d+")
+
+
+def extract_answer(response_text: str) -> Optional[str]:
+    """Rule-based extraction: first integer in the response."""
+    m = _INT_RE.search(response_text)
+    return m.group(0) if m else None
+
+
+def verify(response_text: str, answer: str) -> bool:
+    got = extract_answer(response_text)
+    return got is not None and int(got) == int(answer)
+
+
+class MathTaskGenerator:
+    """Streaming generator of arithmetic problems with controlled difficulty."""
+
+    def __init__(self, seed: int = 1, max_operand: int = 20, n_ops: int = 1):
+        self.rng = np.random.default_rng(seed)
+        self.max_operand = max_operand
+        self.n_ops = n_ops
+        self._next_pid = 0
+
+    def sample(self) -> Problem:
+        rng = self.rng
+        a = int(rng.integers(0, self.max_operand))
+        b = int(rng.integers(1, self.max_operand))
+        op = rng.choice(["+", "-", "*"])
+        if op == "+":
+            val = a + b
+        elif op == "-":
+            val = a - b
+        else:
+            val = a * b
+        text = f"<q> {a} {op} {b} = ?"
+        if self.n_ops == 2:
+            c = int(rng.integers(1, self.max_operand))
+            text = f"<q> {a} {op} {b} + {c} = ?"
+            val = val + c
+        pid = self._next_pid
+        self._next_pid += 1
+        return Problem(pid=pid, prompt_text=text, answer=str(val))

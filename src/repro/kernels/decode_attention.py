@@ -1,0 +1,96 @@
+"""Pallas TPU flash-decoding: one query token vs. a long ring-buffer KV cache.
+
+This is the rollout-worker hot spot in AReaL (autoregressive decoding
+dominates generation time).  The grid iterates (batch, q-head, kv-block)
+with the kv-block axis sequential; each step streams one (block_w, hd)
+cache tile HBM->VMEM and folds it into online-softmax running statistics.
+Ring-buffer semantics: each slot carries its absolute position (-1 =
+empty), so masking (validity, causality, sliding window) is positional
+and wrap-around needs no special casing.
+
+Oracle: ``repro.kernels.ref.decode_attention``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, t_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale, window, nw):
+    iw = pl.program_id(2)
+
+    @pl.when(iw == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :].astype(jnp.float32)              # (hd,)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)           # (bw, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)           # (bw, hd)
+    s = jnp.sum(k * q[None, :], axis=-1, dtype=jnp.float32)[None, :] * scale  # (1, bw)
+
+    pos = pos_ref[0, :][None, :]                         # (1, bw)
+    t = t_ref[0, 0]
+    mask = (pos >= 0) & (pos <= t)
+    if window > 0:
+        mask &= pos > t - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                  # (1, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)         # (1, bw)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(iw == nw - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :] = (acc_ref[...] / l)[0].astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k_cache, v_cache, cache_pos, t, *, window=0,
+                            softmax_scale=None, block_w=256, interpret=True):
+    """q: (B, H, hd); caches: (B, W, Hkv, hd); cache_pos: (B, W); t: (B,)."""
+    b, h, hd = q.shape
+    w = k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    group = h // hkv
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    block_w = min(block_w, w)
+    assert w % block_w == 0, "caller pads W"
+    nw = w // block_w
+    t2 = t.reshape(b, 1).astype(jnp.int32)
+
+    grid = (b, h, nw)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window, nw=nw),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b_, h_, iw: (b_, h_, 0)),
+            pl.BlockSpec((1, block_w, 1, hd),
+                         lambda b_, h_, iw, g=group: (b_, iw, h_ // g, 0)),
+            pl.BlockSpec((1, block_w, 1, hd),
+                         lambda b_, h_, iw, g=group: (b_, iw, h_ // g, 0)),
+            pl.BlockSpec((1, block_w), lambda b_, h_, iw: (b_, iw)),
+            pl.BlockSpec((1, 1), lambda b_, h_, iw: (b_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b_, h_, iw: (b_, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, cache_pos, t2)

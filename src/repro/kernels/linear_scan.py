@@ -1,0 +1,79 @@
+"""Pallas TPU blocked diagonal linear scan:  h_t = a_t * h_{t-1} + x_t.
+
+The RG-LRU / gated-linear-recurrence primitive (RecurrentGemma blocks,
+xLSTM prefix re-scan after an AReaL weight-update interruption).  The
+grid iterates (batch, channel-block, time-block) with time minor-most
+and sequential: the cross-block carry lives in VMEM scratch while the
+within-block scan is a log-depth associative scan on a (block_t,
+block_c) VMEM tile — VPU-friendly, no per-row dynamic stores.
+
+Oracle: ``repro.kernels.ref.linear_scan``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, x_ref, h0_ref, h_ref, hlast_ref, carry_ref, *, nt):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        carry_ref[...] = h0_ref[0].astype(jnp.float32)[None, :]
+
+    a = a_ref[0].astype(jnp.float32)                   # (bt, bc)
+    x = x_ref[0].astype(jnp.float32)
+    carry = carry_ref[0, :]                            # (bc,)
+    x = x.at[0, :].add(a[0, :] * carry)
+
+    def combine(c1, c2):
+        a1, h1 = c1
+        a2, h2 = c2
+        return a2 * a1, a2 * h1 + h2
+
+    _, h = jax.lax.associative_scan(combine, (a, x), axis=0)
+    h_ref[0] = h.astype(h_ref.dtype)
+    carry_ref[...] = h[-1:, :]
+
+    @pl.when(it == nt - 1)
+    def _finish():
+        hlast_ref[0] = carry_ref[0, :].astype(hlast_ref.dtype)
+
+
+def linear_scan_pallas(a, x, h0=None, *, block_t=256, block_c=256,
+                       interpret=True):
+    """a, x: (B, S, C); h0: (B, C) or None.  Returns (h, h_last)."""
+    b, s, c = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, c), x.dtype)
+    block_t = min(block_t, s)
+    block_c = min(block_c, c)
+    assert s % block_t == 0 and c % block_c == 0, "caller pads S/C"
+    nt, nc = s // block_t, c // block_c
+
+    grid = (b, nc, nt)
+    h, h_last = pl.pallas_call(
+        functools.partial(_kernel, nt=nt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_c), lambda b_, ic, it: (b_, it, ic)),
+            pl.BlockSpec((1, block_t, block_c), lambda b_, ic, it: (b_, it, ic)),
+            pl.BlockSpec((1, block_c), lambda b_, ic, it: (b_, ic)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_t, block_c), lambda b_, ic, it: (b_, it, ic)),
+            pl.BlockSpec((1, block_c), lambda b_, ic, it: (b_, ic)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, c), x.dtype),
+            jax.ShapeDtypeStruct((b, c), x.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, block_c), jnp.float32)],
+        interpret=interpret,
+    )(a, x, h0)
+    return h, h_last

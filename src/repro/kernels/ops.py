@@ -1,0 +1,134 @@
+"""Jit-friendly kernel entry points with backend dispatch + padding.
+
+Backends:
+  * ``"jnp"``               pure-jnp reference (default; CPU + dry-run path)
+  * ``"pallas_interpret"``  Pallas kernel bodies executed by the
+                            interpreter (CPU correctness validation)
+  * ``"pallas"``            compiled Pallas (real TPU)
+
+The wrappers pad sequence/cache/channel dims to hardware-aligned block
+multiples (and head_dim to a lane multiple of 128) before calling the
+Pallas kernels, then slice back — callers never see alignment.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.linear_scan import linear_scan_pallas
+
+_BACKEND = "jnp"
+_LANE = 128
+# switch to the q-chunked flash pattern when the full score matrix would
+# exceed ~ (1024 x 1024) per (batch, head) — keeps dry-run memory sane
+_CHUNKED_THRESHOLD = 1024 * 1024
+
+
+def set_backend(backend: str) -> None:
+    global _BACKEND
+    assert backend in ("jnp", "pallas_interpret", "pallas"), backend
+    _BACKEND = backend
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pad_axis(x, axis: int, target: int, value=0):
+    pad = target - x.shape[axis]
+    if pad == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, pad)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, segment_ids=None, *, causal: bool = True,
+                    window: int = 0, softmax_scale: Optional[float] = None,
+                    backend: Optional[str] = None):
+    backend = backend or _BACKEND
+    if backend == "jnp" or q.shape[1] != k.shape[1]:
+        # cross-attention (Sq != Sk) stays on the jnp path
+        if q.shape[1] * k.shape[1] > _CHUNKED_THRESHOLD:
+            return _ref.flash_attention_chunked(
+                q, k, v, segment_ids=segment_ids, causal=causal,
+                window=window, softmax_scale=softmax_scale)
+        return _ref.flash_attention(q, k, v, segment_ids=segment_ids,
+                                    causal=causal, window=window,
+                                    softmax_scale=softmax_scale)
+    b, s, h, hd = q.shape
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    bq = bk = min(128, _round_up(s, 8))
+    sp = _round_up(s, max(bq, bk))
+    hdp = _round_up(hd, _LANE)
+    if segment_ids is None:
+        segment_ids = jnp.zeros((b, s), jnp.int32)
+    qp = _pad_axis(_pad_axis(q, 1, sp), 3, hdp)
+    kp = _pad_axis(_pad_axis(k, 1, sp), 3, hdp)
+    vp = _pad_axis(_pad_axis(v, 1, sp), 3, hdp)
+    seg = _pad_axis(segment_ids, 1, sp, value=-1)   # padded keys never match
+    out = flash_attention_pallas(qp, kp, vp, seg, causal=causal, window=window,
+                                 softmax_scale=scale, block_q=bq, block_k=bk,
+                                 interpret=(backend == "pallas_interpret"))
+    return out[:, :s, :, :hd]
+
+
+# ---------------------------------------------------------------------------
+# decode attention (ring-buffer KV cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, cache_pos, t, *, window: int = 0,
+                     softmax_scale: Optional[float] = None,
+                     backend: Optional[str] = None):
+    backend = backend or _BACKEND
+    if backend == "jnp":
+        return _ref.decode_attention(q, k_cache, v_cache, cache_pos, t,
+                                     window=window, softmax_scale=softmax_scale)
+    b, h, hd = q.shape
+    w = k_cache.shape[1]
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    bw = min(256, _round_up(w, 8))
+    wp = _round_up(w, bw)
+    hdp = _round_up(hd, _LANE)
+    qp = _pad_axis(q, 2, hdp)
+    kp = _pad_axis(_pad_axis(k_cache, 1, wp), 3, hdp)
+    vp = _pad_axis(_pad_axis(v_cache, 1, wp), 3, hdp)
+    pos = _pad_axis(cache_pos, 1, wp, value=-1)
+    out = decode_attention_pallas(qp, kp, vp, pos, t, window=window,
+                                  softmax_scale=scale, block_w=bw,
+                                  interpret=(backend == "pallas_interpret"))
+    return out[:, :, :hd]
+
+
+# ---------------------------------------------------------------------------
+# diagonal linear scan
+# ---------------------------------------------------------------------------
+
+def linear_scan(a, x, h0=None, *, backend: Optional[str] = None):
+    backend = backend or _BACKEND
+    if backend == "jnp":
+        return _ref.linear_scan(a, x, h0)
+    b, s, c = a.shape
+    bt = min(256, _round_up(s, 8))
+    bc = min(256, _round_up(c, _LANE))
+    sp, cp = _round_up(s, bt), _round_up(c, bc)
+    ap = _pad_axis(_pad_axis(a, 1, sp), 2, cp)       # padded a=0 keeps carry math finite
+    xp = _pad_axis(_pad_axis(x, 1, sp), 2, cp)
+    h0p = None if h0 is None else _pad_axis(h0, 1, cp)
+    h, h_last = linear_scan_pallas(ap, xp, h0p,
+                                   block_t=bt, block_c=bc,
+                                   interpret=(backend == "pallas_interpret"))
+    # h_last must come from the true last step, not the padded tail
+    return h[:, :s, :c], h[:, s - 1, :c]

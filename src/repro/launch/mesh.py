@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Single pod:  (16, 16)      axes ("data", "model")      — 256 chips (v5e pod)
+Multi-pod:   (2, 16, 16)   axes ("pod", "data", "model") — 512 chips
+
+A FUNCTION, not a module constant, so importing this module never touches
+jax device state (smoke tests must keep seeing 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 2):
+    """Tiny mesh over whatever local devices exist (tests / examples)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,140 @@
+"""Roofline analysis over dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms per (arch x shape x mesh), hardware = TPU v5e:
+
+  compute    = FLOPs_per_device / peak            (197 bf16 TFLOP/s)
+  memory     = HBM_bytes_per_device / bw          (819 GB/s)
+  collective = collective_bytes_per_device / link (50 GB/s ICI)
+
+FLOPs/bytes are the trip-count-corrected statics from hlo_analysis.py
+(the compiled module is the per-device program, so they are per-device
+already).  Collective bytes are result-shape bytes of every collective
+in the per-device program — an upper bound on per-device link traffic
+(all-gather receives ~ (n-1)/n of the result over links).
+
+MODEL_FLOPS is the analytic 6*N_active*D (train) / 2*N_active*D
+(prefill) / 2*N_active*B (decode); the ratio MODEL_FLOPS / (HLO_FLOPs *
+chips) shows how much compiled compute is useful (remat + attention +
+MoE capacity overhead push it below 1).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+HBM_PER_CHIP = 16e9        # v5e
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    variant: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    useful_ratio: float
+    temp_gb: float
+    fits: bool
+    status: str
+    reason: str = ""
+    rec: Dict = None
+
+    @property
+    def total_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def row_from_record(rec: Dict) -> RooflineRow:
+    variant = "+".join(filter(None, [
+        "vp" if rec.get("vocab_parallel") else "",
+        rec.get("remat_policy", "none") if rec.get("remat_policy", "none") != "none" else "",
+        "" if rec.get("fsdp", True) else "nofsdp",
+        rec.get("extra", "")]))
+    if rec.get("status") != "ok":
+        return RooflineRow(rec["arch"], rec["shape"], rec.get("mesh", "?"),
+                           variant, 0, 0, 0, "-", 0, 0, False,
+                           rec.get("status", "?"),
+                           rec.get("reason", rec.get("error", ""))[:120], rec)
+    flops = rec["hlo"]["flops"]
+    nbytes = rec["hlo"]["bytes"]
+    coll = sum(v for k, v in rec["collectives"].items()
+               if not k.endswith("_count"))
+    n_dev = rec["n_devices"]
+    c = flops / PEAK_FLOPS
+    m = nbytes / HBM_BW
+    x = coll / LINK_BW
+    dom = max((c, "compute"), (m, "memory"), (x, "collective"))[1]
+    useful = rec["model_flops"] / max(flops * n_dev, 1e-9)
+    mem = rec["memory"]
+    dev_bytes = mem["temp_bytes"] + mem["argument_bytes"] + mem["output_bytes"] \
+        - mem.get("alias_bytes", 0)
+    return RooflineRow(rec["arch"], rec["shape"], rec["mesh"], variant,
+                       c, m, x, dom, useful, mem["temp_bytes"] / 2**30,
+                       dev_bytes <= HBM_PER_CHIP, "ok", "", rec)
+
+
+def load_rows(dirpath: str) -> List[RooflineRow]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(path) as f:
+            rows.append(row_from_record(json.load(f)))
+    return rows
+
+
+def bottleneck_hint(r: RooflineRow) -> str:
+    if r.status != "ok":
+        return r.reason
+    if r.dominant == "compute":
+        if r.useful_ratio < 0.5:
+            return ("cut remat/dispatch overhead (useful ratio %.2f): "
+                    "saveable-dots policy" % r.useful_ratio)
+        return "compute-bound at useful ratio %.2f: near roofline; try larger per-device batch" % r.useful_ratio
+    if r.dominant == "memory":
+        return "HBM-bound: fuse/shrink intermediates, shard the largest resident tensor"
+    return "collective-bound: reshard to cut the largest collective, overlap with compute"
+
+
+def to_markdown(rows: List[RooflineRow]) -> str:
+    out = ["| arch | shape | mesh | variant | compute s | memory s | collective s "
+           "| bottleneck | useful | temp GB | fits | status |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.variant or 'base'} "
+            f"| {r.compute_s:.3e} | {r.memory_s:.3e} | {r.collective_s:.3e} "
+            f"| {r.dominant} | {r.useful_ratio:.2f} | {r.temp_gb:.1f} "
+            f"| {'Y' if r.fits else 'N'} | {r.status} {r.reason} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="runs/dryrun")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = load_rows(args.dir)
+    if args.markdown:
+        print(to_markdown(rows))
+        return
+    for r in rows:
+        print(f"{r.arch:22s} {r.shape:12s} {r.mesh:8s} {r.variant or 'base':12s} "
+              f"C={r.compute_s:.2e} M={r.memory_s:.2e} X={r.collective_s:.2e} "
+              f"dom={r.dominant:10s} useful={r.useful_ratio:5.2f} "
+              f"temp={r.temp_gb:6.1f}GB fits={'Y' if r.fits else 'N'} {r.status}"
+              + (f" ({r.reason})" if r.reason else ""))
+        if r.status == "ok":
+            print(f"    -> {bottleneck_hint(r)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Jit-able distributed step functions: the PPO ``train_step`` and the
+serving ``prefill_step`` / ``serve_step`` that the dry-run lowers and the
+launchers execute.
+
+These are the *production* step bodies — the laptop-scale PPOTrainer and
+RolloutEngine run the same model code; here the full PPO update
+(decoupled objective + AdamW) is fused into one pjit-able function so
+XLA sees the whole step (grads, collectives, optimizer) at once.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs.base import ModelConfig, RLConfig
+from repro.core import ppo
+
+
+def make_train_step(model, rl: RLConfig, adam: Optional[optim.AdamConfig] = None,
+                    vocab_parallel_loss: bool = False, accum_steps: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  ``batch`` follows models.model.train_batch_specs.
+
+    accum_steps > 1 splits the global batch into micro-batches inside the
+    jit (scan with fp32 grad accumulation) — the static-shape counterpart
+    of Algorithm 1's token-budgeted micro-batching, bounding activation
+    memory to one micro-batch."""
+    cfg: ModelConfig = model.cfg
+    adam = adam or optim.AdamConfig(
+        lr=rl.lr, beta1=rl.beta1, beta2=rl.beta2, eps=rl.adam_eps,
+        weight_decay=rl.weight_decay, grad_clip=rl.grad_clip)
+
+    def loss_fn(params, batch):
+        kw: Dict[str, Any] = {}
+        if "prefix_embeds" in batch:
+            kw["prefix_embeds"] = batch["prefix_embeds"]
+        hidden, aux = model.hidden_states(
+            params, batch["tokens"], positions=batch["positions"],
+            segment_ids=batch["segment_ids"], **kw)
+        if hidden.shape[1] != batch["tokens"].shape[1]:
+            hidden = hidden[:, hidden.shape[1] - batch["tokens"].shape[1]:, :]
+        seg = batch["segment_ids"]
+        if vocab_parallel_loss:
+            lp = _vocab_parallel_logprobs(model, params, hidden, batch["tokens"])
+        else:
+            logits = model.logits(params, hidden)
+            lp = ppo.next_token_logprobs(logits, batch["tokens"])
+        same_seg = jnp.concatenate(
+            [jnp.zeros_like(seg[:, :1], bool), seg[:, 1:] == seg[:, :-1]], axis=1)
+        lp = jnp.where(same_seg & (seg >= 0), lp, 0.0)
+        loss, diag = ppo.ppo_loss(
+            lp, batch["behav_logprob"], batch["prox_logprob"],
+            batch["advantages"], batch["loss_mask"],
+            clip_eps=rl.clip_eps, decoupled=rl.decoupled_objective)
+        if cfg.is_moe:
+            loss = loss + cfg.router_aux_coef * aux["lb"] + cfg.router_z_coef * aux["z"]
+        return loss, diag
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, diag), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def accum(carry, mb):
+                g_acc, l_acc, d_acc = carry
+                (l, d), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                d_acc = jax.tree.map(jnp.add, d_acc, d)
+                return (g_acc, l_acc + l, d_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            d0 = {k: jnp.zeros((), jnp.float32) for k in
+                  ("clip_frac", "approx_kl", "behav_kl", "ratio_mean",
+                   "behav_weight_mean", "entropy_proxy")}
+            (grads, loss, diag), _ = jax.lax.scan(
+                accum, (g0, jnp.zeros((), jnp.float32), d0), micro)
+            scale = 1.0 / accum_steps
+            grads = jax.tree.map(lambda g: g * scale, grads)
+            loss = loss * scale
+            diag = jax.tree.map(lambda d: d * scale, diag)
+        params, opt_state, om = optim.apply_updates(adam, params, grads, opt_state)
+        metrics = {"loss": loss, **diag, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def _vocab_parallel_logprobs(model, params, hidden, tokens):
+    """Beyond-paper optimization (§Perf): per-token logprobs without ever
+    materializing the (B, S, V) logits in fp32 for the backward pass of
+    the softmax — logsumexp and the chosen-token logit are computed from
+    the hidden states and the (vocab-sharded) unembedding directly; XLA
+    keeps the vocab dim sharded and reduces with an all-reduce instead of
+    all-gathering logits."""
+    logits = model.logits(params, hidden).astype(jnp.float32)  # stays sharded
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot_lp = jnp.take_along_axis(
+        logits[:, :-1], tokens[:, 1:, None], axis=-1)[..., 0]
+    lp = onehot_lp - logz[:, :-1]
+    return jnp.concatenate([jnp.zeros_like(lp[:, :1]), lp], axis=1)
+
+
+def make_prox_logprob_step(model):
+    """Proximal-policy recompute (Sec 5.2): per-token logprobs under the
+    pre-update parameters, used to fill batch["prox_logprob"]."""
+    def prox_step(params, batch):
+        kw = {}
+        if "prefix_embeds" in batch:
+            kw["prefix_embeds"] = batch["prefix_embeds"]
+        hidden, _ = model.hidden_states(
+            params, batch["tokens"], positions=batch["positions"],
+            segment_ids=batch["segment_ids"], **kw)
+        if hidden.shape[1] != batch["tokens"].shape[1]:
+            hidden = hidden[:, hidden.shape[1] - batch["tokens"].shape[1]:, :]
+        logits = model.logits(params, hidden)
+        lp = ppo.next_token_logprobs(logits, batch["tokens"])
+        seg = batch["segment_ids"]
+        same_seg = jnp.concatenate(
+            [jnp.zeros_like(seg[:, :1], bool), seg[:, 1:] == seg[:, :-1]], axis=1)
+        return jnp.where(same_seg & (seg >= 0), lp, 0.0)
+    return prox_step
+
+
+def make_prefill_step(model, max_len: int, dtype=jnp.bfloat16):
+    """prefill_step(params, batch) -> (last-token logits, populated cache)."""
+    def prefill_step(params, batch):
+        b = batch["tokens"].shape[0]
+        cache = model.init_cache(b, max_len, dtype)
+        kw = {}
+        if "prefix_embeds" in batch:
+            kw["prefix_embeds"] = batch["prefix_embeds"]
+        logits, cache = model.prefill(params, batch["tokens"], cache,
+                                      length=batch["length"], **kw)
+        return logits, cache
+    return prefill_step
+
+
+def make_serve_step(model):
+    """serve_step(params, token, cache) -> (logits, cache): ONE new token
+    against the full KV cache / recurrent state (decode_32k, long_500k)."""
+    def serve_step(params, token, cache):
+        return model.decode_step(params, token, cache)
+    return serve_step

@@ -1,0 +1,146 @@
+"""Distributed AReaL training launcher.
+
+Runs the full asynchronous RL pipeline (rollout engine + PPO trainer +
+controller) for a selected architecture at a selected scale:
+
+  * ``--scale laptop``  (default): reduced model on the local devices —
+    the runnable end-to-end driver (examples/ wrap this).
+  * ``--scale pod``: full config on the production mesh.  On real TPU
+    hardware this trains; in this container it validates end-to-end
+    lowering (use launch/dryrun.py for the full matrix).
+
+On a cluster, each pod runs this entry point under its own process
+group; the 75/25 rollout/train device split (paper Sec 7.1) maps to the
+disaggregated submeshes in launch/disaggregated.py.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_model_config, reduced
+from repro.configs.base import RLConfig
+from repro.core import (AsyncRLController, PPOTrainer, ParameterStore,
+                        RolloutEngine, TimingModel)
+from repro.core.simulator import HardwareModel, WorkloadModel, make_llm_timing
+from repro.data import tokenizer
+from repro.data.dataset import PromptStream
+from repro.models.model import build_model
+
+
+def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
+                 scale: str = "laptop", eta: int = 4, decoupled: bool = True,
+                 interruptible: bool = True, batch_size: int = 32,
+                 answers_per_prompt: int = 4, n_slots: int = 16,
+                 prompt_len: int = 24, max_gen_len: int = 16,
+                 lr: float = 3e-4, seed: int = 1, adv_estimator: str = "grpo",
+                 ckpt_dir: str = "", log_every: int = 1, max_operand: int = 9,
+                 colocated_sync: bool = False, on_step=None):
+    """End-to-end AReaL training on the synthetic math task.
+
+    Returns (controller, trainer, reward_service)."""
+    full_cfg = get_model_config(arch)
+    cfg = full_cfg
+    if scale == "laptop":
+        cfg = reduced(cfg)
+        cfg = dataclasses.replace(cfg, vocab_size=tokenizer.VOCAB_SIZE,
+                                  name=cfg.name + "-math")
+    rl = RLConfig(batch_size=batch_size, answers_per_prompt=answers_per_prompt,
+                  max_staleness=eta, decoupled_objective=decoupled,
+                  interruptible=interruptible, lr=lr,
+                  microbatch_token_budget=max(256, prompt_len + max_gen_len),
+                  ppo_minibatches=2, total_steps=steps,
+                  adv_estimator=adv_estimator,
+                  max_prompt_len=prompt_len, max_gen_len=max_gen_len)
+
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.key(seed))
+    engine = RolloutEngine(model, params, n_slots=n_slots,
+                           prompt_len=prompt_len, max_gen_len=max_gen_len,
+                           seed=seed)
+    trainer = PPOTrainer(model, rl, params)
+    store = ParameterStore(ckpt_dir=ckpt_dir or None,
+                           ckpt_every=10 if ckpt_dir else 0)
+
+    # virtual-clock cost model for a small pod (sec 7.1: 75/25 split);
+    # costs reflect the TARGET architecture's size, not the reduced model
+    hw = HardwareModel()
+    wl = WorkloadModel(n_params=float(full_cfg.param_count()))
+    timing = make_llm_timing(hw, wl, n_gen_devices=96 if not colocated_sync else 128,
+                             n_train_devices=32 if not colocated_sync else 128,
+                             colocated=colocated_sync)
+    stream = PromptStream(seed=seed, answers_per_prompt=answers_per_prompt,
+                          max_operand=max_operand)
+
+    logs = []
+
+    def _on_step(log):
+        logs.append(log)
+        if on_step:
+            on_step(log)
+        store.publish(log.version, trainer.params, {"clock": log.clock})
+        if log.version % log_every == 0:
+            print(f"v{log.version:4d} clock={log.clock:10.2f}s "
+                  f"reward={log.reward_mean:+6.2f} acc={log.accuracy:.3f} "
+                  f"stale={log.staleness_mean:.2f}/{log.staleness_max} "
+                  f"loss={log.loss:+.4f} interrupts={log.interruptions}",
+                  flush=True)
+
+    ctl = AsyncRLController(engine=engine, trainer=trainer, prompt_stream=stream,
+                            rl=rl, timing=timing, on_step=_on_step)
+    ctl.run(steps)
+    if scale == "laptop":
+        # paper protocol: evaluate the FINAL checkpoint on held-out problems
+        from repro.core.evaluate import evaluate
+        res = evaluate(model, trainer.params, n_problems=64,
+                       prompt_len=prompt_len, max_gen_len=max_gen_len,
+                       max_operand=max_operand)
+        ctl.final_eval = res
+        print(f"final held-out eval: {res.accuracy:.1%} "
+              f"({res.n_correct}/{res.n}, mean len {res.mean_len:.1f})")
+    return ctl, trainer, ctl.reward
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="areal-qwen-1.5b")
+    ap.add_argument("--steps", type=int, default=25)
+    ap.add_argument("--scale", default="laptop", choices=["laptop", "pod"])
+    ap.add_argument("--eta", type=int, default=4,
+                    help="max staleness (-1 = unbounded, 0 = synchronous)")
+    ap.add_argument("--naive-ppo", action="store_true",
+                    help="disable the decoupled objective (Eq. 2 baseline)")
+    ap.add_argument("--no-interrupt", action="store_true")
+    ap.add_argument("--sync-colocated", action="store_true",
+                    help="model the synchronous shared-device baseline")
+    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--answers-per-prompt", type=int, default=4)
+    ap.add_argument("--adv", default="grpo", choices=["grpo", "rloo", "mc"])
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    ctl, trainer, reward = run_training(
+        args.arch, steps=args.steps, scale=args.scale, eta=args.eta,
+        decoupled=not args.naive_ppo, interruptible=not args.no_interrupt,
+        batch_size=args.batch_size, answers_per_prompt=args.answers_per_prompt,
+        adv_estimator=args.adv, seed=args.seed, ckpt_dir=args.ckpt_dir,
+        colocated_sync=args.sync_colocated)
+    print(json.dumps({
+        "arch": args.arch, "steps": trainer.version,
+        "virtual_hours": ctl.clock / 3600,
+        "wall_s": round(time.time() - t0, 1),
+        "final_accuracy": reward.recent_accuracy,
+        "effective_throughput_tok_s": ctl.effective_throughput(),
+        "staleness_hist": ctl.stal_stats.histogram(),
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""GQA attention with RoPE, sliding windows, packed segments, and a
+ring-buffer KV cache for decode (wrap-around windows for SWA/local).
+
+Cache layout: {"k": (B, W, Hkv, hd), "v": ..., "pos": (B, W) int32}
+where ``pos`` holds each slot's absolute position (-1 = empty).  Full
+attention uses W = max_len (the ring never wraps); windowed attention
+uses W = window so a 500k-token decode carries O(window) state.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.constraints import constrain, constrain_qkv
+from repro.kernels import ops
+from repro.models import layers
+
+
+def attn_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p = {
+        "wq": layers.dense_init(ks[0], d, cfg.q_dim, dtype),
+        "wk": layers.dense_init(ks[1], d, cfg.kv_dim, dtype),
+        "wv": layers.dense_init(ks[2], d, cfg.kv_dim, dtype),
+        "wo": layers.dense_init(ks[3], cfg.q_dim, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.head_norm_init(cfg.head_dim, dtype)
+        p["k_norm"] = layers.head_norm_init(cfg.head_dim, dtype)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, params, x, positions, rope: bool = True):
+    b, s, _ = x.shape
+    q = layers.matmul(x, params["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = layers.matmul(x, params["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = layers.matmul(x, params["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = layers.head_norm_apply(params["q_norm"], q)
+        k = layers.head_norm_apply(params["k_norm"], k)
+    if rope:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    # one consistent TP scheme across q/k/v (see constraints.constrain_qkv)
+    q, k, v = constrain_qkv(q, k, v)
+    return q, k, v
+
+
+def attn_forward(cfg: ModelConfig, params, x, positions, *, segment_ids=None,
+                 window: int = 0, causal: bool = True):
+    """Full-sequence attention (training / prefill).  x: (B, S, d)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(cfg, params, x, positions)
+    out = ops.flash_attention(q, k, v, segment_ids, causal=causal, window=window)
+    return layers.matmul(out.reshape(b, s, cfg.q_dim), params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# KV cache (ring buffer)
+# ---------------------------------------------------------------------------
+
+def cache_width(cfg: ModelConfig, window: int, max_len: int) -> int:
+    return min(window, max_len) if window and window > 0 else max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, window: int, max_len: int,
+               dtype=jnp.float32):
+    w = cache_width(cfg, window, max_len)
+    return {
+        "k": jnp.zeros((batch, w, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, w, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.full((batch, w), -1, jnp.int32),
+    }
+
+
+def prefill_into_cache(cfg: ModelConfig, params, x, positions, cache, *,
+                       valid=None, window: int = 0):
+    """Full attention over the (right-padded) prompt AND populate the cache.
+
+    positions: (B, S) absolute positions; valid: (B, S) bool (False =
+    padding; such slots are masked out of attention and written with
+    pos = -1 so decode never sees them).  When S exceeds the (windowed)
+    cache width only the last ``width`` valid tokens per row are written
+    — exactly the ring-buffer state a stepwise decode would have left.
+    """
+    b, s, _ = x.shape
+    w = cache["k"].shape[1]
+    if valid is None:
+        valid = jnp.ones((b, s), bool)
+    segment_ids = jnp.where(valid, 0, -1).astype(jnp.int32)
+    q, k, v = _project_qkv(cfg, params, x, positions)
+    out = ops.flash_attention(q, k, v, segment_ids, causal=True, window=window)
+
+    if s > w:
+        # keep the last w valid tokens per row (window >= w by design)
+        length = jnp.sum(valid.astype(jnp.int32), axis=1)          # (B,)
+        idx = length[:, None] - w + jnp.arange(w)[None, :]         # (B, w)
+        ok = idx >= 0
+        idx_c = jnp.clip(idx, 0, s - 1)
+        gat = lambda a: jnp.take_along_axis(
+            a, idx_c[:, :, None, None], axis=1)
+        k = jnp.where(ok[:, :, None, None], gat(k), 0)
+        v = jnp.where(ok[:, :, None, None], gat(v), 0)
+        positions = jnp.where(
+            ok, jnp.take_along_axis(positions, idx_c, axis=1), -1)
+        valid = ok & jnp.take_along_axis(valid, idx_c, axis=1)
+
+    slots = jnp.where(positions >= 0, positions, 0) % w            # (B, W')
+    bidx = jnp.arange(b)[:, None]
+    new_cache = {
+        "k": cache["k"].at[bidx, slots].set(k),
+        "v": cache["v"].at[bidx, slots].set(v),
+        "pos": cache["pos"].at[bidx, slots].set(jnp.where(valid, positions, -1)),
+    }
+    o = layers.matmul(out.reshape(b, s, cfg.q_dim), params["wo"])
+    return o, new_cache
+
+
+def attn_decode_step(cfg: ModelConfig, params, x_t, t, cache, *, window: int = 0):
+    """One-token decode.  x_t: (B, d); t: (B,) absolute position."""
+    b, d = x_t.shape
+    q = layers.matmul(x_t, params["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    k = layers.matmul(x_t, params["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = layers.matmul(x_t, params["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = layers.head_norm_apply(params["q_norm"], q)
+        k = layers.head_norm_apply(params["k_norm"], k)
+    q = layers.apply_rope(q, t[:, None], cfg.rope_theta)
+    k = layers.apply_rope(k, t[:, None], cfg.rope_theta)
+
+    w = cache["k"].shape[1]
+    slot = (t % w)                                            # (B,)
+    bidx = jnp.arange(b)
+    cache = {
+        "k": cache["k"].at[bidx, slot].set(k[:, 0]),
+        "v": cache["v"].at[bidx, slot].set(v[:, 0]),
+        "pos": cache["pos"].at[bidx, slot].set(t),
+    }
+    out = ops.decode_attention(q[:, 0], cache["k"], cache["v"], cache["pos"],
+                               t, window=window)
+    return layers.matmul(out.reshape(b, cfg.q_dim), params["wo"]), cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {
+        "wq": layers.dense_init(ks[0], d, cfg.q_dim, dtype),
+        "wk": layers.dense_init(ks[1], d, cfg.kv_dim, dtype),
+        "wv": layers.dense_init(ks[2], d, cfg.kv_dim, dtype),
+        "wo": layers.dense_init(ks[3], cfg.q_dim, d, dtype),
+    }
+
+
+def cross_attn_kv(cfg: ModelConfig, params, enc_out):
+    """Precompute cross KV from encoder output (immutable during decode)."""
+    b, s, _ = enc_out.shape
+    k = layers.matmul(enc_out, params["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = layers.matmul(enc_out, params["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": k, "v": v}
+
+
+def cross_attn_apply(cfg: ModelConfig, params, x, kv):
+    """x: (B, S, d) decoder states; kv from ``cross_attn_kv``."""
+    b, s, _ = x.shape
+    q = layers.matmul(x, params["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    out = ops.flash_attention(q, kv["k"], kv["v"], None, causal=False)
+    return layers.matmul(out.reshape(b, s, cfg.q_dim), params["wo"])

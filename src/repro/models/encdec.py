@@ -1,0 +1,233 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The mel-spectrogram + conv feature extractor is the stubbed modality
+frontend: the model consumes precomputed frame embeddings
+(B, encoder_seq_len, prefix_dim) supplied by ``input_specs()``.  The
+encoder is bidirectional; the decoder is the autoregressive RL policy
+with cached self-attention (ring buffer) and cross-attention whose KV
+is computed once at prefill time and is immutable under AReaL
+weight-update interruptions (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import attention, layers
+
+
+def _enc_layer_init(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"attn_norm": layers.norm_init(cfg, cfg.d_model, dtype),
+            "attn": attention.attn_init(k1, cfg, dtype),
+            "mlp_norm": layers.norm_init(cfg, cfg.d_model, dtype),
+            "mlp": layers.mlp_init(k2, cfg, dtype=dtype)}
+
+
+def _dec_layer_init(key, cfg: ModelConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"self_norm": layers.norm_init(cfg, cfg.d_model, dtype),
+            "self": attention.attn_init(k1, cfg, dtype),
+            "cross_norm": layers.norm_init(cfg, cfg.d_model, dtype),
+            "cross": attention.cross_attn_init(k2, cfg, dtype),
+            "mlp_norm": layers.norm_init(cfg, cfg.d_model, dtype),
+            "mlp": layers.mlp_init(k3, cfg, dtype=dtype)}
+
+
+class EncDecLM:
+    """Uniform-API wrapper (see transformer.LM) for the enc-dec family."""
+
+    def __init__(self, cfg: ModelConfig, remat: bool = True,
+                 remat_policy: Optional[Any] = None):
+        assert cfg.is_encdec
+        self.cfg = cfg
+        self.pattern = ("attn",)
+        self.remat = remat
+        self.remat_policy = remat_policy
+
+    def init(self, key, dtype=jnp.float32) -> Dict:
+        cfg = self.cfg
+        ke, kd, kemb, kproj, khead = jax.random.split(key, 5)
+        enc_keys = jax.random.split(ke, cfg.encoder_layers)
+        dec_keys = jax.random.split(kd, cfg.n_layers)
+        params = {
+            "embed": layers.embed_init(kemb, cfg, dtype),
+            "projector": {"w": layers.dense_init(kproj, cfg.prefix_dim,
+                                                 cfg.d_model, dtype)},
+            "encoder": jax.vmap(lambda k: _enc_layer_init(k, cfg, dtype))(enc_keys),
+            "enc_norm": layers.norm_init(cfg, cfg.d_model, dtype),
+            "decoder": jax.vmap(lambda k: _dec_layer_init(k, cfg, dtype))(dec_keys),
+            "final_norm": layers.norm_init(cfg, cfg.d_model, dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = {"w": layers.dense_init(khead, cfg.d_model,
+                                                     cfg.padded_vocab, dtype)}
+        return params
+
+    # ---- encoder ----------------------------------------------------------
+    def encode(self, params, frames):
+        """frames: (B, F, prefix_dim) stubbed conv-frontend output."""
+        cfg = self.cfg
+        h = layers.matmul(frames, params["projector"]["w"])
+        pe = layers.sinusoidal_positions(frames.shape[1], cfg.d_model)
+        h = h + pe[None].astype(h.dtype)
+        b, f, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32)[None], (b, f))
+
+        def layer_fn(h, p):
+            a = attention.attn_forward(cfg, p["attn"],
+                                       layers.norm_apply(cfg, p["attn_norm"], h),
+                                       positions, causal=False)
+            h = h + a
+            y = layers.mlp_apply(cfg, p["mlp"],
+                                 layers.norm_apply(cfg, p["mlp_norm"], h))
+            return h + y, None
+
+        if self.remat:
+            layer_fn = jax.checkpoint(layer_fn, policy=self.remat_policy)
+        h, _ = jax.lax.scan(layer_fn, h, params["encoder"])
+        return layers.norm_apply(cfg, params["enc_norm"], h)
+
+    # ---- training / scoring forward ---------------------------------------
+    def hidden_states(self, params, tokens, *, positions=None, segment_ids=None,
+                      prefix_embeds=None, enc_out=None):
+        """prefix_embeds here = audio frames (B, F, prefix_dim)."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        if enc_out is None:
+            assert prefix_embeds is not None, "audio family needs frames"
+            enc_out = self.encode(params, prefix_embeds)
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        h = layers.embed_apply(params["embed"], tokens)
+        pe = layers.sinusoidal_positions(cfg.max_position_embeddings, cfg.d_model)
+        h = h + jnp.take(pe, jnp.clip(positions, 0, pe.shape[0] - 1), axis=0).astype(h.dtype)
+
+        def layer_fn(h, p):
+            a = attention.attn_forward(cfg, p["self"],
+                                       layers.norm_apply(cfg, p["self_norm"], h),
+                                       positions, segment_ids=segment_ids)
+            h = h + a
+            kv = attention.cross_attn_kv(cfg, p["cross"], enc_out)
+            c = attention.cross_attn_apply(cfg, p["cross"],
+                                           layers.norm_apply(cfg, p["cross_norm"], h), kv)
+            h = h + c
+            y = layers.mlp_apply(cfg, p["mlp"],
+                                 layers.norm_apply(cfg, p["mlp_norm"], h))
+            return h + y, None
+
+        if self.remat:
+            layer_fn = jax.checkpoint(layer_fn, policy=self.remat_policy)
+        h, _ = jax.lax.scan(layer_fn, h, params["decoder"])
+        h = layers.norm_apply(cfg, params["final_norm"], h)
+        from repro.models.transformer import _zero_aux
+        return h, _zero_aux()
+
+    def logits(self, params, hidden):
+        return layers.unembed_apply(params["embed"], params.get("head"),
+                                    hidden, self.cfg.tie_embeddings)
+
+    def forward(self, params, tokens, **kw):
+        h, aux = self.hidden_states(params, tokens, **kw)
+        return self.logits(params, h), aux
+
+    # ---- serving ------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.float32):
+        cfg = self.cfg
+        L = cfg.n_layers
+        single = attention.init_cache(cfg, batch, 0, max_len, dtype)
+        self_cache = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (L,) + x.shape), single)
+        cross = {
+            "k": jnp.zeros((L, batch, cfg.encoder_seq_len, cfg.n_kv_heads,
+                            cfg.head_dim), dtype),
+            "v": jnp.zeros((L, batch, cfg.encoder_seq_len, cfg.n_kv_heads,
+                            cfg.head_dim), dtype),
+        }
+        return {"self": self_cache, "cross": cross,
+                "t": jnp.zeros((batch,), jnp.int32)}
+
+    def prefill(self, params, tokens, cache, *, positions=None, prefix_embeds=None,
+                length=None):
+        cfg = self.cfg
+        b, s = tokens.shape
+        enc_out = self.encode(params, prefix_embeds)
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        if length is None:
+            length = jnp.full((b,), s, jnp.int32)
+        valid = positions < length[:, None]
+        h = layers.embed_apply(params["embed"], tokens)
+        pe = layers.sinusoidal_positions(cfg.max_position_embeddings, cfg.d_model)
+        h = h + jnp.take(pe, jnp.clip(positions, 0, pe.shape[0] - 1), axis=0).astype(h.dtype)
+
+        def layer_fn(h, xs):
+            p, sc = xs
+            hin = layers.norm_apply(cfg, p["self_norm"], h)
+            a, sc = attention.prefill_into_cache(cfg, p["self"], hin, positions,
+                                                 sc, valid=valid)
+            h = h + a
+            kv = attention.cross_attn_kv(cfg, p["cross"], enc_out)
+            c = attention.cross_attn_apply(cfg, p["cross"],
+                                           layers.norm_apply(cfg, p["cross_norm"], h), kv)
+            h = h + c
+            y = layers.mlp_apply(cfg, p["mlp"],
+                                 layers.norm_apply(cfg, p["mlp_norm"], h))
+            return h + y, (sc, kv)
+
+        h, (self_cache, cross_kv) = jax.lax.scan(
+            layer_fn, h, (params["decoder"], cache["self"]))
+        h = layers.norm_apply(cfg, params["final_norm"], h)
+        idx = jnp.clip(length - 1, 0, h.shape[1] - 1)
+        h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
+        logits = self.logits(params, h_last)
+        new_cache = {"self": self_cache,
+                     "cross": {"k": cross_kv["k"], "v": cross_kv["v"]},
+                     "t": length}
+        return logits, new_cache
+
+    def cache_insert(self, full, sub, slots):
+        """See transformer.LM.cache_insert; self/cross leaves are
+        (L, B, ...) — batch axis 1."""
+        ins_l = lambda x, y: x.at[:, slots].set(y.astype(x.dtype), mode="drop")
+        return {
+            "self": jax.tree.map(ins_l, full["self"], sub["self"]),
+            "cross": jax.tree.map(ins_l, full["cross"], sub["cross"]),
+            "t": full["t"].at[slots].set(sub["t"], mode="drop"),
+        }
+
+    def decode_step(self, params, token, cache):
+        cfg = self.cfg
+        t = cache["t"]
+        h = layers.embed_apply(params["embed"], token)
+        pe = layers.sinusoidal_positions(cfg.max_position_embeddings, cfg.d_model)
+        h = h + jnp.take(pe, jnp.clip(t, 0, pe.shape[0] - 1), axis=0).astype(h.dtype)
+
+        def layer_fn(h, xs):
+            p, sc, ckv = xs
+            hin = layers.norm_apply(cfg, p["self_norm"], h)
+            a, sc = attention.attn_decode_step(cfg, p["self"], hin, t, sc)
+            h = h + a
+            hq = layers.norm_apply(cfg, p["cross_norm"], h)
+            b = h.shape[0]
+            q = layers.matmul(hq, p["cross"]["wq"]).reshape(
+                b, cfg.n_heads, cfg.head_dim)
+            f = ckv["k"].shape[1]
+            cpos = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32)[None], (b, f))
+            o = ops.decode_attention(q, ckv["k"], ckv["v"], cpos,
+                                     jnp.full((b,), f, jnp.int32))
+            h = h + layers.matmul(o.reshape(b, cfg.q_dim), p["cross"]["wo"])
+            y = layers.mlp_apply(cfg, p["mlp"],
+                                 layers.norm_apply(cfg, p["mlp_norm"], h))
+            return h + y, sc
+
+        h, self_cache = jax.lax.scan(
+            layer_fn, h, (params["decoder"], cache["self"], cache["cross"]))
+        h = layers.norm_apply(cfg, params["final_norm"], h)
+        logits = self.logits(params, h)
+        new_cache = {"self": self_cache, "cross": cache["cross"], "t": t + 1}
+        return logits, new_cache

@@ -1,0 +1,92 @@
+"""Model facade: build the right family, provide uniform batch/IO specs.
+
+Every architecture exposes:
+  init(key, dtype) -> params
+  forward(params, tokens, **kw) -> (logits, aux)
+  hidden_states / logits                   (for vocab-parallel loss paths)
+  init_cache(batch, max_len, dtype) -> cache
+  prefill(params, tokens, cache, ...) -> (last_logits, cache)
+  decode_step(params, token, cache) -> (logits, cache)
+
+``batch_inputs``/``decode_inputs`` build ShapeDtypeStruct stand-ins for
+the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import LM
+
+
+def build_model(cfg: ModelConfig, remat: bool = True, remat_policy=None):
+    if cfg.is_encdec:
+        return EncDecLM(cfg, remat=remat, remat_policy=remat_policy)
+    return LM(cfg, remat=remat, remat_policy=remat_policy)
+
+
+def needs_prefix(cfg: ModelConfig) -> bool:
+    return bool(cfg.n_prefix_tokens and cfg.prefix_dim)
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins (dry-run; never allocates)
+# ---------------------------------------------------------------------------
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """The PPO train-step batch: packed trajectories + RL fields.
+
+    tokens/positions/segment_ids: packed variable-length trajectories.
+    advantages: per-token advantage; behav_logprob/prox_logprob: stored
+    behavior logprobs and recomputed proximal logprobs (Eq. 5);
+    loss_mask: 1 on generated (response) tokens.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "positions": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "segment_ids": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "advantages": jax.ShapeDtypeStruct((b, s), f32),
+        "behav_logprob": jax.ShapeDtypeStruct((b, s), f32),
+        "prox_logprob": jax.ShapeDtypeStruct((b, s), f32),
+        "loss_mask": jax.ShapeDtypeStruct((b, s), f32),
+    }
+    if needs_prefix(cfg):
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_prefix_tokens, cfg.prefix_dim), dtype)
+    return specs
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                        dtype=jnp.bfloat16) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "length": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+    if needs_prefix(cfg):
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_prefix_tokens, cfg.prefix_dim), dtype)
+    return specs
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b = shape.global_batch
+    return {"token": jax.ShapeDtypeStruct((b,), jnp.int32)}
+
+
+def cache_specs(model, cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree of the decode cache (eval_shape; no alloc)."""
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len, dtype))
+
+
+def param_specs(model, cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: model.init(jax.random.key(0), dtype))

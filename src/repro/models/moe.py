@@ -1,0 +1,142 @@
+"""Mixture-of-experts layer with hierarchical sort-based dispatch.
+
+TPU/SPMD-native formulation (MaxText-style "dropping" MoE, made
+hierarchical for clean partitioning): tokens are split into G groups
+aligned with the data-parallel sharding; each group independently sorts
+its token->expert assignments and scatters into a per-group dense
+(E, C_g, d) expert buffer (tokens over the per-group capacity are
+dropped).  The stacked (G, E, C_g, d) buffer is sharded (data, model):
+the group dim stays with the tokens' data shards while the expert dim is
+expert-parallel over "model" — the scatter/gather boundary is exactly
+the all-to-all of a classic expert-parallel MoE, and every intermediate
+is fully sharded (a flat global dispatch was observed to replicate the
+multi-GB buffer on every device).
+
+Router aux losses: Switch-style load-balance loss and router z-loss.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.constraints import constrain
+from repro.models import layers
+
+
+class MoEAux(NamedTuple):
+    load_balance_loss: jnp.ndarray
+    z_loss: jnp.ndarray
+    dropped_fraction: jnp.ndarray
+
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    scale = 1.0 / jnp.sqrt(d)
+    p = {
+        "router": layers.dense_init(ks[0], d, e, dtype),
+        "w_up": (jax.random.normal(ks[1], (e, d, ff), jnp.float32) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[2], (e, ff, d), jnp.float32) / jnp.sqrt(ff)).astype(dtype),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(ks[3], (e, d, ff), jnp.float32) * scale).astype(dtype)
+    return p
+
+
+def _expert_ffn(cfg: ModelConfig, params, h):
+    """h: (G, E, C, d) -> (G, E, C, d), batched over groups and experts."""
+    up = jnp.einsum("gecd,edf->gecf", h, params["w_up"],
+                    preferred_element_type=jnp.float32).astype(h.dtype)
+    if cfg.act in ("swiglu", "geglu"):
+        gate = jnp.einsum("gecd,edf->gecf", h, params["w_gate"],
+                          preferred_element_type=jnp.float32)
+        act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        up = act(gate).astype(h.dtype) * up
+    else:
+        up = jax.nn.gelu(up.astype(jnp.float32)).astype(h.dtype)
+    return jnp.einsum("gecf,efd->gecd", up, params["w_down"],
+                      preferred_element_type=jnp.float32).astype(h.dtype)
+
+
+def _group_slots(top_e, k, e, capacity):
+    """Per-group slot assignment.  top_e: (Tg, K) expert ids.
+    Returns (tok_sorted (Tg*K,), slot_e, slot_c, keep)."""
+    tg = top_e.shape[0]
+    flat_e = top_e.reshape(-1)
+    order = jnp.argsort(flat_e)
+    e_sorted = flat_e[order]
+    tok_sorted = order // k
+    counts = jnp.zeros((e,), jnp.int32).at[e_sorted].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(tg * k) - starts[e_sorted]
+    keep = pos < capacity
+    slot_c = jnp.where(keep, pos, capacity)        # overflow slot -> sliced off
+    return order, tok_sorted, e_sorted, slot_c, keep
+
+
+def moe_apply(cfg: ModelConfig, params, x, *, capacity: int = 0,
+              n_groups: int = 0):
+    """x: (..., d).  Returns (y, MoEAux)."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    xt = x.reshape(-1, d)                                  # (T, d)
+    t = xt.shape[0]
+    e, k = cfg.n_experts, cfg.experts_per_token
+
+    logits = layers.matmul(xt, params["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                 # (T, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalize over chosen
+
+    # ---- aux losses ------------------------------------------------------
+    me = jnp.mean(probs, axis=0)                           # (E,) avg router prob
+    ce = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (t * k)
+    load_balance = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    # ---- hierarchical dispatch ------------------------------------------
+    if n_groups <= 0:
+        n_groups = 32 if t % 32 == 0 and t >= 32 * e else 1
+    g = n_groups
+    tg = t // g
+    if capacity <= 0:
+        capacity = int(cfg.moe_capacity_factor * tg * k / e) + 1
+
+    xg = constrain(xt.reshape(g, tg, d), "dp", None, None)
+    top_eg = top_e.reshape(g, tg, k)
+    top_pg = top_p.reshape(g, tg, k).astype(xt.dtype)
+
+    order, tok_sorted, e_sorted, slot_c, keep = jax.vmap(
+        lambda te: _group_slots(te, k, e, capacity))(top_eg)
+
+    def scatter_group(xt_g, tok_s, e_s, c_s, keep_g):
+        buf = jnp.zeros((e, capacity + 1, d), xt_g.dtype)
+        vals = xt_g[tok_s] * keep_g[:, None].astype(xt_g.dtype)
+        return buf.at[e_s, c_s].set(vals)
+
+    buf = jax.vmap(scatter_group)(xg, tok_sorted, e_sorted, slot_c, keep)
+    expert_in = constrain(buf[:, :, :capacity, :], "dp", "model", None, None)
+    expert_out = constrain(_expert_ffn(cfg, params, expert_in),
+                           "dp", "model", None, None)
+
+    def gather_group(out_g, w_g, ord_g, tok_s, e_s, c_s, keep_g):
+        vals = out_g[e_s, jnp.clip(c_s, 0, capacity - 1)]    # (Tg*K, d)
+        w = jnp.where(keep_g, w_g.reshape(-1)[ord_g], 0.0)
+        y = jnp.zeros((tg, d), out_g.dtype).at[tok_s].add(vals * w[:, None])
+        return y
+
+    yg = jax.vmap(gather_group)(expert_out, top_pg, order, tok_sorted,
+                                e_sorted, slot_c, keep)
+    y = constrain(yg, "dp", None, None).reshape(t, d)
+
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    aux = MoEAux(load_balance_loss=load_balance, z_loss=z_loss,
+                 dropped_fraction=dropped)
+    return y.reshape(orig_shape), aux
+
+
+def aux_loss(cfg: ModelConfig, aux: MoEAux):
+    return cfg.router_aux_coef * aux.load_balance_loss + cfg.router_z_coef * aux.z_loss

@@ -1,0 +1,116 @@
+"""Griffin / RecurrentGemma recurrent block (arXiv:2402.19427).
+
+Structure: two branches from the pre-normed input — a gate branch
+(linear -> GeLU) and a recurrence branch (linear -> causal conv ->
+RG-LRU) — multiplied and projected out.  The RG-LRU is a gated diagonal
+linear recurrence:
+
+    r_t = sigmoid(W_a x_t)          (recurrence gate)
+    i_t = sigmoid(W_i x_t)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill runs the recurrence through the blocked linear-scan
+kernel (repro.kernels.ops.linear_scan); decode is one O(width) step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers
+
+_C = 8.0
+
+
+def rglru_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a ~ U[0.9, 0.999]^c-ish (Griffin appendix)
+    lam = jax.random.uniform(ks[5], (w,), jnp.float32, 0.38, 0.8)
+    return {
+        "w_rec": layers.dense_init(ks[0], d, w, dtype),
+        "w_gate": layers.dense_init(ks[1], d, w, dtype),
+        "conv": layers.causal_conv1d_init(ks[2], cfg.conv1d_width, w, dtype),
+        "w_a": layers.dense_init(ks[3], w, w, dtype),
+        "w_i": layers.dense_init(ks[4], w, w, dtype),
+        "lam": lam,
+        "w_out": layers.dense_init(ks[6], w, d, dtype),
+    }
+
+
+def _lru_coeffs(p, xc):
+    """xc: (..., w) conv output -> (log_a, scaled input)."""
+    r = jax.nn.sigmoid(layers.matmul(xc, p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(layers.matmul(xc, p["w_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    x_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xc.astype(jnp.float32))
+    return a, x_in
+
+
+def rglru_forward(cfg: ModelConfig, p, x, h0=None, segment_ids=None, valid=None):
+    """x: (B, S, d) pre-normed.  Returns (out, h_last).
+
+    valid: (B, S) bool — padded steps become identity transitions
+    (a=1, input=0) so the final state is the state at the last real token.
+    """
+    gate = jax.nn.gelu(layers.matmul(x, p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+    xr = layers.matmul(x, p["w_rec"])
+    xc = layers.causal_conv1d_apply(p["conv"], xr, segment_ids)
+    a, x_in = _lru_coeffs(p, xc)
+    if valid is not None:
+        a = jnp.where(valid[..., None], a, 1.0)
+        x_in = jnp.where(valid[..., None], x_in, 0.0)
+    if segment_ids is not None:
+        # reset recurrence at segment boundaries (packed sequences)
+        first = jnp.concatenate(
+            [jnp.ones_like(segment_ids[:, :1], bool),
+             segment_ids[:, 1:] != segment_ids[:, :-1]], axis=1)
+        a = jnp.where(first[..., None], 0.0, a)
+    h, h_last = ops.linear_scan(a.astype(jnp.float32), x_in, h0)
+    out = layers.matmul(h.astype(x.dtype) * gate, p["w_out"])
+    return out, h_last
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, cfg.lru_width), dtype),
+    }
+
+
+def rglru_decode_step(cfg: ModelConfig, p, x_t, state):
+    """x_t: (B, d) pre-normed.  Returns (out, new_state)."""
+    gate = jax.nn.gelu(layers.matmul(x_t, p["w_gate"]).astype(jnp.float32)).astype(x_t.dtype)
+    xr = layers.matmul(x_t, p["w_rec"])
+    conv_state, xc = layers.causal_conv1d_step(p["conv"], state["conv"], xr)
+    a, x_in = _lru_coeffs(p, xc)
+    h_new = a * state["h"] + x_in
+    out = layers.matmul(h_new.astype(x_t.dtype) * gate, p["w_out"])
+    return out, {"h": h_new, "conv": conv_state}
+
+
+def rglru_prefill_state(cfg: ModelConfig, p, x, state=None, valid=None):
+    """Forward over a prefix, returning output and final state (for the
+    AReaL interruption path: re-scan prefix under new weights)."""
+    h0 = None if state is None else state["h"]
+    out, h_last = rglru_forward(cfg, p, x, h0=h0, valid=valid)
+    xr = layers.matmul(x, p["w_rec"])
+    if valid is not None:
+        # conv history must hold the last (width-1) *real* inputs per row
+        w = cfg.conv1d_width - 1
+        length = jnp.sum(valid.astype(jnp.int32), axis=1)          # (B,)
+        idx = length[:, None] - w + jnp.arange(w)[None, :]         # (B, w)
+        ok = idx >= 0
+        hist = jnp.take_along_axis(xr, jnp.clip(idx, 0, xr.shape[1] - 1)[..., None],
+                                   axis=1)
+        hist = jnp.where(ok[..., None], hist, 0.0)
+    else:
+        hist = xr[:, -(cfg.conv1d_width - 1):, :]
+        pad = cfg.conv1d_width - 1 - hist.shape[1]
+        if pad > 0:
+            hist = jnp.pad(hist, ((0, 0), (pad, 0), (0, 0)))
+    return out, {"h": h_last.astype(jnp.float32), "conv": hist}

@@ -1,0 +1,394 @@
+"""Decoder-only LM assembly over heterogeneous block patterns.
+
+``cfg.block_pattern`` (e.g. ``("rec","rec","local")`` for RecurrentGemma,
+``("mlstm",)*7 + ("slstm",)`` for xLSTM, ``("attn",)`` for dense/MoE)
+tiles to ``n_layers``.  Parameters for the repeating units are *stacked*
+(leading dim = n_units) and the forward pass is a ``lax.scan`` over
+units with rematerialization — this keeps the HLO size O(pattern) instead
+of O(layers), which matters for the 94-layer qwen3 dry-run, and bounds
+activation memory.  Remainder layers (38 = 12*3 + 2) are unrolled.
+
+Three execution modes per block type:
+  forward      full sequence, training (packed segments supported)
+  prefill      full sequence + populate decode cache
+  decode       one token, O(state) step
+
+Cache pytree mirrors the parameter structure: per pattern position a
+stacked (n_units, ...) tree, plus per-remainder-layer unstacked trees.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.constraints import constrain
+from repro.models import attention, layers, moe, rglru, xlstm
+
+ATTN_KINDS = ("attn", "swa", "local")
+MLSTM_CHUNK_THRESHOLD = 512      # above this, use the chunkwise mLSTM form
+
+
+def _block_window(cfg: ModelConfig, bt: str) -> int:
+    if bt == "swa":
+        return cfg.sliding_window
+    if bt == "local":
+        return cfg.local_window
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# Single block: init / forward / prefill / decode
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, bt: str, dtype=jnp.float32):
+    if bt in ATTN_KINDS:
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = {"attn_norm": layers.norm_init(cfg, cfg.d_model, dtype),
+             "attn": attention.attn_init(k1, cfg, dtype),
+             "mlp_norm": layers.norm_init(cfg, cfg.d_model, dtype)}
+        if cfg.is_moe:
+            p["moe"] = moe.moe_init(k2, cfg, dtype)
+        else:
+            p["mlp"] = layers.mlp_init(k3, cfg, dtype=dtype)
+        return p
+    if bt == "rec":
+        k1, k2 = jax.random.split(key)
+        return {"rec_norm": layers.norm_init(cfg, cfg.d_model, dtype),
+                "rec": rglru.rglru_init(k1, cfg, dtype),
+                "mlp_norm": layers.norm_init(cfg, cfg.d_model, dtype),
+                "mlp": layers.mlp_init(k2, cfg, dtype=dtype)}
+    if bt == "mlstm":
+        return {"cell": xlstm.mlstm_init(key, cfg, dtype)}
+    if bt == "slstm":
+        return {"cell": xlstm.slstm_init(key, cfg, dtype)}
+    raise ValueError(bt)
+
+
+def _zero_aux():
+    return {"lb": jnp.zeros((), jnp.float32), "z": jnp.zeros((), jnp.float32),
+            "drop": jnp.zeros((), jnp.float32)}
+
+
+def block_forward(cfg: ModelConfig, bt: str, p, h, positions, segment_ids):
+    aux = _zero_aux()
+    if bt in ATTN_KINDS:
+        a = attention.attn_forward(
+            cfg, p["attn"], layers.norm_apply(cfg, p["attn_norm"], h),
+            positions, segment_ids=segment_ids, window=_block_window(cfg, bt))
+        h = h + a
+        hin = layers.norm_apply(cfg, p["mlp_norm"], h)
+        if cfg.is_moe:
+            y, maux = moe.moe_apply(cfg, p["moe"], hin)
+            aux = {"lb": maux.load_balance_loss, "z": maux.z_loss,
+                   "drop": maux.dropped_fraction}
+        else:
+            y = layers.mlp_apply(cfg, p["mlp"], hin)
+        return h + y, aux
+    if bt == "rec":
+        r, _ = rglru.rglru_forward(
+            cfg, p["rec"], layers.norm_apply(cfg, p["rec_norm"], h),
+            segment_ids=segment_ids)
+        h = h + r
+        y = layers.mlp_apply(cfg, p["mlp"], layers.norm_apply(cfg, p["mlp_norm"], h))
+        return h + y, aux
+    if bt == "mlstm":
+        hin = layers.norm_apply(cfg, p["cell"]["norm"], h)
+        if h.shape[1] > MLSTM_CHUNK_THRESHOLD:
+            y = xlstm.mlstm_forward_chunked(cfg, p["cell"], hin,
+                                            segment_ids=segment_ids)
+        else:
+            y = xlstm.mlstm_forward(cfg, p["cell"], hin,
+                                    segment_ids=segment_ids)
+        return h + y, aux
+    if bt == "slstm":
+        c = p["cell"]
+        y, _ = xlstm.slstm_forward(cfg, c, layers.norm_apply(cfg, c["norm"], h),
+                                   segment_ids=segment_ids)
+        h = h + y
+        f = xlstm.slstm_ffn(cfg, c, layers.norm_apply(cfg, c["ffn_norm"], h))
+        return h + f, aux
+    raise ValueError(bt)
+
+
+def block_init_cache(cfg: ModelConfig, bt: str, batch: int, max_len: int,
+                     dtype=jnp.float32):
+    if bt in ATTN_KINDS:
+        return attention.init_cache(cfg, batch, _block_window(cfg, bt), max_len, dtype)
+    if bt == "rec":
+        return rglru.rglru_init_state(cfg, batch, dtype)
+    if bt == "mlstm":
+        return xlstm.mlstm_init_state(cfg, batch, dtype)
+    if bt == "slstm":
+        return xlstm.slstm_init_state(cfg, batch, dtype)
+    raise ValueError(bt)
+
+
+def block_prefill(cfg: ModelConfig, bt: str, p, h, positions, cache, valid=None):
+    """Full-sequence forward + populate cache.  Returns (h, cache)."""
+    if bt in ATTN_KINDS:
+        hin = layers.norm_apply(cfg, p["attn_norm"], h)
+        a, cache = attention.prefill_into_cache(
+            cfg, p["attn"], hin, positions, cache, valid=valid,
+            window=_block_window(cfg, bt))
+        h = h + a
+        hin = layers.norm_apply(cfg, p["mlp_norm"], h)
+        y = moe.moe_apply(cfg, p["moe"], hin)[0] if cfg.is_moe \
+            else layers.mlp_apply(cfg, p["mlp"], hin)
+        return h + y, cache
+    if bt == "rec":
+        hin = layers.norm_apply(cfg, p["rec_norm"], h)
+        r, cache = rglru.rglru_prefill_state(cfg, p["rec"], hin, valid=valid)
+        h = h + r
+        y = layers.mlp_apply(cfg, p["mlp"], layers.norm_apply(cfg, p["mlp_norm"], h))
+        return h + y, cache
+    if bt == "mlstm":
+        hin = layers.norm_apply(cfg, p["cell"]["norm"], h)
+        if h.shape[1] > MLSTM_CHUNK_THRESHOLD:
+            y, cache = xlstm.mlstm_forward_chunked(cfg, p["cell"], hin,
+                                                   valid=valid, return_state=True)
+        else:
+            y, cache = xlstm.mlstm_prefill_state(cfg, p["cell"], hin, valid=valid)
+        return h + y, cache
+    if bt == "slstm":
+        c = p["cell"]
+        y, cache = xlstm.slstm_forward(cfg, c, layers.norm_apply(cfg, c["norm"], h),
+                                       valid=valid)
+        h = h + y
+        f = xlstm.slstm_ffn(cfg, c, layers.norm_apply(cfg, c["ffn_norm"], h))
+        return h + f, cache
+    raise ValueError(bt)
+
+
+def block_decode(cfg: ModelConfig, bt: str, p, h_t, t, cache):
+    """One token.  h_t: (B, d); t: (B,) absolute positions."""
+    if bt in ATTN_KINDS:
+        hin = layers.norm_apply(cfg, p["attn_norm"], h_t)
+        a, cache = attention.attn_decode_step(cfg, p["attn"], hin, t, cache,
+                                              window=_block_window(cfg, bt))
+        h_t = h_t + a
+        hin = layers.norm_apply(cfg, p["mlp_norm"], h_t)
+        y = moe.moe_apply(cfg, p["moe"], hin)[0] if cfg.is_moe \
+            else layers.mlp_apply(cfg, p["mlp"], hin)
+        return h_t + y, cache
+    if bt == "rec":
+        hin = layers.norm_apply(cfg, p["rec_norm"], h_t)
+        r, cache = rglru.rglru_decode_step(cfg, p["rec"], hin, cache)
+        h_t = h_t + r
+        y = layers.mlp_apply(cfg, p["mlp"], layers.norm_apply(cfg, p["mlp_norm"], h_t))
+        return h_t + y, cache
+    if bt == "mlstm":
+        hin = layers.norm_apply(cfg, p["cell"]["norm"], h_t)
+        y, cache = xlstm.mlstm_decode_step(cfg, p["cell"], hin, cache)
+        return h_t + y, cache
+    if bt == "slstm":
+        c = p["cell"]
+        hin = layers.norm_apply(cfg, c["norm"], h_t)
+        cache = xlstm._slstm_cell(cfg, c, hin, cache)
+        h_t = h_t + xlstm.slstm_cell_out(cfg, c, cache, h_t.dtype)
+        f = xlstm.slstm_ffn(cfg, c, layers.norm_apply(cfg, c["ffn_norm"], h_t))
+        return h_t + f, cache
+    raise ValueError(bt)
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+class LM:
+    """Decoder-only language model (dense / MoE / SSM / hybrid / VLM)."""
+
+    def __init__(self, cfg: ModelConfig, remat: bool = True,
+                 remat_policy: Optional[Any] = None):
+        self.cfg = cfg
+        self.pattern = cfg.block_pattern
+        self.n_units, self.n_rem = cfg.pattern_counts
+        self.remat = remat
+        self.remat_policy = remat_policy
+
+    # ---- init -----------------------------------------------------------
+    def init(self, key, dtype=jnp.float32) -> Dict:
+        cfg = self.cfg
+        k_embed, k_units, k_rem, k_head, k_proj = jax.random.split(key, 5)
+        params: Dict[str, Any] = {"embed": layers.embed_init(k_embed, cfg, dtype)}
+
+        def unit_init(k):
+            ks = jax.random.split(k, len(self.pattern))
+            return tuple(block_init(ks[j], cfg, bt, dtype)
+                         for j, bt in enumerate(self.pattern))
+
+        unit_keys = jax.random.split(k_units, self.n_units)
+        params["units"] = jax.vmap(unit_init)(unit_keys)
+        rem_keys = jax.random.split(k_rem, max(self.n_rem, 1))
+        params["rem"] = tuple(
+            block_init(rem_keys[j], cfg, self.pattern[j], dtype)
+            for j in range(self.n_rem))
+        params["final_norm"] = layers.norm_init(cfg, cfg.d_model, dtype)
+        if not cfg.tie_embeddings:
+            params["head"] = {"w": layers.dense_init(k_head, cfg.d_model,
+                                                     cfg.padded_vocab, dtype)}
+        if cfg.n_prefix_tokens and cfg.prefix_dim:
+            params["projector"] = {
+                "w": layers.dense_init(k_proj, cfg.prefix_dim, cfg.d_model, dtype)}
+        return params
+
+    # ---- embedding ------------------------------------------------------
+    def _embed(self, params, tokens, positions, prefix_embeds):
+        cfg = self.cfg
+        h = layers.embed_apply(params["embed"], tokens)
+        if prefix_embeds is not None:
+            pre = layers.matmul(prefix_embeds.astype(h.dtype), params["projector"]["w"])
+            h = jnp.concatenate([pre, h], axis=1)
+            positions = jnp.concatenate(
+                [jnp.broadcast_to(jnp.arange(pre.shape[1], dtype=positions.dtype)[None],
+                                  (h.shape[0], pre.shape[1])),
+                 positions + pre.shape[1]], axis=1)
+        if cfg.rope_theta <= 0:  # additive sinusoidal positions (whisper-style)
+            pe = layers.sinusoidal_positions(cfg.max_position_embeddings, cfg.d_model)
+            h = h + jnp.take(pe, jnp.clip(positions, 0, pe.shape[0] - 1),
+                             axis=0).astype(h.dtype)
+        return h, positions
+
+    # ---- training / scoring forward --------------------------------------
+    def hidden_states(self, params, tokens, *, positions=None, segment_ids=None,
+                      prefix_embeds=None):
+        """Returns (hidden (B, P+S, d), aux dict of scalars)."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        h, positions = self._embed(params, tokens, positions, prefix_embeds)
+        h = constrain(h, "dp", None, None)
+        if segment_ids is not None and prefix_embeds is not None:
+            pseg = jnp.broadcast_to(segment_ids[:, :1], prefix_embeds.shape[:2])
+            segment_ids = jnp.concatenate([pseg, segment_ids], axis=1)
+
+        def unit_fn(h, unit_params):
+            aux = _zero_aux()
+            for j, bt in enumerate(self.pattern):
+                h, a = block_forward(cfg, bt, unit_params[j], h, positions, segment_ids)
+                h = constrain(h, "dp", None, None)
+                aux = jax.tree.map(lambda x, y: x + y, aux, a)
+            return h, aux
+
+        if self.remat:
+            unit_fn = jax.checkpoint(unit_fn, policy=self.remat_policy)
+
+        h, auxs = jax.lax.scan(lambda c, p: unit_fn(c, p), h, params["units"])
+        aux = jax.tree.map(lambda x: jnp.sum(x), auxs)
+        for j in range(self.n_rem):
+            h, a = block_forward(cfg, self.pattern[j], params["rem"][j], h,
+                                 positions, segment_ids)
+            aux = jax.tree.map(lambda x, y: x + y, aux, a)
+        h = layers.norm_apply(cfg, params["final_norm"], h)
+        return h, aux
+
+    def logits(self, params, hidden):
+        return layers.unembed_apply(params["embed"], params.get("head"),
+                                    hidden, self.cfg.tie_embeddings)
+
+    def forward(self, params, tokens, **kw):
+        h, aux = self.hidden_states(params, tokens, **kw)
+        return self.logits(params, h), aux
+
+    # ---- serving --------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.float32):
+        cfg = self.cfg
+        caches = []
+        for j, bt in enumerate(self.pattern):
+            single = block_init_cache(cfg, bt, batch, max_len, dtype)
+            stacked = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (self.n_units,) + x.shape), single)
+            caches.append(stacked)
+        rem = tuple(block_init_cache(cfg, self.pattern[j], batch, max_len, dtype)
+                    for j in range(self.n_rem))
+        return {"units": tuple(caches), "rem": rem, "t": jnp.zeros((batch,), jnp.int32)}
+
+    def prefill(self, params, tokens, cache, *, positions=None, prefix_embeds=None,
+                length=None):
+        """Process the prompt, fill the cache, return last-token logits.
+
+        length: (B,) actual prompt lengths (tokens beyond are padding).
+        """
+        cfg = self.cfg
+        b, s = tokens.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        if length is None:
+            length = jnp.full((b,), s, jnp.int32)
+        valid = positions < length[:, None]
+        h, positions = self._embed(params, tokens, positions, prefix_embeds)
+        if prefix_embeds is not None:
+            npre = prefix_embeds.shape[1]
+            length = length + npre
+            valid = jnp.concatenate([jnp.ones((b, npre), bool), valid], axis=1)
+
+        def unit_fn(h, xs):
+            unit_params, unit_cache = xs
+            new_cache = []
+            for j, bt in enumerate(self.pattern):
+                # valid mask keeps the padded tail inert during prefill
+                h2, c = block_prefill(cfg, bt, unit_params[j], h, positions,
+                                      unit_cache[j], valid=valid)
+                h = h2
+                new_cache.append(c)
+            return h, tuple(new_cache)
+
+        h, new_caches = jax.lax.scan(unit_fn, h, (params["units"], cache["units"]))
+        rem_caches = []
+        for j in range(self.n_rem):
+            h, c = block_prefill(cfg, self.pattern[j], params["rem"][j], h,
+                                 positions, cache["rem"][j], valid=valid)
+            rem_caches.append(c)
+        h = layers.norm_apply(cfg, params["final_norm"], h)
+        # logits at the last *real* token of each row
+        idx = jnp.clip(length - 1, 0, h.shape[1] - 1)
+        h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
+        logits = self.logits(params, h_last)
+        new_cache = {"units": new_caches, "rem": tuple(rem_caches), "t": length}
+        return logits, new_cache
+
+    def cache_insert(self, full, sub, slots):
+        """Scatter a sub-batch cache (from a group prefill) into the slot
+        cache at ``slots`` (int32 (G,)); out-of-range slot ids are dropped
+        (used to mask dummy admission rows).  ``units`` leaves are
+        (n_units, B, ...) — batch axis 1; ``rem``/``t`` are batch-major."""
+        ins_u = lambda x, y: x.at[:, slots].set(y.astype(x.dtype), mode="drop")
+        ins_b = lambda x, y: x.at[slots].set(y.astype(x.dtype), mode="drop")
+        return {
+            "units": jax.tree.map(ins_u, full["units"], sub["units"]),
+            "rem": jax.tree.map(ins_b, full["rem"], sub["rem"]),
+            "t": full["t"].at[slots].set(sub["t"], mode="drop"),
+        }
+
+    def decode_step(self, params, token, cache):
+        """token: (B,) int32.  Returns (logits (B, Vp), new cache)."""
+        cfg = self.cfg
+        b = token.shape[0]
+        t = cache["t"]                                    # (B,) position to write
+        h = layers.embed_apply(params["embed"], token)
+        if cfg.rope_theta <= 0:
+            pe = layers.sinusoidal_positions(cfg.max_position_embeddings, cfg.d_model)
+            h = h + jnp.take(pe, jnp.clip(t, 0, pe.shape[0] - 1), axis=0).astype(h.dtype)
+
+        def unit_fn(h, xs):
+            unit_params, unit_cache = xs
+            new_cache = []
+            for j, bt in enumerate(self.pattern):
+                h, c = block_decode(cfg, bt, unit_params[j], h, t, unit_cache[j])
+                new_cache.append(c)
+            return h, tuple(new_cache)
+
+        h, new_caches = jax.lax.scan(unit_fn, h, (params["units"], cache["units"]))
+        rem_caches = []
+        for j in range(self.n_rem):
+            h, c = block_decode(cfg, self.pattern[j], params["rem"][j], h, t,
+                                cache["rem"][j])
+            rem_caches.append(c)
+        h = layers.norm_apply(cfg, params["final_norm"], h)
+        logits = self.logits(params, h)
+        new_cache = {"units": new_caches, "rem": tuple(rem_caches), "t": t + 1}
+        return logits, new_cache

@@ -1,0 +1,365 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential) with exponential gating and
+log-space stabilization.
+
+mLSTM training/prefill uses the parallel (attention-like) form with the
+stabilized decay matrix D; decode uses the O(1) recurrent form with state
+(C, n, m).  The two are mathematically identical (tested).  sLSTM has a
+true recurrent dependency (R @ h_{t-1}) and runs as a lax.scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    inner = 2 * d
+    ks = jax.random.split(key, 10)
+    return {
+        "norm": layers.norm_init(cfg, d, dtype),
+        "w_x": layers.dense_init(ks[0], d, inner, dtype),
+        "w_z": layers.dense_init(ks[1], d, inner, dtype),
+        "conv": layers.causal_conv1d_init(ks[2], cfg.conv1d_width, inner, dtype),
+        "wq": layers.dense_init(ks[3], inner, inner, dtype),
+        "wk": layers.dense_init(ks[4], inner, inner, dtype),
+        "wv": layers.dense_init(ks[5], inner, inner, dtype),
+        "w_i": layers.dense_init(ks[6], inner, cfg.n_heads, dtype),
+        "w_f": layers.dense_init(ks[7], inner, cfg.n_heads, dtype),
+        "f_bias": jnp.full((cfg.n_heads,), 3.0, dtype),   # open forget gates
+        "out_norm": layers.head_norm_init(2 * d // cfg.n_heads, dtype),
+        "w_down": layers.dense_init(ks[8], inner, d, dtype),
+    }
+
+
+def _mlstm_qkv_gates(cfg: ModelConfig, p, x, segment_ids=None):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    inner = 2 * d
+    hd = inner // h
+    x_up = layers.matmul(x, p["w_x"])                     # (B,S,inner)
+    z = layers.matmul(x, p["w_z"])
+    xc = layers.causal_conv1d_apply(p["conv"], x_up, segment_ids)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    q = layers.matmul(xc, p["wq"]).reshape(b, s, h, hd)
+    k = layers.matmul(xc, p["wk"]).reshape(b, s, h, hd) / jnp.sqrt(hd).astype(x.dtype)
+    v = layers.matmul(x_up, p["wv"]).reshape(b, s, h, hd)
+    log_i = layers.matmul(xc, p["w_i"]).astype(jnp.float32)                      # (B,S,H)
+    log_f = jax.nn.log_sigmoid(
+        layers.matmul(xc, p["w_f"]).astype(jnp.float32) + p["f_bias"].astype(jnp.float32))
+    return x_up, z, q, k, v, log_i, log_f
+
+
+def _mlstm_out(cfg: ModelConfig, p, h_tilde, z, shape):
+    h_n = layers.head_norm_apply(p["out_norm"], h_tilde)
+    h_flat = h_n.reshape(shape[:-1] + (2 * cfg.d_model,))
+    gated = h_flat * jax.nn.silu(z.astype(jnp.float32)).astype(h_flat.dtype)
+    return layers.matmul(gated, p["w_down"])
+
+
+def mlstm_forward(cfg: ModelConfig, p, x, segment_ids=None, valid=None):
+    """Parallel (quadratic) form.  x: (B, S, d) (pre-normed by caller).
+
+    valid: (B, S) bool — padded steps are identity transitions
+    (log f = 0, log i = -inf), so prefill states ignore padding.
+    """
+    b, s, d = x.shape
+    x_up, z, q, k, v, log_i, log_f = _mlstm_qkv_gates(cfg, p, x, segment_ids)
+    if valid is not None:
+        log_f = jnp.where(valid[..., None], log_f, 0.0)
+        log_i = jnp.where(valid[..., None], log_i, NEG_INF)
+
+    cf = jnp.cumsum(log_f, axis=1)                        # F_t (B,S,H)
+    # D[t, s'] = F_t - F_s' + log i_s'  for s' <= t
+    dmat = (cf[:, :, None, :] - cf[:, None, :, :]
+            + log_i[:, None, :, :])                       # (B, Sq, Sk, H)
+    mask = jnp.tril(jnp.ones((s, s), bool))[None, :, :, None]
+    if segment_ids is not None:
+        mask = mask & (segment_ids[:, :, None, None] == segment_ids[:, None, :, None])
+    dmat = jnp.where(mask, dmat, NEG_INF)
+    m = jnp.max(dmat, axis=2, keepdims=True)              # (B, Sq, 1, H)
+    w = jnp.exp(dmat - m)                                 # stabilized decay weights
+    scores = jnp.einsum("bqhd,bkhd->bqkh", q.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    sw = scores * w
+    num = jnp.einsum("bqkh,bkhd->bqhd", sw, v.astype(jnp.float32))
+    den = jnp.abs(jnp.sum(sw, axis=2))                    # (B,S,H)
+    den = jnp.maximum(den, jnp.exp(-m[:, :, 0, :]))
+    h_tilde = (num / den[..., None]).astype(x.dtype)
+    return _mlstm_out(cfg, p, h_tilde, z, x.shape)
+
+
+BOUNDARY_LOG_F = -30.0     # "forget gate ~ 0" at packed-segment boundaries;
+                           # exp(-30) ~ 1e-13 leaks nothing at fp32 while
+                           # keeping cumulative-sum magnitudes precise
+
+
+def mlstm_forward_chunked(cfg: ModelConfig, p, x, valid=None, segment_ids=None,
+                          chunk: int = 256, return_state: bool = False):
+    """Chunkwise-parallel mLSTM: O(S*chunk) memory instead of O(S^2).
+
+    Within each chunk the stabilized parallel form runs as in
+    ``mlstm_forward``; across chunks a recurrent state (C, n, m) carries —
+    identical math to the O(1) decode recurrence, so chunked == quadratic
+    == stepwise (tested).  The chunk body is rematerialized on backward.
+    """
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    inner = 2 * d
+    hd = inner // nh
+    x_up, z, q, k, v, log_i, log_f = _mlstm_qkv_gates(cfg, p, x, segment_ids)
+    if valid is not None:
+        log_f = jnp.where(valid[..., None], log_f, 0.0)
+        log_i = jnp.where(valid[..., None], log_i, NEG_INF)
+    if segment_ids is not None:
+        first = jnp.concatenate(
+            [jnp.ones_like(segment_ids[:, :1], bool),
+             segment_ids[:, 1:] != segment_ids[:, :-1]], axis=1)
+        log_f = jnp.where(first[..., None], BOUNDARY_LOG_F, log_f)
+
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))           # f=1
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=NEG_INF)                      # i=0
+    nc = q.shape[1] // chunk
+
+    def to_chunks(a):
+        return jnp.moveaxis(a.reshape(b, nc, chunk, *a.shape[2:]), 1, 0)
+
+    qs, ks, vs = to_chunks(q.astype(jnp.float32)), to_chunks(k.astype(jnp.float32)), \
+        to_chunks(v.astype(jnp.float32))
+    lis, lfs = to_chunks(log_i), to_chunks(log_f)
+
+    c0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, nh, hd), jnp.float32)
+    m0 = jnp.full((b, nh), NEG_INF, jnp.float32)
+    tril = jnp.tril(jnp.ones((chunk, chunk), bool))[None, :, :, None]
+
+    def body(carry, xs):
+        c_prev, n_prev, m_prev = carry
+        qc, kc, vc, lic, lfc = xs
+        f_cum = jnp.cumsum(lfc, axis=1)                       # (B,c,H)
+        dmat = (f_cum[:, :, None, :] - f_cum[:, None, :, :]
+                + lic[:, None, :, :])                         # (B,cq,cs,H)
+        dmat = jnp.where(tril, dmat, NEG_INF)
+        m_intra = jnp.max(dmat, axis=2)                       # (B,c,H)
+        b_inter = f_cum + m_prev[:, None, :]                  # (B,c,H)
+        m_t = jnp.maximum(m_intra, b_inter)
+        w = jnp.where(tril, jnp.exp(dmat - m_t[:, :, None, :]), 0.0)
+        scores = jnp.einsum("bqhd,bkhd->bqkh", qc, kc)        # (B,cq,cs,H)
+        sw = scores * w
+        num = jnp.einsum("bqkh,bkhd->bqhd", sw, vc)
+        inter_scale = jnp.exp(b_inter - m_t)                  # (B,c,H)
+        num = num + inter_scale[..., None] * jnp.einsum("bqhd,bhde->bqhe", qc, c_prev)
+        den = jnp.sum(sw, axis=2) + inter_scale * jnp.einsum("bqhd,bhd->bqh", qc, n_prev)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        h = num / den[..., None]                              # (B,c,H,hd)
+
+        # ---- state update to chunk end -------------------------------------
+        f_total = f_cum[:, -1, :]                             # (B,H)
+        d_last = f_total[:, None, :] - f_cum + lic            # (B,c,H)
+        m_state = jnp.maximum(f_total + m_prev, jnp.max(d_last, axis=1))
+        w_last = jnp.exp(d_last - m_state[:, None, :])
+        decay = jnp.exp(f_total + m_prev - m_state)
+        c_new = decay[..., None, None] * c_prev + jnp.einsum(
+            "bsh,bshd,bshe->bhde", w_last, kc, vc)
+        n_new = decay[..., None] * n_prev + jnp.einsum("bsh,bshd->bhd", w_last, kc)
+        return (c_new, n_new, m_state), h
+
+    body = jax.checkpoint(body)
+    (c_f, n_f, m_f), hs = jax.lax.scan(body, (c0, n0, m0), (qs, ks, vs, lis, lfs))
+    h_tilde = jnp.moveaxis(hs, 0, 1).reshape(b, nc * chunk, nh, hd)[:, :s]
+    out = _mlstm_out(cfg, p, h_tilde.astype(x.dtype), z, x.shape)
+    if not return_state:
+        return out
+    if valid is not None:
+        w = cfg.conv1d_width - 1
+        length = jnp.sum(valid.astype(jnp.int32), axis=1)
+        idx = length[:, None] - w + jnp.arange(w)[None, :]
+        ok = idx >= 0
+        conv_hist = jnp.take_along_axis(
+            x_up, jnp.clip(idx, 0, x_up.shape[1] - 1)[..., None], axis=1)
+        conv_hist = jnp.where(ok[..., None], conv_hist, 0.0)
+    else:
+        conv_hist = x_up[:, -(cfg.conv1d_width - 1):, :]
+        padw = cfg.conv1d_width - 1 - conv_hist.shape[1]
+        if padw > 0:
+            conv_hist = jnp.pad(conv_hist, ((0, 0), (padw, 0), (0, 0)))
+    return out, {"C": c_f, "n": n_f, "m": m_f, "conv": conv_hist}
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = 2 * d // h
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), NEG_INF, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, 2 * d), dtype),
+    }
+
+
+def mlstm_decode_step(cfg: ModelConfig, p, x_t, state):
+    """x_t: (B, d) pre-normed.  O(1) recurrent step."""
+    b, d = x_t.shape
+    h = cfg.n_heads
+    inner = 2 * d
+    hd = inner // h
+    x_up = layers.matmul(x_t, p["w_x"])                   # (B, inner)
+    z = layers.matmul(x_t, p["w_z"])
+    conv_state, xc = layers.causal_conv1d_step(p["conv"], state["conv"], x_up)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x_t.dtype)
+    q = layers.matmul(xc, p["wq"]).reshape(b, h, hd).astype(jnp.float32)
+    k = (layers.matmul(xc, p["wk"]).reshape(b, h, hd) / jnp.sqrt(hd)).astype(jnp.float32)
+    v = layers.matmul(x_up, p["wv"]).reshape(b, h, hd).astype(jnp.float32)
+    log_i = layers.matmul(xc, p["w_i"]).astype(jnp.float32)          # (B, H)
+    log_f = jax.nn.log_sigmoid(
+        layers.matmul(xc, p["w_f"]).astype(jnp.float32) + p["f_bias"].astype(jnp.float32))
+
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    decay = jnp.exp(log_f + state["m"] - m_new)[..., None]
+    inject = jnp.exp(log_i - m_new)[..., None]
+    c_new = state["C"] * decay[..., None] + inject[..., None] * (k[..., :, None] * v[..., None, :])
+    n_new = state["n"] * decay + inject * k
+    num = jnp.einsum("bhd,bhde->bhe", q, c_new)
+    den = jnp.maximum(jnp.abs(jnp.sum(n_new * q, axis=-1)), jnp.exp(-m_new))
+    h_tilde = (num / den[..., None]).astype(x_t.dtype)
+    out = _mlstm_out(cfg, p, h_tilde, z, x_t.shape)
+    return out, {"C": c_new, "n": n_new, "m": m_new, "conv": conv_state}
+
+
+def mlstm_prefill_state(cfg: ModelConfig, p, x, valid=None):
+    """Parallel forward AND final recurrent state (for decode continuation)."""
+    b, s, d = x.shape
+    out = mlstm_forward(cfg, p, x, valid=valid)
+    x_up, z, q, k, v, log_i, log_f = _mlstm_qkv_gates(cfg, p, x)
+    if valid is not None:
+        log_f = jnp.where(valid[..., None], log_f, 0.0)
+        log_i = jnp.where(valid[..., None], log_i, NEG_INF)
+    cf = jnp.cumsum(log_f, axis=1)
+    # state after step S: weights w_s = exp(F_S - F_s + log i_s - m_S)
+    d_last = cf[:, -1:, :] - cf + log_i                   # (B,S,H)
+    m_last = jnp.max(d_last, axis=1)                      # (B,H)
+    w_last = jnp.exp(d_last - m_last[:, None, :])
+    c_state = jnp.einsum("bsh,bshd,bshe->bhde", w_last, k.astype(jnp.float32),
+                         v.astype(jnp.float32))
+    n_state = jnp.einsum("bsh,bshd->bhd", w_last, k.astype(jnp.float32))
+    if valid is not None:
+        w = cfg.conv1d_width - 1
+        length = jnp.sum(valid.astype(jnp.int32), axis=1)
+        idx = length[:, None] - w + jnp.arange(w)[None, :]
+        ok = idx >= 0
+        conv_hist = jnp.take_along_axis(
+            x_up, jnp.clip(idx, 0, x_up.shape[1] - 1)[..., None], axis=1)
+        conv_hist = jnp.where(ok[..., None], conv_hist, 0.0)
+    else:
+        conv_hist = x_up[:, -(cfg.conv1d_width - 1):, :]
+        pad = cfg.conv1d_width - 1 - conv_hist.shape[1]
+        if pad > 0:
+            conv_hist = jnp.pad(conv_hist, ((0, 0), (pad, 0), (0, 0)))
+    state = {"C": c_state, "n": n_state, "m": m_last, "conv": conv_hist}
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    pf = (4 * d) // 3
+    ks = jax.random.split(key, 11)
+    p = {"norm": layers.norm_init(cfg, d, dtype),
+         "ffn_norm": layers.norm_init(cfg, d, dtype),
+         "w_up": layers.dense_init(ks[8], d, pf, dtype),
+         "w_down": layers.dense_init(ks[9], pf, d, dtype)}
+    for i, g in enumerate(("i", "f", "z", "o")):
+        p[f"w_{g}"] = layers.dense_init(ks[i], d, d, dtype)
+        p[f"r_{g}"] = layers.dense_init(ks[4 + i], d, d, dtype, scale=0.5 / d ** 0.5)
+    p["f_bias"] = jnp.full((d,), 3.0, dtype)
+    return p
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    return {"h": z(), "c": z(), "n": z(), "m": jnp.full((batch, d), NEG_INF, jnp.float32)}
+
+
+def _slstm_cell(cfg: ModelConfig, p, x_t, state):
+    """x_t: (B, d) pre-normed; state dict of (B, d) fp32."""
+    hp = state["h"].astype(x_t.dtype)
+    pre = lambda g: (layers.matmul(x_t, p[f"w_{g}"])
+                     + layers.matmul(hp, p[f"r_{g}"])).astype(jnp.float32)
+    log_i = pre("i")
+    log_f = jax.nn.log_sigmoid(pre("f") + p["f_bias"].astype(jnp.float32))
+    z = jnp.tanh(pre("z"))
+    o = jax.nn.sigmoid(pre("o"))
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    c_new = jnp.exp(log_f + state["m"] - m_new) * state["c"] + jnp.exp(log_i - m_new) * z
+    n_new = jnp.exp(log_f + state["m"] - m_new) * state["n"] + jnp.exp(log_i - m_new)
+    h_new = o * c_new / jnp.maximum(n_new, jnp.exp(-m_new))
+    return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm_cell_out(cfg: ModelConfig, p, state, dtype):
+    return state["h"].astype(dtype)
+
+
+def slstm_forward(cfg: ModelConfig, p, x, state=None, valid=None,
+                  segment_ids=None):
+    """Sequential scan over time.  x: (B, S, d) pre-normed.
+    Returns (out (B,S,d), final_state).
+
+    valid: padded steps leave the state untouched.  segment_ids: the state
+    resets at segment boundaries (packed training sequences).
+    """
+    b, s, d = x.shape
+    if state is None:
+        state = slstm_init_state(cfg, b)
+    if valid is None:
+        valid = jnp.ones((b, s), bool)
+    if segment_ids is not None:
+        first = jnp.concatenate(
+            [jnp.ones_like(segment_ids[:, :1], bool),
+             segment_ids[:, 1:] != segment_ids[:, :-1]], axis=1)
+    else:
+        first = jnp.zeros((b, s), bool)
+    init = slstm_init_state(cfg, b)
+
+    def step(st, inp):
+        x_t, valid_t, first_t = inp
+        st_in = jax.tree.map(
+            lambda cur, i0: jnp.where(first_t[:, None], i0, cur), st, init)
+        st_new = _slstm_cell(cfg, p, x_t, st_in)
+        st_out = jax.tree.map(
+            lambda new, old: jnp.where(valid_t[:, None], new, old), st_new, st_in)
+        return st_out, st_out["h"]
+
+    state, hs = jax.lax.scan(
+        step, state,
+        (jnp.moveaxis(x, 1, 0), jnp.moveaxis(valid, 1, 0), jnp.moveaxis(first, 1, 0)))
+    out = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    return out, state
+
+
+def slstm_ffn(cfg: ModelConfig, p, h):
+    up = layers.matmul(h, p["w_up"])
+    up = jax.nn.gelu(up.astype(jnp.float32)).astype(h.dtype)
+    return layers.matmul(up, p["w_down"])

@@ -1,0 +1,49 @@
+"""Critic-free advantage estimators (GRPO / RLOO / MC)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import advantages as A
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 8), st.integers(2, 16), st.integers(0, 2**31 - 1))
+def test_grpo_mean_zero_per_group(n_groups, group_size, seed):
+    rng = np.random.default_rng(seed)
+    rewards = rng.normal(size=n_groups * group_size)
+    gids = np.repeat(np.arange(n_groups), group_size)
+    adv = A.group_advantages(rewards, gids, "grpo")
+    for g in range(n_groups):
+        assert abs(adv[gids == g].mean()) < 1e-5
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 8), st.integers(2, 16), st.integers(0, 2**31 - 1))
+def test_rloo_mean_zero_per_group(n_groups, group_size, seed):
+    rng = np.random.default_rng(seed)
+    rewards = rng.normal(size=n_groups * group_size)
+    gids = np.repeat(np.arange(n_groups), group_size)
+    adv = A.group_advantages(rewards, gids, "rloo")
+    for g in range(n_groups):
+        assert abs(adv[gids == g].mean()) < 1e-5
+
+
+def test_rloo_leave_one_out_exact():
+    rewards = np.array([1.0, 3.0, 5.0])
+    gids = np.zeros(3, int)
+    adv = A.group_advantages(rewards, gids, "rloo")
+    np.testing.assert_allclose(adv, [1 - 4, 3 - 3, 5 - 2])
+
+
+def test_grpo_constant_group_is_zero():
+    """All-same rewards (all correct / all wrong) give zero advantage —
+    the GRPO no-signal case."""
+    rewards = np.full(8, 5.0)
+    adv = A.group_advantages(rewards, np.zeros(8, int), "grpo")
+    np.testing.assert_allclose(adv, 0.0, atol=1e-4)
+
+
+def test_normalize_global():
+    rng = np.random.default_rng(0)
+    adv = A.normalize_global(rng.normal(3.0, 7.0, 1000))
+    assert abs(adv.mean()) < 1e-4
+    assert abs(adv.std() - 1.0) < 1e-3

@@ -1,0 +1,30 @@
+"""Replay buffer semantics: oldest-first priority, use-once."""
+from repro.core.buffer import ReplayBuffer, Trajectory
+
+
+def _traj(rid, version):
+    return Trajectory(rid=rid, prompt_id=rid, prompt_tokens=[1],
+                      response_tokens=[2], behav_logprobs=[0.0],
+                      versions=[version], behavior_version=version)
+
+
+def test_use_once_and_oldest_first():
+    buf = ReplayBuffer()
+    for rid, v in [(0, 3), (1, 1), (2, 2), (3, 1), (4, 0)]:
+        buf.add(_traj(rid, v))
+    assert buf.pop_batch(10) is None          # not enough for batch of 10
+    batch = buf.pop_batch(3)
+    assert [t.rid for t in batch] == [4, 1, 3]   # oldest versions first
+    assert len(buf) == 2
+    batch2 = buf.pop_batch(2)
+    assert [t.rid for t in batch2] == [2, 0]
+    assert buf.pop_batch(1) is None           # everything consumed exactly once
+    assert buf.total_added == 5 and buf.total_consumed == 5
+
+
+def test_trajectory_properties():
+    t = Trajectory(rid=0, prompt_id=0, prompt_tokens=[1, 2, 3],
+                   response_tokens=[4, 5], behav_logprobs=[-1.0, -2.0],
+                   versions=[0, 1], behavior_version=0)
+    assert t.length == 5
+    assert t.n_versions == 2

@@ -1,0 +1,25 @@
+"""Checkpoint roundtrip with nested pytrees + optimizer state + metadata."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint, optim
+
+
+def test_roundtrip(tmp_path):
+    params = {"embed": {"table": jnp.arange(12, dtype=jnp.float32).reshape(3, 4)},
+              "units": (({"w": jnp.ones((2, 2), jnp.bfloat16)},),),
+              "scale": jnp.array([1.5])}
+    opt = optim.init_state(params)
+    opt["step"] = jnp.int32(7)
+    path = str(tmp_path / "ckpt.npz")
+    checkpoint.save(path, params, opt_state=opt, meta={"version": 42})
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), params)
+    opt_like = jax.tree.map(lambda x: jnp.zeros_like(x), opt)
+    p2, o2, meta = checkpoint.load(path, like, opt_like)
+    assert meta["version"] == 42
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+    assert int(o2["step"]) == 7

@@ -1,0 +1,83 @@
+"""Controller semantics: synchronous degeneration at eta=0, staleness
+bounds, async-vs-sync throughput (simulator), interruptible ablation."""
+import numpy as np
+
+from repro.configs.base import RLConfig
+from repro.core import AsyncRLController, TimingModel
+from repro.core.simulator import (HardwareModel, SimEngine, SimPromptStream,
+                                  SimTrainer, WorkloadModel, make_llm_timing)
+
+
+def _sim_controller(eta, *, colocated=False, interruptible=True,
+                    n_slots=64, batch=64, mean_len=200, seed=0):
+    hw = HardwareModel()
+    wl = WorkloadModel(n_params=1e9)
+    timing = make_llm_timing(hw, wl, n_gen_devices=24 if not colocated else 32,
+                             n_train_devices=8 if not colocated else 32,
+                             colocated=colocated)
+    rl = RLConfig(batch_size=batch, max_staleness=eta,
+                  interruptible=interruptible)
+    eng = SimEngine(n_slots=n_slots, mean_len=mean_len, max_len=2048,
+                    prompt_len=64, seed=seed)
+    return AsyncRLController(engine=eng, trainer=SimTrainer(),
+                             prompt_stream=SimPromptStream(64), rl=rl,
+                             timing=timing)
+
+
+def test_eta_zero_gives_zero_staleness():
+    ctl = _sim_controller(eta=0)
+    hist = ctl.run(5)
+    assert all(h.staleness_max == 0 for h in hist)
+
+
+def test_staleness_tracks_eta():
+    ctl = _sim_controller(eta=4)
+    hist = ctl.run(8)
+    assert max(h.staleness_max for h in hist) >= 1      # genuinely async
+    # Eq. 3 bounds SUBMISSION; stragglers may exceed eta by a small margin
+    assert max(h.staleness_max for h in hist) <= 4 + 2
+
+
+def test_async_beats_colocated_sync_throughput():
+    """The paper's headline: same devices, decoupled async >> colocated
+    sync (Table 1 / Fig. 4 direction)."""
+    sync = _sim_controller(eta=0, colocated=True)
+    sync.run(6)
+    async_ = _sim_controller(eta=4)
+    async_.run(6)
+    assert async_.effective_throughput() > 1.5 * sync.effective_throughput()
+
+
+def test_interruptible_improves_generation_throughput():
+    """Fig. 6b: without interruption the engine drains before weight
+    updates, wasting generation time."""
+    a = _sim_controller(eta=2, interruptible=True, seed=1)
+    a.run(6)
+    b = _sim_controller(eta=2, interruptible=False, seed=1)
+    b.run(6)
+    assert a.history[-1].clock < b.history[-1].clock
+
+
+def test_buffer_used_once():
+    ctl = _sim_controller(eta=2)
+    ctl.run(4)
+    assert ctl.buffer.total_consumed == 4 * ctl.rl.batch_size
+    assert ctl.buffer.total_added >= ctl.buffer.total_consumed
+
+
+def test_stall_guard_raises():
+    import pytest
+    ctl = _sim_controller(eta=0, batch=512, n_slots=4)  # can never fill batch
+    # 4 slots, batch 512, eta 0 -> after 512 submissions... admissible but
+    # n_slots bounds concurrency; should still progress. Force a real stall:
+    ctl.stal.n_submitted = 10**9                         # exhaust Eq. 3 budget
+    with pytest.raises(RuntimeError):
+        ctl.run(1)
+
+
+def test_virtual_clock_monotone():
+    ctl = _sim_controller(eta=2)
+    hist = ctl.run(5)
+    clocks = [h.clock for h in hist]
+    assert clocks == sorted(clocks)
+    assert all(np.isfinite(c) for c in clocks)

@@ -1,0 +1,46 @@
+"""Synthetic task, verifier, tokenizer properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import tasks, tokenizer
+from repro.data.dataset import PromptStream
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.text(alphabet="0123456789+-*/=() .,?abcdefghijklmnopqrstuvwxyz",
+               max_size=64))
+def test_tokenizer_roundtrip(text):
+    assert tokenizer.decode(tokenizer.encode(text)) == text.lower()
+
+
+def test_verifier_exact_match():
+    assert tasks.verify("the answer is 42", "42")
+    assert tasks.verify(" 42 ", "42")
+    assert tasks.verify("-7 because", "-7")
+    assert not tasks.verify("43", "42")
+    assert not tasks.verify("no digits here", "42")
+    assert tasks.verify("042", "42")           # int comparison
+
+
+def test_generator_answers_correct():
+    gen = tasks.MathTaskGenerator(seed=3)
+    for _ in range(50):
+        p = gen.sample()
+        # answer must verify against its own prompt semantics
+        a, op, b = p.prompt_text.split()[1:4]
+        expect = {"+": int(a) + int(b), "-": int(a) - int(b),
+                  "*": int(a) * int(b)}[op]
+        assert int(p.answer) == expect
+        assert len(p.prompt_tokens) < 24
+
+
+def test_prompt_stream_groups():
+    s = PromptStream(seed=1, answers_per_prompt=4)
+    gids = [s.next_request()[1] for _ in range(12)]
+    assert gids == [0] * 4 + [1] * 4 + [2] * 4
+
+
+def test_generator_deterministic():
+    a = [tasks.MathTaskGenerator(seed=9).sample().prompt_text for _ in range(1)]
+    b = [tasks.MathTaskGenerator(seed=9).sample().prompt_text for _ in range(1)]
+    assert a == b

@@ -1,0 +1,142 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes/dtypes, plus chunked-variant equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _mk(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+FA_CASES = [
+    # b, s, h, hkv, hd, window, segs
+    (1, 64, 4, 4, 32, 0, False),
+    (2, 128, 4, 2, 64, 0, True),
+    (1, 96, 8, 1, 80, 32, False),     # MQA + SWA + non-128 hd
+    (2, 256, 2, 2, 128, 0, True),
+    (1, 128, 4, 2, 16, 16, True),
+]
+
+
+@pytest.mark.parametrize("b,s,h,hkv,hd,window,segs", FA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_pallas_vs_ref(b, s, h, hkv, hd, window, segs, dtype):
+    q = _mk((b, s, h, hd), dtype)
+    k = _mk((b, s, hkv, hd), dtype)
+    v = _mk((b, s, hkv, hd), dtype)
+    seg = jnp.asarray(np.sort(RNG.integers(0, 4, size=(b, s)), axis=1),
+                      jnp.int32) if segs else None
+    o_ref = ops.flash_attention(q, k, v, seg, window=window, backend="jnp")
+    o_pl = ops.flash_attention(q, k, v, seg, window=window,
+                               backend="pallas_interpret")
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o_pl, np.float32),
+                               np.asarray(o_ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("b,s,h,hkv,hd,window,segs", FA_CASES[:3])
+def test_flash_attention_chunked_vs_quadratic(b, s, h, hkv, hd, window, segs):
+    q = _mk((b, s, h, hd))
+    k = _mk((b, s, hkv, hd))
+    v = _mk((b, s, hkv, hd))
+    seg = jnp.asarray(np.sort(RNG.integers(0, 3, size=(b, s)), axis=1),
+                      jnp.int32) if segs else None
+    o1 = ref.flash_attention(q, k, v, segment_ids=seg, window=window)
+    o2 = ref.flash_attention_chunked(q, k, v, segment_ids=seg, window=window,
+                                     chunk=32)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(o1), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_chunked_grads_match():
+    q = _mk((1, 64, 2, 32))
+    k = _mk((1, 64, 2, 32))
+    v = _mk((1, 64, 2, 32))
+
+    def f_quad(q, k, v):
+        return (ref.flash_attention(q, k, v) ** 2).sum()
+
+    def f_chunk(q, k, v):
+        return (ref.flash_attention_chunked(q, k, v, chunk=16) ** 2).sum()
+
+    g1 = jax.grad(f_quad, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_chunk, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   atol=1e-4, rtol=1e-4)
+
+
+DA_CASES = [
+    (1, 4, 4, 32, 64, 0),
+    (2, 8, 2, 64, 128, 0),
+    (3, 8, 1, 80, 96, 16),             # MQA, window, ragged W
+    (1, 16, 4, 128, 256, 64),
+]
+
+
+@pytest.mark.parametrize("b,h,hkv,hd,w,window", DA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_pallas_vs_ref(b, h, hkv, hd, w, window, dtype):
+    q = _mk((b, h, hd), dtype)
+    kc = _mk((b, w, hkv, hd), dtype)
+    vc = _mk((b, w, hkv, hd), dtype)
+    pos = np.tile(np.arange(w), (b, 1))
+    pos[RNG.random((b, w)) < 0.3] = -1                  # empty ring slots
+    pos = jnp.asarray(pos, jnp.int32)
+    t = jnp.asarray(RNG.integers(w // 2, w, size=(b,)), jnp.int32)
+    o_ref = ops.decode_attention(q, kc, vc, pos, t, window=window, backend="jnp")
+    o_pl = ops.decode_attention(q, kc, vc, pos, t, window=window,
+                                backend="pallas_interpret")
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o_pl, np.float32),
+                               np.asarray(o_ref, np.float32), atol=tol, rtol=tol)
+
+
+LS_CASES = [(1, 32, 16), (2, 64, 64), (1, 100, 200), (3, 256, 128)]
+
+
+@pytest.mark.parametrize("b,s,c", LS_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_linear_scan_pallas_vs_ref(b, s, c, dtype):
+    a = jnp.asarray(RNG.uniform(0.7, 1.0, size=(b, s, c)), dtype)
+    x = _mk((b, s, c), dtype)
+    h0 = _mk((b, c), dtype)
+    h1, l1 = ops.linear_scan(a, x, h0, backend="jnp")
+    h2, l2 = ops.linear_scan(a, x, h0, backend="pallas_interpret")
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(h2, np.float32),
+                               np.asarray(h1, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(l2, np.float32),
+                               np.asarray(l1, np.float32), atol=tol, rtol=tol)
+
+
+def test_linear_scan_matches_stepwise():
+    b, s, c = 2, 37, 8
+    a = jnp.asarray(RNG.uniform(0.5, 1.0, size=(b, s, c)), jnp.float32)
+    x = _mk((b, s, c))
+    h0 = _mk((b, c))
+    h, h_last = ref.linear_scan(a, x, h0)
+    cur = np.asarray(h0)
+    for t in range(s):
+        cur = np.asarray(a[:, t]) * cur + np.asarray(x[:, t])
+        np.testing.assert_allclose(np.asarray(h[:, t]), cur, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_last), cur, atol=1e-5, rtol=1e-5)
+
+
+def test_decode_attention_matches_flash_last_token():
+    """Decode against a cache == last row of full causal attention."""
+    b, s, h, hkv, hd = 2, 33, 4, 2, 32
+    q_all = _mk((b, s, h, hd))
+    k_all = _mk((b, s, hkv, hd))
+    v_all = _mk((b, s, hkv, hd))
+    full = ref.flash_attention(q_all, k_all, v_all)
+    pos = jnp.tile(jnp.arange(s)[None], (b, 1))
+    t = jnp.full((b,), s - 1, jnp.int32)
+    dec = ref.decode_attention(q_all[:, -1], k_all, v_all, pos, t)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, -1]),
+                               atol=2e-5, rtol=2e-5)

@@ -1,0 +1,53 @@
+"""AdamW + clipping + schedule."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+
+
+def test_adam_converges_quadratic():
+    cfg = optim.AdamConfig(lr=0.1, weight_decay=0.0, grad_clip=1e9,
+                           warmup_steps=1)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = optim.init_state(params)
+    target = jnp.array([1.0, 2.0])
+    for _ in range(300):
+        grads = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, state, m = optim.apply_updates(cfg, params, grads, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_grad_clip_global_norm():
+    g = {"a": jnp.full((4,), 100.0), "b": jnp.full((2,), -100.0)}
+    clipped, norm = optim.clip_by_global_norm(g, 1.0)
+    assert float(norm) > 1.0
+    total = float(optim.global_norm(clipped))
+    assert abs(total - 1.0) < 1e-5
+
+
+def test_warmup_schedule():
+    cfg = optim.AdamConfig(lr=1e-3, warmup_steps=10)
+    assert float(optim.schedule(cfg, jnp.int32(0))) < 1e-3 * 0.2
+    assert abs(float(optim.schedule(cfg, jnp.int32(100))) - 1e-3) < 1e-9
+
+
+def test_weight_decay_pulls_to_zero():
+    cfg = optim.AdamConfig(lr=0.05, weight_decay=0.5, grad_clip=1e9)
+    params = {"w": jnp.array([4.0])}
+    state = optim.init_state(params)
+    for _ in range(200):
+        grads = {"w": jnp.zeros(1)}
+        params, state, _ = optim.apply_updates(cfg, params, grads, state)
+    assert abs(float(params["w"][0])) < 0.1
+
+
+def test_state_dtypes_fp32():
+    params = {"w": jnp.ones((3,), jnp.bfloat16)}
+    state = optim.init_state(params)
+    assert state["m"]["w"].dtype == jnp.float32
+    assert state["v"]["w"].dtype == jnp.float32
+    cfg = optim.AdamConfig()
+    p2, s2, _ = optim.apply_updates(cfg, params, {"w": jnp.ones(3, jnp.bfloat16)}, state)
+    assert p2["w"].dtype == jnp.bfloat16      # params keep their dtype

@@ -1,0 +1,114 @@
+"""PPO objective properties (Eq. 2 vs Eq. 5), including hypothesis
+property tests on the decoupled objective's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ppo
+
+RNG = np.random.default_rng(0)
+
+
+def _inputs(n=64, stale=0.0):
+    lp_behav = jnp.asarray(RNG.normal(-1.5, 0.5, n), jnp.float32)
+    lp_prox = lp_behav + stale * jnp.asarray(RNG.normal(0, 0.3, n), jnp.float32)
+    lp_new = lp_prox + jnp.asarray(RNG.normal(0, 0.1, n), jnp.float32)
+    adv = jnp.asarray(RNG.normal(0, 1, n), jnp.float32)
+    mask = jnp.asarray(RNG.random(n) < 0.8, jnp.float32)
+    return lp_new, lp_behav, lp_prox, adv, mask
+
+
+def test_decoupled_reduces_to_standard_when_prox_equals_behav():
+    """Eq. 5 with pi_prox == pi_behav IS Eq. 2 (paper Sec 5.2)."""
+    lp_new, lp_behav, _, adv, mask = _inputs()
+    l_dec, _ = ppo.ppo_loss(lp_new, lp_behav, lp_behav, adv, mask, decoupled=True)
+    l_std, _ = ppo.ppo_loss(lp_new, lp_behav, lp_behav, adv, mask, decoupled=False)
+    np.testing.assert_allclose(float(l_dec), float(l_std), rtol=1e-6)
+
+
+def test_gradient_zero_outside_mask():
+    lp_new, lp_behav, lp_prox, adv, mask = _inputs()
+
+    def loss(lp):
+        return ppo.ppo_loss(lp, lp_behav, lp_prox, adv, mask)[0]
+
+    g = jax.grad(loss)(lp_new)
+    assert np.all(np.asarray(g)[np.asarray(mask) == 0] == 0)
+
+
+def test_clipping_bounds_gradient():
+    """Tokens whose ratio is far outside the clip range and not improved
+    by the unclipped branch contribute zero gradient."""
+    n = 16
+    lp_behav = jnp.zeros(n)
+    lp_prox = jnp.zeros(n)
+    lp_new = jnp.full((n,), 2.0)              # ratio e^2 >> 1+eps
+    adv = -jnp.ones(n)                        # negative adv: unclipped branch
+    mask = jnp.ones(n)
+
+    def loss(lp):
+        return ppo.ppo_loss(lp, lp_behav, lp_prox, adv, mask,
+                            clip_eps=0.2)[0]
+    g = jax.grad(loss)(lp_new)
+    # with A<0 and u>1+eps: min picks u*A (unclipped) -> gradient flows
+    assert np.all(np.abs(np.asarray(g)) > 0)
+
+    adv2 = jnp.ones(n)                        # positive adv: clipped branch
+    def loss2(lp):
+        return ppo.ppo_loss(lp, lp_behav, lp_prox, adv2, mask,
+                            clip_eps=0.2)[0]
+    g2 = jax.grad(loss2)(lp_new)
+    np.testing.assert_allclose(np.asarray(g2), 0.0, atol=1e-8)
+
+
+def test_behav_weight_clip():
+    """pi_prox/pi_behav importance weight is bounded by ratio_clip."""
+    lp_new, lp_behav, _, adv, mask = _inputs()
+    lp_prox = lp_behav + 100.0                # absurdly stale
+    _, diag = ppo.ppo_loss(lp_new, lp_behav, lp_prox, adv, mask,
+                           ratio_clip=10.0)
+    assert float(diag["behav_weight_mean"]) <= 10.0 + 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 30), st.floats(0.05, 0.5),
+       st.integers(0, 2**31 - 1))
+def test_loss_finite_and_monotone_at_zero_adv(n, eps, seed):
+    r = np.random.default_rng(seed)
+    lp_b = jnp.asarray(r.normal(-1, 1, n), jnp.float32)
+    lp_p = jnp.asarray(r.normal(-1, 1, n), jnp.float32)
+    lp_n = jnp.asarray(r.normal(-1, 1, n), jnp.float32)
+    mask = jnp.ones(n)
+    loss, diag = ppo.ppo_loss(lp_n, lp_b, lp_p, jnp.zeros(n), mask,
+                              clip_eps=eps)
+    assert np.isfinite(float(loss))
+    assert float(loss) == pytest.approx(0.0, abs=1e-6)   # zero adv -> zero loss
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 8), st.integers(2, 20), st.integers(0, 2**31 - 1))
+def test_gather_logprobs_consistency(b, s, seed):
+    r = np.random.default_rng(seed)
+    v = 11
+    logits = jnp.asarray(r.normal(size=(b, s, v)), jnp.float32)
+    toks = jnp.asarray(r.integers(0, v, size=(b, s)), jnp.int32)
+    lp = ppo.gather_logprobs(logits, toks)
+    full = jax.nn.log_softmax(logits, axis=-1)
+    expect = np.take_along_axis(np.asarray(full), np.asarray(toks)[..., None],
+                                axis=-1)[..., 0]
+    np.testing.assert_allclose(np.asarray(lp), expect, atol=1e-5, rtol=1e-5)
+    assert np.all(np.asarray(lp) <= 1e-6)     # logprobs are <= 0
+
+
+def test_next_token_alignment():
+    b, s, v = 1, 5, 7
+    logits = jnp.asarray(RNG.normal(size=(b, s, v)), jnp.float32)
+    toks = jnp.asarray(RNG.integers(0, v, size=(b, s)), jnp.int32)
+    lp = ppo.next_token_logprobs(logits, toks)
+    assert float(lp[0, 0]) == 0.0
+    full = jax.nn.log_softmax(logits, -1)
+    for t in range(1, s):
+        assert float(lp[0, t]) == pytest.approx(
+            float(full[0, t - 1, toks[0, t]]), abs=1e-6)

@@ -1,0 +1,65 @@
+"""Staleness controller invariants (paper Eq. 3), property-based."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.staleness import StalenessController, StalenessStats
+
+
+def test_eq3_exact_boundary():
+    c = StalenessController(batch_size=4, max_staleness=2)
+    # version 0: may submit up to (0+2+1)*B = 12 requests
+    for i in range(12):
+        assert c.submit(), f"submission {i} should pass"
+    assert not c.submit()
+    c.on_policy_update(1)
+    for _ in range(4):
+        assert c.submit()
+    assert not c.submit()
+
+
+def test_eta_zero_is_synchronous():
+    """eta=0 degenerates to synchronous RL: one batch per version."""
+    c = StalenessController(batch_size=8, max_staleness=0)
+    for _ in range(8):
+        assert c.submit()
+    assert not c.submit()
+    c.on_policy_update(1)
+    assert c.submit()
+
+
+def test_infinite_staleness_never_blocks():
+    c = StalenessController(batch_size=1, max_staleness=math.inf)
+    for _ in range(1000):
+        assert c.submit()
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 64), st.integers(0, 8), st.lists(
+    st.one_of(st.just("submit"), st.just("update")), min_size=1, max_size=200))
+def test_eq3_invariant_holds_under_any_schedule(batch, eta, ops):
+    c = StalenessController(batch_size=batch, max_staleness=eta)
+    version = 0
+    for op in ops:
+        if op == "submit":
+            before = c.n_submitted
+            ok = c.submit()
+            if ok:
+                # Eq. 3 must hold after every accepted submission
+                assert (c.n_submitted - 1) // batch <= c.policy_version + eta
+            else:
+                assert c.n_submitted == before
+                # and the rejection must have been justified
+                assert (before + 1 - 1) // batch > c.policy_version + eta
+        else:
+            version += 1
+            c.on_policy_update(version)
+
+
+def test_stats_histogram():
+    s = StalenessStats()
+    for x in [0, 0, 1, 3, 3, 3]:
+        s.record(x)
+    assert s.histogram() == [(0, 2), (1, 1), (3, 3)]
+    assert s.max == 3
+    assert abs(s.mean - 10 / 6) < 1e-9

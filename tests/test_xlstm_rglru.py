@@ -1,0 +1,135 @@
+"""Recurrent-block equivalences: parallel == chunked == stepwise forms
+for mLSTM; scan == stepwise for RG-LRU and sLSTM; segment resets."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_model_config, reduced
+from repro.models import rglru, xlstm
+
+RNG = np.random.default_rng(0)
+CFG = reduced(get_model_config("xlstm-1.3b"))
+RCFG = reduced(get_model_config("recurrentgemma-9b"))
+
+
+def _x(b, s, d, scale=0.5):
+    return jnp.asarray(RNG.normal(size=(b, s, d)) * scale, jnp.float32)
+
+
+class TestMLSTM:
+    def setup_method(self, _):
+        self.p = xlstm.mlstm_init(jax.random.key(0), CFG)
+
+    def test_chunked_equals_quadratic(self):
+        x = _x(2, 100, CFG.d_model)
+        o1 = xlstm.mlstm_forward(CFG, self.p, x)
+        o2 = xlstm.mlstm_forward_chunked(CFG, self.p, x, chunk=32)
+        np.testing.assert_allclose(np.asarray(o2), np.asarray(o1),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_stepwise_equals_quadratic(self):
+        x = _x(1, 40, CFG.d_model)
+        o1 = xlstm.mlstm_forward(CFG, self.p, x)
+        st = xlstm.mlstm_init_state(CFG, 1)
+        outs = []
+        for t in range(40):
+            o, st = xlstm.mlstm_decode_step(CFG, self.p, x[:, t], st)
+            outs.append(o)
+        np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                                   np.asarray(o1), atol=1e-4, rtol=1e-4)
+
+    def test_prefill_state_continues_decode(self):
+        """prefill(x[:k]) then decode == full stepwise."""
+        x = _x(1, 30, CFG.d_model)
+        k = 17
+        _, st = xlstm.mlstm_forward_chunked(CFG, self.p, x[:, :k], chunk=8,
+                                            return_state=True)
+        o_cont, st = xlstm.mlstm_decode_step(CFG, self.p, x[:, k], st)
+        o_full = xlstm.mlstm_forward(CFG, self.p, x[:, :k + 1])
+        np.testing.assert_allclose(np.asarray(o_cont),
+                                   np.asarray(o_full[:, k]),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_segment_isolation(self):
+        """Tokens must not see across packed-segment boundaries."""
+        xa, xb = _x(1, 10, CFG.d_model), _x(1, 12, CFG.d_model)
+        packed = jnp.concatenate([xa, xb], 1)
+        seg = jnp.asarray([[0] * 10 + [1] * 12], jnp.int32)
+        o = xlstm.mlstm_forward_chunked(CFG, self.p, packed,
+                                        segment_ids=seg, chunk=8)
+        o_b = xlstm.mlstm_forward(CFG, self.p, xb)
+        np.testing.assert_allclose(np.asarray(o[:, 10:]), np.asarray(o_b),
+                                   atol=1e-3, rtol=1e-3)
+
+    def test_valid_masking(self):
+        """Padded tail leaves the prefill state at the last real token."""
+        x = _x(1, 20, CFG.d_model)
+        valid = jnp.asarray([[True] * 14 + [False] * 6])
+        _, st_pad = xlstm.mlstm_prefill_state(CFG, self.p, x, valid=valid)
+        _, st_exact = xlstm.mlstm_prefill_state(CFG, self.p, x[:, :14])
+        for k in ("C", "n", "m"):
+            np.testing.assert_allclose(np.asarray(st_pad[k]),
+                                       np.asarray(st_exact[k]),
+                                       atol=1e-4, rtol=1e-4)
+
+
+class TestSLSTM:
+    def setup_method(self, _):
+        self.p = xlstm.slstm_init(jax.random.key(1), CFG)
+
+    def test_scan_equals_stepwise(self):
+        x = _x(2, 25, CFG.d_model)
+        o, state = xlstm.slstm_forward(CFG, self.p, x)
+        st = xlstm.slstm_init_state(CFG, 2)
+        for t in range(25):
+            st = xlstm._slstm_cell(CFG, self.p, x[:, t], st)
+        np.testing.assert_allclose(np.asarray(state["h"]), np.asarray(st["h"]),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_segment_reset(self):
+        xa, xb = _x(1, 8, CFG.d_model), _x(1, 9, CFG.d_model)
+        packed = jnp.concatenate([xa, xb], 1)
+        seg = jnp.asarray([[0] * 8 + [1] * 9], jnp.int32)
+        o, _ = xlstm.slstm_forward(CFG, self.p, packed, segment_ids=seg)
+        o_b, _ = xlstm.slstm_forward(CFG, self.p, xb)
+        np.testing.assert_allclose(np.asarray(o[:, 8:]), np.asarray(o_b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+class TestRGLRU:
+    def setup_method(self, _):
+        self.p = rglru.rglru_init(jax.random.key(2), RCFG)
+
+    def test_forward_equals_stepwise(self):
+        x = _x(2, 20, RCFG.d_model)
+        o, h_last = rglru.rglru_forward(RCFG, self.p, x)
+        st = rglru.rglru_init_state(RCFG, 2)
+        outs = []
+        for t in range(20):
+            ot, st = rglru.rglru_decode_step(RCFG, self.p, x[:, t], st)
+            outs.append(ot)
+        np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                                   np.asarray(o), atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(st["h"]), np.asarray(h_last),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_prefill_state_continues_decode(self):
+        x = _x(1, 15, RCFG.d_model)
+        k = 9
+        _, st = rglru.rglru_prefill_state(RCFG, self.p, x[:, :k])
+        o_cont, _ = rglru.rglru_decode_step(RCFG, self.p, x[:, k], st)
+        o_full, _ = rglru.rglru_forward(RCFG, self.p, x[:, :k + 1])
+        np.testing.assert_allclose(np.asarray(o_cont),
+                                   np.asarray(o_full[:, k]),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_segment_reset(self):
+        xa, xb = _x(1, 7, RCFG.d_model), _x(1, 6, RCFG.d_model)
+        packed = jnp.concatenate([xa, xb], 1)
+        seg = jnp.asarray([[0] * 7 + [1] * 6], jnp.int32)
+        o, _ = rglru.rglru_forward(RCFG, self.p, packed, segment_ids=seg)
+        o_b, _ = rglru.rglru_forward(RCFG, self.p, xb)
+        # both the recurrence AND the causal conv reset at the boundary
+        np.testing.assert_allclose(np.asarray(o[:, 7:]), np.asarray(o_b),
+                                   atol=1e-3, rtol=1e-3)
