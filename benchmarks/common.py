@@ -7,10 +7,21 @@ train step / packing call), derived = the paper-facing metric
 """
 from __future__ import annotations
 
+import os
 import time
 from contextlib import contextmanager
 
 ROWS = []
+
+# Smoke mode (CI): minimum-cost pass over the benchmark plumbing so the
+# perf scripts can't silently rot.  Set by ``run.py --smoke`` (or the
+# env var, for invoking a single module directly).
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
+
+def smoke_steps(n: int, smoke_n: int = 1) -> int:
+    """``n`` normally, ``smoke_n`` when smoke mode is on."""
+    return smoke_n if SMOKE else n
 
 
 def emit(name: str, us_per_call: float, derived: str):

@@ -8,6 +8,7 @@ active decode slots, from the same simulator runs as Table 1.
 """
 from __future__ import annotations
 
+from benchmarks import common
 from benchmarks.common import emit, timed
 from repro.configs.base import RLConfig
 from repro.core import AsyncRLController
@@ -57,16 +58,17 @@ def _run(colocated):
     ctl = _UtilizationController(engine=eng, trainer=SimTrainer(),
                                  prompt_stream=SimPromptStream(1024), rl=rl,
                                  timing=timing)
-    ctl.run(STEPS)
+    ctl.run(common.smoke_steps(STEPS))
     total = max(ctl.clock, 1e-9)
     return ctl.busy / total, ctl.slot_time / total
 
 
 def main():
+    steps = common.smoke_steps(STEPS)
     with timed() as t:
         busy_s, slots_s = _run(colocated=True)
         busy_a, slots_a = _run(colocated=False)
-    emit("fig1_gen_pool_utilization", 1e6 * t["s"] / (2 * STEPS),
+    emit("fig1_gen_pool_utilization", 1e6 * t["s"] / (2 * steps),
          f"sync_busy={busy_s:.2f};sync_slot_util={slots_s:.2f};"
          f"areal_busy={busy_a:.2f};areal_slot_util={slots_a:.2f}")
 

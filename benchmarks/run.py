@@ -1,5 +1,9 @@
 """Benchmark driver — one module per paper table/figure.
 
+``python -m benchmarks.run [--smoke] [name]``: with ``--smoke`` a
+minimum-cost subset runs with reduced step counts (the CI lane that
+keeps the perf scripts from rotting); with ``name`` only that module.
+
   fig1_timeline          Fig. 1: generation-pool utilization sync vs async
   table1_end_to_end      Table 1: sync vs async end-to-end hours
   fig4_scaling           Fig. 4: strong-scaling of effective throughput
@@ -36,12 +40,26 @@ MODULES = [
 ]
 
 
+# cheapest modules still covering both execution paths: the virtual-time
+# simulator/controller stack (fig1) and the real model + packing/PPO
+# step path (fig6a); roofline exercises the artifact plumbing.
+SMOKE_MODULES = ("fig1", "fig6a", "roofline")
+
+
 def main() -> None:
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    if smoke:
+        from benchmarks import common
+        common.SMOKE = True
+        args = [a for a in args if a != "--smoke"]
     print("name,us_per_call,derived")
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    only = args[0] if args else None
     failed = False
     for name, mod in MODULES:
         if only and name != only:
+            continue
+        if smoke and not only and name not in SMOKE_MODULES:
             continue
         try:
             mod.main()

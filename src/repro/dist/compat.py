@@ -1,0 +1,112 @@
+"""Forward-compat shims for the jax mesh API.
+
+The repo is written against the modern mesh surface — ``jax.set_mesh``,
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)`` and
+``AbstractMesh(axis_sizes, axis_names)`` — which older jaxlib builds
+(e.g. the 0.4.x CPU wheels in CI containers) predate.  ``install()``
+adds equivalents *only where missing*, so on a current jax every shim is
+a no-op and the real implementations are untouched:
+
+  * ``jax.sharding.AxisType``      tiny enum (Auto / Explicit / Manual);
+                                   old GSPMD meshes are implicitly Auto,
+                                   so call sites just tag intent.
+  * ``jax.make_mesh``              wrapper accepting-and-dropping the
+                                   ``axis_types=`` kwarg.
+  * ``jax.set_mesh``               returns the mesh itself: ``Mesh`` is a
+                                   context manager that installs itself as
+                                   the ambient physical mesh, which is all
+                                   the ``with jax.set_mesh(m):`` call sites
+                                   need on the old API.
+  * ``jax.sharding.AbstractMesh``  factory accepting both the old
+                                   ``((name, size), ...)`` tuple form and
+                                   the new ``(sizes, names)`` form.
+
+``active_mesh()`` is the version-agnostic "what mesh is ambient?" probe
+used by :mod:`repro.dist.constraints`.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def _make_mesh_needs_shim() -> bool:
+    try:
+        sig = inspect.signature(jax.make_mesh)
+    except (TypeError, ValueError):
+        return False
+    return "axis_types" not in sig.parameters
+
+
+def _abstract_mesh_needs_shim() -> bool:
+    try:
+        sig = inspect.signature(jax.sharding.AbstractMesh.__init__)
+    except (TypeError, ValueError):
+        return False
+    return "shape_tuple" in sig.parameters
+
+
+def install() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if _make_mesh_needs_shim():
+        _orig_make_mesh = jax.make_mesh
+
+        @functools.wraps(_orig_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None,
+                      devices=None):
+            del axis_types  # implicit Auto on the old GSPMD-only API
+            return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax, "set_mesh"):
+        def set_mesh(mesh):
+            # Mesh.__enter__ installs the ambient physical mesh, which is
+            # the old-API equivalent of set_mesh for `with` call sites.
+            return mesh
+
+        jax.set_mesh = set_mesh
+
+    if _abstract_mesh_needs_shim():
+        _OrigAbstract = jax.sharding.AbstractMesh
+
+        @functools.wraps(_OrigAbstract, updated=())
+        def AbstractMesh(*args, **kwargs):
+            if (len(args) == 2 and not kwargs
+                    and all(isinstance(s, int) for s in args[0])
+                    and all(isinstance(n, str) for n in args[1])):
+                return _OrigAbstract(tuple(zip(args[1], args[0])))
+            kwargs.pop("axis_types", None)
+            return _OrigAbstract(*args, **kwargs)
+
+        jax.sharding.AbstractMesh = AbstractMesh
+
+
+def active_mesh():
+    """The ambient concrete mesh, or None outside any mesh scope."""
+    get_mesh = getattr(jax.sharding, "get_mesh", None)
+    if get_mesh is not None:
+        try:
+            mesh = get_mesh()
+            if mesh is not None and not mesh.empty:
+                return mesh
+        except Exception:
+            pass
+    try:
+        from jax._src.mesh import thread_resources
+        mesh = thread_resources.env.physical_mesh
+        if mesh is not None and not mesh.empty:
+            return mesh
+    except Exception:
+        pass
+    return None

@@ -53,9 +53,16 @@ def test_scan_matches_unroll():
                 res[name] = t
         fs, fu = res["scan"].flops, res["unroll"].flops
         assert abs(fs - fu) / fu < 0.15, (fs, fu)
+        # Collectives: one-sided bound.  The unrolled twin lets XLA's
+        # CSE/combiner dedup weight all-gathers across iterations (the
+        # amount is version-dependent); the scan must re-gather every
+        # trip.  Without the trip-count correction the scan would report
+        # a single body's gathers and land BELOW the unrolled total, so
+        # scan >= unroll still pins the correction.
         ag_s = res["scan"].collectives.get("all-gather", 0)
         ag_u = res["unroll"].collectives.get("all-gather", 0)
-        assert abs(ag_s - ag_u) / max(ag_u, 1) < 0.05, (ag_s, ag_u)
+        assert ag_s >= ag_u > 0, (ag_s, ag_u)
+        assert res["scan"].while_trips, "scan program lost its while loop"
         # the raw jax cost_analysis would be ~8x off for the scan
         print("OK", fs, fu)
     """)

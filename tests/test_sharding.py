@@ -8,6 +8,7 @@ import sys
 import textwrap
 
 import jax
+import pytest
 
 from repro.configs import get_model_config
 from repro.dist import sharding
@@ -55,6 +56,63 @@ def _path(names):
     return tuple(DictKey(n) for n in names)
 
 
+def test_param_spec_rules_dense_and_xlstm():
+    """Rule coverage for the dense (GQA) and xLSTM config families;
+    leading dims are the stacked per-unit axes from the scan over layers."""
+    from jax.sharding import PartitionSpec as P
+
+    class L:
+        def __init__(self, shape):
+            self.shape = shape
+
+    mesh = jax.sharding.AbstractMesh((2, 4), ("data", "model"))
+
+    cfg = get_model_config("phi3-medium-14b")
+    # column-parallel q heads (40 % 4 == 0)
+    spec = sharding.param_spec(cfg, mesh, _path(["units", "0", "attn", "wq"]),
+                               L((40, cfg.d_model, cfg.q_dim)))
+    assert spec == P(None, None, "model")
+    # GQA-safe: 10 kv heads do not divide the 4-way model axis -> replicate
+    spec = sharding.param_spec(cfg, mesh, _path(["units", "0", "attn", "wk"]),
+                               L((40, cfg.d_model, cfg.kv_dim)))
+    assert spec == P(None, None, None)
+    # row-parallel wo; FSDP lands the data axes on the remaining dim
+    spec = sharding.param_spec(cfg, mesh, _path(["units", "0", "attn", "wo"]),
+                               L((40, cfg.q_dim, cfg.d_model)), fsdp=True)
+    assert spec == P(None, "model", "data")
+    # dense MLP: column-parallel up/gate, row-parallel down
+    spec = sharding.param_spec(cfg, mesh, _path(["units", "0", "mlp", "w_up"]),
+                               L((cfg.d_model, cfg.d_ff)), fsdp=True)
+    assert spec == P("data", "model")
+    spec = sharding.param_spec(cfg, mesh, _path(["units", "0", "mlp", "w_down"]),
+                               L((cfg.d_ff, cfg.d_model)))
+    assert spec == P("model", None)
+    # untied head: vocab-parallel on the padded vocab dim
+    spec = sharding.param_spec(cfg, mesh, _path(["head", "w"]),
+                               L((cfg.d_model, cfg.padded_vocab)))
+    assert spec == P(None, "model")
+
+    xcfg = get_model_config("xlstm-1.3b")
+    inner = 2 * xcfg.d_model
+    spec = sharding.param_spec(xcfg, mesh, _path(["units", "0", "cell", "w_x"]),
+                               L((6, xcfg.d_model, inner)))
+    assert spec == P(None, None, "model")
+    spec = sharding.param_spec(xcfg, mesh,
+                               _path(["units", "0", "cell", "w_down"]),
+                               L((6, inner, xcfg.d_model)))
+    assert spec == P(None, "model", None)
+    # cell q/k/v all carry cfg.n_heads (no GQA inside the mlstm cell)
+    spec = sharding.param_spec(xcfg, mesh, _path(["units", "0", "cell", "wk"]),
+                               L((6, inner, inner)))
+    assert spec == P(None, None, "model")
+    # per-channel gate vectors stay replicated even under FSDP
+    spec = sharding.param_spec(xcfg, mesh,
+                               _path(["units", "0", "cell", "f_bias"]),
+                               L((6, xcfg.n_heads)), fsdp=True)
+    assert spec == P(None, None)
+
+
+@pytest.mark.slow
 def test_sharded_train_step_matches_single_device():
     """The pjit'd PPO train step on a (2,2) mesh must produce the same
     params as the unsharded step (same inputs, fp32)."""
@@ -108,6 +166,7 @@ def test_sharded_train_step_matches_single_device():
     assert "MAXERR" in out
 
 
+@pytest.mark.slow
 def test_moe_sharded_matches_single_device():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np, dataclasses
@@ -134,6 +193,7 @@ def test_moe_sharded_matches_single_device():
     assert "MAXERR" in out
 
 
+@pytest.mark.slow
 def test_dryrun_reduced_mesh_smoke():
     """End-to-end dryrun machinery on an 8-device (2,2,2) pod-style mesh
     (the 512-device production run is exercised by launch/dryrun.py)."""
