@@ -1,0 +1,149 @@
+"""Paged vs ring KV cache: concurrent slots at fixed cache HBM.
+
+The rollout worker's throughput is bounded by how many concurrent
+decode slots its cache memory sustains (every ``update_weights``
+interrupt re-prefills all of them, so slots are the generation
+bandwidth).  The ring engine reserves ``max_len`` KV rows per slot
+unconditionally; the paged engine (DESIGN.md §Paged KV-cache pool)
+reserves ceil(history / block_size) blocks and maps the full prompt
+blocks of a GRPO group (paper Table 3: 16 answers per prompt) to
+*shared* read-only blocks, so the prompt's KV is stored once per group
+instead of once per slot.
+
+This benchmark drives the real ``BlockAllocator`` admission path over a
+sweep of HBM budgets and records the admitted-slots curve for both
+engines in ``BENCH_paged_cache.json``, plus a wall-clock decode-step
+comparison of the two engines on a tiny model (the jnp path; the Pallas
+kernels are the TPU version of the same math).
+
+KV-geometry and group size follow the paper's base model
+(R1-Distill-Qwen-1.5B: 28 layers, 2 KV heads, head_dim 128, bf16) and
+RL config (answers_per_prompt=16, max_prompt_len=1024); the response
+budget is the serving/eval regime (512) where cache capacity, not
+compute, is the binding constraint.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from benchmarks.common import emit, smoke_steps
+from repro.configs import get_model_config
+from repro.configs.base import RLConfig
+from repro.core.batching import BlockAllocator
+
+BLOCK_SIZE = 16
+PROMPT = 1024            # RLConfig.max_prompt_len
+GEN = 512                # serving/eval response budget
+GROUP = 16               # RLConfig.answers_per_prompt
+HBM_BUDGETS_MB = (64, 128, 256, 512, 1024, 2048)
+
+
+def kv_bytes_per_token(cfg, dtype_bytes: int = 2) -> int:
+    """K+V bytes one token occupies across the attention layers."""
+    units, rem = cfg.pattern_counts
+    seq = list(cfg.block_pattern) * units + list(cfg.block_pattern[:rem])
+    n_attn = sum(bt in ("attn", "swa", "local") for bt in seq)
+    return n_attn * 2 * cfg.n_kv_heads * cfg.head_dim * dtype_bytes
+
+
+def ring_slots(hbm_bytes: int, bpt: int) -> int:
+    return int(hbm_bytes // ((PROMPT + GEN) * bpt))
+
+
+def paged_slots(hbm_bytes: int, bpt: int) -> int:
+    """Greedy group admission through the real allocator until the pool
+    is exhausted (the engine's exact reservation math: worst-case blocks
+    per slot, full prompt blocks shared within a group)."""
+    n_blocks = int(hbm_bytes // (BLOCK_SIZE * bpt))
+    if n_blocks <= 0:
+        return 0
+    alloc = BlockAllocator(n_blocks, BLOCK_SIZE)
+    need = -(-(PROMPT + GEN - 1) // BLOCK_SIZE)
+    slots = 0
+    gi = 0
+    while True:
+        prompt = [gi] * PROMPT                        # distinct per group
+        gi += 1
+        for _ in range(GROUP):
+            n_full = PROMPT // BLOCK_SIZE
+            try:
+                prefix, _ = alloc.plan_prefix(0, prompt)
+                if alloc.n_free < need - n_full:
+                    for b in prefix:
+                        alloc.release(b)
+                    return slots
+                for _ in range(need - n_full):
+                    alloc.alloc(0)
+            except MemoryError:
+                return slots
+            slots += 1
+
+
+def decode_step_us(cache: str, steps: int) -> float:
+    """Wall time per decode step of the real engine on a tiny model."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import reduced
+    from repro.core import RolloutEngine
+    from repro.data import tokenizer
+    from repro.models.model import build_model
+
+    cfg = dataclasses.replace(reduced(get_model_config("areal-qwen-1.5b")),
+                              vocab_size=tokenizer.VOCAB_SIZE)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.key(0))
+    eng = RolloutEngine(model, params, n_slots=8, prompt_len=16,
+                        max_gen_len=steps + 2, temperature=-1.0, seed=0,
+                        cache=cache, block_size=BLOCK_SIZE)
+    prompt = list(range(1, 13))
+    eng.admit([{"rid": i, "prompt_id": 0, "prompt": prompt, "answer": None}
+               for i in range(8)])
+    eng.step()                                        # compile
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        eng.step()
+    return (time.perf_counter() - t0) / steps * 1e6
+
+
+def main() -> None:
+    cfg = get_model_config("areal-qwen-1.5b")
+    rl = RLConfig()
+    assert rl.answers_per_prompt == GROUP and rl.max_prompt_len == PROMPT
+    bpt = kv_bytes_per_token(cfg)
+
+    curve = []
+    for mb in HBM_BUDGETS_MB:
+        hbm = mb * 2**20
+        r = ring_slots(hbm, bpt)
+        p = paged_slots(hbm, bpt)
+        curve.append({"hbm_mb": mb, "ring_slots": r, "paged_slots": p,
+                      "ratio": round(p / r, 3) if r else None})
+    ratios = [c["ratio"] for c in curve if c["ratio"]]
+    min_ratio = min(ratios)
+
+    steps = smoke_steps(32, 2)
+    us_ring = decode_step_us("ring", steps)
+    us_paged = decode_step_us("paged", steps)
+
+    record = {
+        "model": cfg.name,
+        "kv_bytes_per_token": bpt,
+        "block_size": BLOCK_SIZE,
+        "prompt_len": PROMPT, "gen_len": GEN, "group_size": GROUP,
+        "curve": curve,
+        "min_slots_ratio": min_ratio,
+        "decode_step_us": {"ring": round(us_ring, 1),
+                           "paged": round(us_paged, 1)},
+    }
+    with open("BENCH_paged_cache.json", "w") as f:
+        json.dump(record, f, indent=2)
+
+    emit("paged_cache_slots", us_paged, f"slots_x{min_ratio:.2f}")
+    emit("paged_cache_decode_ring", us_ring, "us_per_step")
+
+
+if __name__ == "__main__":
+    main()

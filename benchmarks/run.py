@@ -12,6 +12,7 @@ keeps the perf scripts from rotting); with ``name`` only that module.
   fig5c_throughput       Fig. 5c / Table 7: throughput vs eta
   fig6a_dynamic_batching Fig. 6a: Algorithm 1 vs static micro-batching
   fig6b_interruptible    Fig. 6b: interruptible-generation ablation
+  paged_cache            Paged vs ring KV cache: slots at fixed HBM
   roofline_report        Roofline terms from the dry-run artifacts
 
 Prints ``name,us_per_call,derived`` CSV.
@@ -23,7 +24,7 @@ import traceback
 
 from benchmarks import (fig1_timeline, fig4_scaling, fig5c_throughput,
                         fig6a_dynamic_batching, fig6b_interruptible,
-                        roofline_report, table1_end_to_end,
+                        paged_cache, roofline_report, table1_end_to_end,
                         table2_staleness, table8_rloo)
 from benchmarks.common import emit
 
@@ -36,14 +37,16 @@ MODULES = [
     ("fig5c", fig5c_throughput),
     ("fig6a", fig6a_dynamic_batching),
     ("fig6b", fig6b_interruptible),
+    ("paged", paged_cache),
     ("roofline", roofline_report),
 ]
 
 
 # cheapest modules still covering both execution paths: the virtual-time
 # simulator/controller stack (fig1) and the real model + packing/PPO
-# step path (fig6a); roofline exercises the artifact plumbing.
-SMOKE_MODULES = ("fig1", "fig6a", "roofline")
+# step path (fig6a); roofline exercises the artifact plumbing; paged
+# keeps the paged-cache engine + allocator benchmark from rotting.
+SMOKE_MODULES = ("fig1", "fig6a", "paged", "roofline")
 
 
 def main() -> None:

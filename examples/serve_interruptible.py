@@ -8,7 +8,16 @@ devices exist (run with
 XLA_FLAGS=--xla_force_host_platform_device_count=8 to see it).
 
     PYTHONPATH=src python examples/serve_interruptible.py
+    PYTHONPATH=src python examples/serve_interruptible.py --cache paged
+
+``--cache paged`` swaps the per-slot ring buffers for the paged KV
+block pool (DESIGN.md §Paged KV-cache pool): shared prompts map to
+shared read-only blocks and the mid-flight weight update only rewrites
+the blocks the version bump invalidated — watch ``prefix blocks
+reused`` and the smaller re-prefill count in the output.
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
@@ -19,17 +28,31 @@ from repro.models.model import build_model
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--cache", default="ring", choices=["ring", "paged"],
+                    help="KV-cache organization: per-slot ring buffers "
+                         "(default) or the paged block pool with prefix "
+                         "sharing (block size 16 tokens by default)")
+    ap.add_argument("--block-size", type=int, default=4,
+                    help="tokens per KV block for --cache paged (engine "
+                         "default is 16; the demo uses 4 so its short "
+                         "prompts span full, shareable blocks)")
+    args = ap.parse_args()
+
     cfg = reduced(get_model_config("h2o-danube-1.8b"))  # SWA ring caches
     import dataclasses
     cfg = dataclasses.replace(cfg, vocab_size=tokenizer.VOCAB_SIZE)
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.key(0))
     engine = RolloutEngine(model, params, n_slots=6, prompt_len=16,
-                           max_gen_len=12, seed=0)
+                           max_gen_len=12, seed=0, cache=args.cache,
+                           block_size=args.block_size)
 
+    # GRPO-style groups: each prompt sampled twice, so in paged mode the
+    # second sample of a group shares its prompt's full KV blocks
     prompts = [tokenizer.encode(f"<q> {a} + {b} = ?", bos=True)
-               for a, b in [(1, 2), (3, 4), (5, 6), (7, 8), (2, 9), (4, 4)]]
-    engine.admit([{"rid": i, "prompt_id": i, "prompt": p, "answer": None}
+               for a, b in [(1, 2), (3, 4), (5, 6)] for _ in range(2)]
+    engine.admit([{"rid": i, "prompt_id": i // 2, "prompt": p, "answer": None}
                   for i, p in enumerate(prompts)])
     print(f"admitted {engine.n_active} requests "
           f"({engine.prefill_tokens} prompt tokens prefilled)")
@@ -56,6 +79,10 @@ def main():
     mixed = sum(1 for f in finished if len(set(f.versions)) > 1)
     print(f"\n{mixed}/{len(finished)} trajectories span multiple policy "
           f"versions (Proposition 1 handles these in the decoupled loss)")
+    if args.cache == "paged":
+        print(f"paged pool: {engine.prefix_reused_blocks} prefix blocks "
+              f"reused at admission, {engine.reprefill_tokens} tokens "
+              f"rewritten by the interrupt (deduped across sharers)")
 
     if len(jax.devices()) >= 2:
         print("\n-- disaggregated submesh demo --")

@@ -1,5 +1,5 @@
-"""Dynamic micro-batch allocation (paper Algorithm 1) + padding-free
-sequence packing.
+"""Dynamic micro-batch allocation (paper Algorithm 1), padding-free
+sequence packing, and the paged KV-cache block allocator.
 
 Algorithm 1: sort sequences by length descending; each sequence goes to
 a new micro-batch if fewer than k_min exist or none can fit it, otherwise
@@ -12,11 +12,20 @@ signature serves any mix of lengths (block-diagonal attention via
 segment masking).  This is the TPU-side consequence of Alg. 1 — XLA
 needs static shapes, so the "padding-free" property becomes "padding
 bounded by the bucket remainder" (measured by ``padding_fraction``).
+
+``BlockAllocator`` is the host side of the paged rollout cache
+(DESIGN.md §Paged KV-cache pool): a free list over a fixed pool of KV
+blocks, per-block refcounts so prompt-prefix blocks can be shared
+read-only across slots (GRPO groups sample the same prompt n times),
+per-block weight-version tags so an ``update_weights`` interrupt
+recomputes each physical block at most once, and a prefix-hash map
+keyed on (version, token chain) for admission-time reuse.
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -49,6 +58,152 @@ def static_batching(seq_lens: Sequence[int], n_microbatches: int) -> List[List[i
     for i in range(len(seq_lens)):
         batches[i % n_microbatches].append(i)
     return [b for b in batches if b]
+
+
+# ---------------------------------------------------------------------------
+# Paged KV-cache block allocator (host side of the paged rollout engine)
+# ---------------------------------------------------------------------------
+
+def prefix_block_hashes(version: int, tokens: Sequence[int],
+                        block_size: int) -> List[bytes]:
+    """SHA-256 chain over the *full* blocks of a token prefix.
+
+    Entry i is a digest of (weight version, tokens[0 : (i+1)*block_size]) —
+    chained, so block i+1's digest commits to the whole prefix before it,
+    not just its own tokens.  Two slots share physical block i iff their
+    chains agree at i, which is exactly "same weights and same prompt
+    prefix through the end of block i": a cryptographic digest makes the
+    map safe to trust on a hit without storing or re-comparing token
+    prefixes (Python ``hash()`` collisions are constructible from token
+    sequences; these are not).  Partial trailing blocks are never
+    shareable (generation appends into them), so only
+    len(tokens) // block_size entries are produced.
+    """
+    out: List[bytes] = []
+    d = hashlib.sha256(f"kv-prefix:{version}".encode()).digest()
+    for i in range(len(tokens) // block_size):
+        block = tuple(tokens[i * block_size:(i + 1) * block_size])
+        d = hashlib.sha256(d + repr(block).encode()).digest()
+        out.append(d)
+    return out
+
+
+class BlockAllocator:
+    """Fixed-pool KV block allocator with refcounts and prefix reuse.
+
+    Device state (the (N, bs, Hkv, hd) pools) never moves; this class
+    tracks which physical blocks are live, how many slots reference
+    each (shared prompt-prefix blocks are read-only with refcount > 1),
+    which weight version each block's contents were computed under, and
+    a prefix-hash -> block map for admission-time sharing.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        assert n_blocks > 0 and block_size > 0
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(n_blocks - 1, -1, -1))
+        self._refs = np.zeros(n_blocks, np.int32)
+        self._version = np.full(n_blocks, -1, np.int64)
+        self._hash_of: Dict[int, bytes] = {}     # block -> prefix digest
+        self._block_of: Dict[bytes, int] = {}    # prefix digest -> block
+
+    # ---- capacity ---------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_live(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def refcount(self, block: int) -> int:
+        return int(self._refs[block])
+
+    def version_of(self, block: int) -> int:
+        return int(self._version[block])
+
+    # ---- alloc / share / release -----------------------------------------
+    def alloc(self, version: int) -> int:
+        """Take a free block (refcount 1, tagged ``version``)."""
+        if not self._free:
+            raise MemoryError("KV block pool exhausted")
+        b = self._free.pop()
+        self._refs[b] = 1
+        self._version[b] = version
+        return b
+
+    def retain(self, block: int) -> int:
+        """Add a reference to a live block (prefix sharing)."""
+        assert self._refs[block] > 0, "retain of a free block"
+        self._refs[block] += 1
+        return block
+
+    def release(self, block: int) -> bool:
+        """Drop one reference; frees the block (and its prefix-map entry)
+        when the count reaches zero.  Returns True if freed."""
+        assert self._refs[block] > 0, "release of a free block"
+        self._refs[block] -= 1
+        if self._refs[block]:
+            return False
+        h = self._hash_of.pop(block, None)
+        if h is not None and self._block_of.get(h) == block:
+            del self._block_of[h]
+        self._version[block] = -1
+        self._free.append(block)
+        return True
+
+    # ---- prefix map -------------------------------------------------------
+    def lookup(self, prefix_hash: bytes) -> Optional[int]:
+        return self._block_of.get(prefix_hash)
+
+    def register(self, prefix_hash: bytes, block: int) -> None:
+        """Publish a live block as the holder of ``prefix_hash``."""
+        assert self._refs[block] > 0
+        old = self._hash_of.pop(block, None)
+        if old is not None and self._block_of.get(old) == block:
+            del self._block_of[old]
+        self._hash_of[block] = prefix_hash
+        self._block_of[prefix_hash] = block
+
+    def set_version(self, block: int, version: int) -> None:
+        """Tag a live block's contents as recomputed under ``version``
+        (the update_weights re-prefill path)."""
+        assert self._refs[block] > 0
+        self._version[block] = version
+
+    def clear_prefix_map(self) -> None:
+        """Drop every prefix registration (a weight-version bump makes all
+        old-version hashes unreachable; the re-prefill re-registers)."""
+        self._hash_of.clear()
+        self._block_of.clear()
+
+    # ---- admission planning ----------------------------------------------
+    def plan_prefix(self, version: int, prompt: Sequence[int]
+                    ) -> Tuple[List[int], int]:
+        """Shared-prefix admission plan for ``prompt``: returns
+        (block ids for each full prompt block — existing shared blocks
+        retained, the rest freshly allocated and registered — and the
+        count of *reused* leading blocks).  Raises MemoryError (after
+        rolling back) if the pool cannot cover the unshared tail."""
+        hashes = prefix_block_hashes(version, prompt, self.block_size)
+        blocks: List[int] = []
+        reused = 0
+        try:
+            for h in hashes:
+                hit = self.lookup(h)
+                if hit is not None and reused == len(blocks):
+                    blocks.append(self.retain(hit))
+                    reused += 1
+                else:
+                    b = self.alloc(version)
+                    self.register(h, b)
+                    blocks.append(b)
+        except MemoryError:
+            for b in blocks:
+                self.release(b)
+            raise
+        return blocks, reused
 
 
 @dataclass

@@ -19,6 +19,19 @@ bookkeeping.  All jit signatures are static: admission groups are padded
 to ``n_slots`` rows and dummy rows scatter to an out-of-range slot id
 (dropped).  For recurrent/hybrid architectures the "KV recompute" is a
 state re-scan through the same prefill path (DESIGN.md §Arch-applicability).
+
+Two cache organizations (``cache="ring" | "paged"``):
+
+  * ``ring``   — per-slot (B, W, ...) ring buffers; every slot carries
+                 ``max_len`` (or window) KV rows whether it uses them or
+                 not.
+  * ``paged``  — a global pool of fixed-size KV blocks plus per-slot
+                 block tables (DESIGN.md §Paged KV-cache pool).  Slots
+                 only hold the blocks their history needs, shared prompt
+                 prefixes (GRPO groups) map to shared read-only blocks
+                 via a prefix-hash, and the ``update_weights`` re-prefill
+                 rewrites each *physical* block at most once — blocks
+                 already tagged with the new version are skipped.
 """
 from __future__ import annotations
 
@@ -30,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, RLConfig
+from repro.core.batching import BlockAllocator, prefix_block_hashes
 from repro.data import tokenizer
 
 
@@ -73,7 +87,9 @@ class RolloutEngine:
     def __init__(self, model, params, *, n_slots: int, prompt_len: int,
                  max_gen_len: int, temperature: float = 1.0,
                  eos_id: int = tokenizer.EOS, seed: int = 0,
-                 version: int = 0, dtype=jnp.float32):
+                 version: int = 0, dtype=jnp.float32,
+                 cache: str = "ring", block_size: int = 16,
+                 n_blocks: Optional[int] = None):
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.params = params
@@ -89,7 +105,6 @@ class RolloutEngine:
         self._step_count = 0
 
         self.slots = [Slot() for _ in range(n_slots)]
-        self.cache = model.init_cache(n_slots, self.max_len, dtype)
         self._pending_weights: Optional[Tuple] = None
 
         # stats
@@ -97,10 +112,30 @@ class RolloutEngine:
         self.interruptions = 0
         self.prefill_tokens = 0
         self.reprefill_tokens = 0
+        self.prefix_reused_blocks = 0
 
-        self._jit_decode = jax.jit(self._decode_fn)
-        self._jit_prefill = jax.jit(self._prefill_fn)
-        self._jit_insert = jax.jit(self.model.cache_insert)
+        assert cache in ("ring", "paged"), cache
+        self.cache_mode = cache
+        if cache == "paged":
+            if not hasattr(model, "init_paged_cache"):
+                raise ValueError(
+                    "cache='paged' needs a decoder-only LM with paged cache "
+                    "support (DESIGN.md §Arch-applicability)")
+            self.block_size = block_size
+            self.n_entries = -(-self.max_len // block_size)
+            self.n_blocks = n_blocks or n_slots * self.n_entries
+            self.allocator = BlockAllocator(self.n_blocks, block_size)
+            self.tables = np.full((n_slots, self.n_entries), -1, np.int32)
+            self._tables_dev = None        # device copy, refreshed on change
+            self.cache = model.init_paged_cache(n_slots, self.n_blocks,
+                                                block_size, dtype)
+            self._jit_decode_paged = jax.jit(self._decode_paged_fn)
+            self._jit_prefill_paged = jax.jit(self._prefill_paged_fn)
+        else:
+            self.cache = model.init_cache(n_slots, self.max_len, dtype)
+            self._jit_decode = jax.jit(self._decode_fn)
+            self._jit_prefill = jax.jit(self._prefill_fn)
+            self._jit_insert = jax.jit(self.model.cache_insert)
 
     # ---- jit bodies -------------------------------------------------------
     def _sample(self, logits, rng):
@@ -132,6 +167,22 @@ class RolloutEngine:
         tok, lp = self._sample(logits, rng)
         return tok, lp, cache
 
+    def _decode_paged_fn(self, params, token, cache, tables, rng):
+        logits, cache = self.model.decode_step_paged(params, token, cache,
+                                                     tables)
+        tok, lp = self._sample(logits, rng)
+        return tok, lp, cache
+
+    def _prefill_paged_fn(self, params, tokens, lengths, dest, slot_ids,
+                          cache, rng):
+        """Group prefill writing straight into the global block pool
+        (``dest`` carries the physical destination block per token; -1 =
+        shared/padded, not written) + first sampled token per row."""
+        logits, cache = self.model.prefill_paged(params, tokens, cache, dest,
+                                                 slot_ids, length=lengths)
+        tok, lp = self._sample(logits, rng)
+        return tok, lp, cache
+
     def _next_rng(self):
         self._step_count += 1
         return jax.random.fold_in(self._rng, self._step_count)
@@ -147,9 +198,15 @@ class RolloutEngine:
     def n_active(self) -> int:
         return sum(s.active for s in self.slots)
 
+    def blocks_in_use(self) -> int:
+        return self.allocator.n_live if self.cache_mode == "paged" else 0
+
     def admit(self, requests: Sequence[Dict], clock: float = 0.0) -> int:
         """requests: dicts with rid, prompt_id, prompt (list[int]), answer.
-        Returns number admitted (bounded by free slots)."""
+        Returns number admitted (bounded by free slots; in paged mode also
+        by free pool blocks — prefix-shared blocks don't count)."""
+        if self.cache_mode == "paged":
+            return self._admit_paged(requests, clock)
         free = self.free_slots()
         take = list(requests)[:len(free)]
         if not take:
@@ -167,6 +224,10 @@ class RolloutEngine:
         tok0, lp0, sub_cache = self._jit_prefill(
             self.params, jnp.asarray(toks), jnp.asarray(lens), self._next_rng())
         self.cache = self._jit_insert(self.cache, sub_cache, jnp.asarray(slot_ids))
+        self._activate_slots(take, free, lens, tok0, lp0, clock)
+        return len(take)
+
+    def _activate_slots(self, take, free, lens, tok0, lp0, clock) -> None:
         tok0 = np.asarray(tok0)
         lp0 = np.asarray(lp0)
         for j, req in enumerate(take):
@@ -183,15 +244,93 @@ class RolloutEngine:
             s.answer = req.get("answer")
             s.submit_time = clock
             self.prefill_tokens += int(lens[j])
+
+    # ---- paged admission (prefix block reuse) -----------------------------
+    def blocks_needed(self, prompt: Sequence[int]) -> int:
+        """Worst-case pool blocks a request occupies (before sharing):
+        enough table entries to cover the prompt plus every token the
+        decode loop can feed back (the last sampled token stays pending
+        and is never written)."""
+        lp = max(min(len(prompt), self.prompt_len), 1)
+        return -(-(lp + self.max_gen_len - 1) // self.block_size)
+
+    def _admit_paged(self, requests: Sequence[Dict], clock: float) -> int:
+        free = self.free_slots()
+        g = self.n_slots
+        bs = self.block_size
+        toks = np.zeros((g, self.prompt_len), np.int32)
+        lens = np.zeros((g,), np.int32)
+        dest = np.full((g, self.prompt_len), -1, np.int32)
+        slot_ids = np.full((g,), self.n_slots + 1, np.int32)   # OOB -> dropped
+        take: List[Dict] = []
+        for req in requests:
+            if len(take) >= len(free):
+                break
+            p = list(req["prompt"])[: self.prompt_len]
+            need = self.blocks_needed(p)
+            n_full = len(p) // bs
+            try:
+                # full prompt blocks: shared where the prefix hash hits
+                prefix, reused = self.allocator.plan_prefix(self.version, p)
+            except MemoryError:
+                break
+            if self.allocator.n_free < need - n_full:
+                for b in prefix:
+                    self.allocator.release(b)
+                break                      # pool full: request stays queued
+            tail = [self.allocator.alloc(self.version)
+                    for _ in range(need - n_full)]
+            row = prefix + tail
+            j = len(take)
+            i = free[j]
+            self.tables[i, :] = -1
+            self.tables[i, :len(row)] = row
+            toks[j, :len(p)] = p
+            lens[j] = max(len(p), 1)
+            slot_ids[j] = i
+            # write every position the prefill ingests — lens[j], not
+            # len(p): an empty prompt still feeds one pad token whose KV
+            # the ring engine stores, and a fresh pool block may hold a
+            # released request's stale contents
+            for pos in range(int(lens[j])):
+                e = pos // bs
+                if e >= reused:            # shared blocks are already filled
+                    dest[j, pos] = row[e]
+            self.prefix_reused_blocks += reused
+            take.append(req)
+        if not take:
+            return 0
+        self._tables_dev = None
+        tok0, lp0, self.cache = self._jit_prefill_paged(
+            self.params, jnp.asarray(toks), jnp.asarray(lens),
+            jnp.asarray(dest), jnp.asarray(slot_ids), self.cache,
+            self._next_rng())
+        self._activate_slots(take, free, lens, tok0, lp0, clock)
         return len(take)
+
+    def _release_slot_blocks(self, i: int) -> None:
+        for b in self.tables[i]:
+            if b >= 0:
+                self.allocator.release(int(b))
+        self.tables[i, :] = -1
+        self._tables_dev = None
 
     def step(self) -> List[Finished]:
         """One decode step across all slots; returns finished trajectories."""
         if self.n_active == 0:
             return []
         pend = np.array([s.pending for s in self.slots], np.int32)
-        tok, lp, self.cache = self._jit_decode(
-            self.params, jnp.asarray(pend), self.cache, self._next_rng())
+        if self.cache_mode == "paged":
+            # tables only change at admission/finish/interrupt; keep the
+            # decode loop free of per-step host->device table uploads
+            if self._tables_dev is None:
+                self._tables_dev = jnp.asarray(self.tables)
+            tok, lp, self.cache = self._jit_decode_paged(
+                self.params, jnp.asarray(pend), self.cache,
+                self._tables_dev, self._next_rng())
+        else:
+            tok, lp, self.cache = self._jit_decode(
+                self.params, jnp.asarray(pend), self.cache, self._next_rng())
         tok = np.asarray(tok)
         lp = np.asarray(lp)
         finished: List[Finished] = []
@@ -214,6 +353,8 @@ class RolloutEngine:
                     versions=list(s.versions),
                     behavior_version=s.behavior_version, answer=s.answer,
                     submit_time=s.submit_time, truncated=trunc and not done))
+                if self.cache_mode == "paged":
+                    self._release_slot_blocks(i)
                 self.slots[i] = Slot()
         return finished
 
@@ -225,10 +366,23 @@ class RolloutEngine:
         if not interruptible and self.n_active > 0:
             self._pending_weights = (params, version)
             return False
+        same_version = version == self.version
+        params_changed = params is not self.params
         self.params = params
         self.version = version
+        if self.cache_mode == "paged" and (params_changed or not same_version):
+            # stale prefix hashes must never match again: the version seed
+            # handles a bump, clearing handles new params under a REUSED
+            # version number (the tag no longer identifies the contents)
+            self.allocator.clear_prefix_map()
         if self.n_active > 0:
-            self._reprefill_all()
+            if self.cache_mode == "paged":
+                # force: version tags can't detect staleness when the
+                # caller swapped params without bumping the version —
+                # rewrite everything, like the ring engine does
+                self._reprefill_paged(force=params_changed and same_version)
+            else:
+                self._reprefill_all()
             self.interruptions += 1
         return True
 
@@ -237,6 +391,8 @@ class RolloutEngine:
             params, version = self._pending_weights
             self._pending_weights = None
             self.params = params
+            if self.cache_mode == "paged":
+                self.allocator.clear_prefix_map()
             self.version = version
             return True
         return False
@@ -261,7 +417,9 @@ class RolloutEngine:
         for i, s in enumerate(self.slots):
             if not s.active:
                 continue
-            hist = (s.prompt + s.response[:-1])[:L]
+            # an empty prompt was admitted as one pad token: the re-fed
+            # history must include it or every position shifts by one
+            hist = ((s.prompt or [0]) + s.response[:-1])[:L]
             toks[i, :len(hist)] = hist
             lens[i] = len(hist)
             slot_ids[i] = i
@@ -277,3 +435,50 @@ class RolloutEngine:
             self.params, jnp.asarray(toks), jnp.asarray(lens), jax.random.key(0))
         self.cache = self._jit_insert(self.cache, sub_cache,
                                       jnp.asarray(slot_ids))
+
+    def _reprefill_paged(self, force: bool = False) -> None:
+        """Paged counterpart of ``_reprefill_all``: the forward re-scan is
+        the same full-width flash pass, but the pool *writes* are planned
+        per physical block — a block is rewritten only if its contents
+        are stale (version tag != the new version, or ``force``) and only
+        by ONE of the slots referencing it, so a prompt shared by a GRPO
+        group is recomputed once instead of once per slot.  Recurrent
+        state is still re-scanned per slot (per-slot, nothing to dedup)."""
+        g = self.n_slots
+        L = self.max_len
+        bs = self.block_size
+        toks = np.zeros((g, L), np.int32)
+        lens = np.zeros((g,), np.int32)
+        dest = np.full((g, L), -1, np.int32)
+        slot_ids = np.full((g,), self.n_slots + 1, np.int32)
+        written = set()
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                continue
+            # effective history includes the pad token an empty prompt
+            # was admitted with (see _reprefill_all)
+            hist = ((s.prompt or [0]) + s.response[:-1])[:L]
+            toks[i, :len(hist)] = hist
+            lens[i] = len(hist)
+            slot_ids[i] = i
+            for e in range(-(-len(hist) // bs)):
+                b = int(self.tables[i, e])
+                if b < 0 or b in written:
+                    continue               # another sharer rewrites it
+                written.add(b)
+                if not force and self.allocator.version_of(b) == self.version:
+                    continue               # contents already current
+                lo, hi = e * bs, min((e + 1) * bs, len(hist))
+                dest[i, lo:hi] = b
+                self.reprefill_tokens += hi - lo
+                self.allocator.set_version(b, self.version)
+            # re-publish full prompt blocks under the new version's hashes
+            # so post-interrupt admissions keep sharing them
+            for e, h in enumerate(prefix_block_hashes(
+                    self.version, s.prompt, bs)):
+                self.allocator.register(h, int(self.tables[i, e]))
+        lens = np.maximum(lens, 1)
+        _, _, self.cache = self._jit_prefill_paged(
+            self.params, jnp.asarray(toks), jnp.asarray(lens),
+            jnp.asarray(dest), jnp.asarray(slot_ids), self.cache,
+            jax.random.key(0))

@@ -213,14 +213,22 @@ def make_cache_specs(cfg: ModelConfig, mesh, cache):
 
     Cache layout (models/model.py): ``units`` leaves are stacked
     (n_units, B, ...) — batch axis 1; ``rem`` leaves and ``t`` are
-    batch-major.
-    """
+    batch-major.  Paged pools (``k_pool``/``v_pool``: (..., N, bs, Hkv,
+    hd), DESIGN.md §Paged KV-cache pool) have no batch dim — any slot's
+    block table may name any physical block, so the pool is the
+    per-worker HBM budget, replicated over the data axes with only the
+    KV heads on "model"."""
     msize = _model_size(mesh)
 
     def spec(path, leaf):
         names = _path_names(path)
         shape = tuple(leaf.shape)
         rank = len(shape)
+        if names[-1] in ("k_pool", "v_pool"):
+            entries = [None] * rank
+            if shape[-2] % msize == 0:     # shape[-2] IS cfg.n_kv_heads
+                entries[-2] = "model"
+            return P(*entries)
         bdim = 1 if names and names[0] == "units" and rank >= 2 else 0
         entries = [None] * rank
         entries[bdim] = batch_spec(mesh, shape[bdim])

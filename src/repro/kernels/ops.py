@@ -20,6 +20,7 @@ from repro.kernels import ref as _ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.linear_scan import linear_scan_pallas
+from repro.kernels.paged_decode_attention import paged_decode_attention_pallas
 
 _BACKEND = "jnp"
 _LANE = 128
@@ -109,6 +110,33 @@ def decode_attention(q, k_cache, v_cache, cache_pos, t, *, window: int = 0,
     out = decode_attention_pallas(qp, kp, vp, pos, t, window=window,
                                   softmax_scale=scale, block_w=bw,
                                   interpret=(backend == "pallas_interpret"))
+    return out[:, :, :hd]
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (block-table KV pool)
+# ---------------------------------------------------------------------------
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, t, *,
+                           window: int = 0,
+                           softmax_scale: Optional[float] = None,
+                           backend: Optional[str] = None):
+    """q: (B, H, hd); pools: (N, bs, Hkv, hd); block_tables: (B, E) int32
+    (-1 = unbound); t: (B,) int32.  See DESIGN.md §Paged KV-cache pool."""
+    backend = backend or _BACKEND
+    if backend == "jnp":
+        return _ref.paged_decode_attention(q, k_pool, v_pool, block_tables, t,
+                                           window=window,
+                                           softmax_scale=softmax_scale)
+    b, h, hd = q.shape
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    hdp = _round_up(hd, _LANE)
+    qp = _pad_axis(q, 2, hdp)
+    kp = _pad_axis(k_pool, 3, hdp)
+    vp = _pad_axis(v_pool, 3, hdp)
+    out = paged_decode_attention_pallas(
+        qp, kp, vp, block_tables, t, window=window, softmax_scale=scale,
+        interpret=(backend == "pallas_interpret"))
     return out[:, :, :hd]
 
 

@@ -1,0 +1,117 @@
+"""Pallas TPU paged flash-decoding: one query token vs. a block-table
+indexed KV pool.
+
+This is the paged counterpart of ``decode_attention.py`` and the hot
+kernel of the paged rollout engine (DESIGN.md §Paged KV-cache pool):
+the KV cache is a global pool of N fixed-size blocks, and each slot
+owns a *block table* mapping logical block e (absolute positions
+[e*bs, (e+1)*bs)) to a physical pool block.  Shared prompt prefixes
+point several tables at the same physical block, so the kernel is the
+read path for prefix reuse as well.
+
+The grid iterates (slot, q-head, table-entry) with the table-entry axis
+sequential.  The block table and the per-slot position ``t`` are
+scalar-prefetch operands: the BlockSpec index map reads
+``tables[b, e]`` to stream exactly the physical (bs, hd) tile the slot
+references — the gather happens in the DMA schedule, not in compute.
+Each step folds the tile into online-softmax running statistics.
+Masking is purely positional (entry unbound, beyond ``t``, or outside
+the sliding window), so partial last blocks, empty slots, and windows
+need no special cases.
+
+Oracle: ``repro.kernels.ref.paged_decode_attention``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tables_ref, t_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale, window, bs, ne):
+    ib = pl.program_id(0)
+    e = pl.program_id(2)
+
+    @pl.when(e == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    blk = tables_ref[ib, e]                              # physical block id
+    t = t_ref[ib]
+    q = q_ref[0, 0, :].astype(jnp.float32)               # (hd,)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bs, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)            # (bs, hd)
+    s = jnp.sum(k * q[None, :], axis=-1, dtype=jnp.float32)[None, :] * scale
+
+    # positions are implicit in the table entry: entry e holds
+    # [e*bs, (e+1)*bs); unbound entries (-1) mask the whole tile.
+    pos = e * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    mask = (blk >= 0) & (pos <= t)
+    if window > 0:
+        mask &= pos > t - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                  # (1, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)         # (1, bs)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(e == ne - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :] = (acc_ref[...] / l)[0].astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(q, k_pool, v_pool, block_tables, t, *,
+                                  window=0, softmax_scale=None,
+                                  interpret=True):
+    """q: (B, H, hd); pools: (N, bs, Hkv, hd); block_tables: (B, E) int32
+    (-1 = unbound entry); t: (B,) int32 current absolute position."""
+    b, h, hd = q.shape
+    n, bs, hkv, _ = k_pool.shape
+    e = block_tables.shape[1]
+    group = h // hkv
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+
+    grid = (b, h, e)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                  # block_tables, t
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b_, h_, e_, bt, tt: (b_, h_, 0)),
+            # the paged gather: the physical pool block streamed at step
+            # (b, h, e) is whatever the slot's table names (clamped so
+            # unbound -1 entries stay addressable; they are masked out).
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b_, h_, e_, bt, tt, g=group:
+                         (jnp.maximum(bt[b_, e_], 0), 0, h_ // g, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b_, h_, e_, bt, tt, g=group:
+                         (jnp.maximum(bt[b_, e_], 0), 0, h_ // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd),
+                               lambda b_, h_, e_, bt, tt: (b_, h_, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window, bs=bs, ne=e),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), t.astype(jnp.int32), q, k_pool, v_pool)

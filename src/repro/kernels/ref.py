@@ -156,6 +156,37 @@ def decode_attention(q, k_cache, v_cache, cache_pos, t, *, window: int = 0,
     return out.reshape(b, h, hd).astype(q.dtype)
 
 
+def paged_decode_attention(q, k_pool, v_pool, block_tables, t, *,
+                           window: int = 0,
+                           softmax_scale: Optional[float] = None):
+    """Single-token attention against a paged KV-block pool.
+
+    q: (B, H, hd) — the current token's query (at absolute position t).
+    k_pool, v_pool: (N, bs, Hkv, hd) — the global pool of N fixed-size
+    KV blocks shared by every slot (DESIGN.md §Paged KV-cache pool).
+    block_tables: (B, E) int32 — per-slot logical->physical block map;
+    entry e covers absolute positions [e*bs, (e+1)*bs); -1 = unbound.
+    t: (B,) int32 current position.  window > 0 masks positions
+    <= t - window.  Returns (B, H, hd).
+
+    Semantics of record: gather each slot's blocks into a flat (B, E*bs)
+    cache with explicit positions and defer to ``decode_attention`` —
+    positional masking makes partial last blocks, unbound entries, and
+    sliding windows fall out of the same rule.
+    """
+    b = q.shape[0]
+    n, bs, hkv, hd = k_pool.shape
+    e = block_tables.shape[1]
+    safe = jnp.clip(block_tables, 0, n - 1)                 # (B, E)
+    kg = k_pool[safe].reshape(b, e * bs, hkv, hd)
+    vg = v_pool[safe].reshape(b, e * bs, hkv, hd)
+    pos = jnp.broadcast_to(jnp.arange(e * bs, dtype=jnp.int32)[None], (b, e * bs))
+    bound = jnp.repeat(block_tables >= 0, bs, axis=1)       # (B, E*bs)
+    cache_pos = jnp.where(bound, pos, -1)
+    return decode_attention(q, kg, vg, cache_pos, t, window=window,
+                            softmax_scale=softmax_scale)
+
+
 def linear_scan(a, x, h0=None):
     """Diagonal linear recurrence  h_t = a_t * h_{t-1} + x_t.
 

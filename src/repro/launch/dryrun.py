@@ -89,6 +89,7 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
                  fsdp: bool = True, fsdp_pods: bool = False,
                  vocab_parallel: bool = False,
                  remat_policy: str = "none", accum_steps: int = 8,
+                 paged_cache: bool = False, block_size: int = 16,
                  extra: str = ""):
     cfg = get_model_config(arch)
     shape = get_shape(shape_name)
@@ -96,7 +97,14 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
            "mesh": "2x16x16" if multi_pod else "16x16",
            "kind": shape.kind, "fsdp": fsdp, "vocab_parallel": vocab_parallel,
            "remat_policy": remat_policy, "accum_steps": accum_steps,
+           "paged_cache": paged_cache,
            "extra": extra}
+
+    if paged_cache and (shape.kind != "decode" or cfg.is_encdec):
+        rec["status"] = "skipped"
+        rec["reason"] = ("--paged-cache applies to decoder-only decode "
+                        "shapes (DESIGN.md §Arch-applicability)")
+        return rec
 
     if shape.kind == "decode" and shape.seq_len >= 500_000 \
             and not cfg.supports_long_decode:
@@ -155,6 +163,31 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
                 out_shardings=(jax.NamedSharding(mesh, logit_spec),
                                sharding.named(mesh, cspecs)))
             lowered = jitted.lower(params_shape, batch_shape)
+        elif shape.kind == "decode" and paged_cache:
+            # paged pool sized for equal worst-case capacity: every slot
+            # can hold seq_len tokens (prefix sharing only shrinks usage)
+            step = steps_mod.make_paged_serve_step(model)
+            n_blocks = shape.global_batch * (-(-shape.seq_len // block_size))
+            cache_shape, tables_shape = model_mod.paged_cache_specs(
+                model, cfg, shape.global_batch, shape.seq_len, block_size,
+                n_blocks, dtype)
+            cspecs = sharding.make_cache_specs(cfg, mesh, cache_shape)
+            bspec = sharding.batch_spec(mesh, shape.global_batch)
+            tok_shape = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+            tok_spec = jax.sharding.PartitionSpec(bspec)
+            tables_spec = jax.sharding.PartitionSpec(bspec, None)
+            logit_spec = jax.sharding.PartitionSpec(bspec, "model")
+            jitted = jax.jit(
+                step,
+                in_shardings=(sharding.named(mesh, pspecs),
+                              jax.NamedSharding(mesh, tok_spec),
+                              sharding.named(mesh, cspecs),
+                              jax.NamedSharding(mesh, tables_spec)),
+                out_shardings=(jax.NamedSharding(mesh, logit_spec),
+                               sharding.named(mesh, cspecs)),
+                donate_argnums=(2,))
+            lowered = jitted.lower(params_shape, tok_shape, cache_shape,
+                                   tables_shape)
         else:  # decode
             step = steps_mod.make_serve_step(model)
             cache_shape = model_mod.cache_specs(model, cfg, shape.global_batch,
@@ -218,6 +251,12 @@ def main(argv=None):
     ap.add_argument("--remat-policy", default="none", choices=["none", "dots"])
     ap.add_argument("--accum", type=int, default=8,
                     help="grad-accumulation micro-steps inside train_step")
+    ap.add_argument("--paged-cache", action="store_true",
+                    help="decode shapes: lower the paged block-pool decode "
+                         "step (DESIGN.md §Paged KV-cache pool) instead of "
+                         "the ring-buffer serve_step")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV block width (tokens) for --paged-cache")
     ap.add_argument("--extra", default="", help="free-form variant tag")
     ap.add_argument("--out", default=None, help="output dir for JSON records")
     args = ap.parse_args(argv)
@@ -238,6 +277,8 @@ def main(argv=None):
                                vocab_parallel=args.vocab_parallel,
                                remat_policy=args.remat_policy,
                                accum_steps=args.accum,
+                               paged_cache=args.paged_cache,
+                               block_size=args.block_size,
                                extra=args.extra)
         except Exception as e:  # a dry-run failure is a bug in the system
             rec = {"arch": arch, "shape": shp,
@@ -252,7 +293,8 @@ def main(argv=None):
                 arch, shp, rec.get("mesh", ""),
                 "vp" if args.vocab_parallel else "",
                 args.remat_policy if args.remat_policy != "none" else "",
-                "nofsdp" if args.no_fsdp else "", args.extra]))
+                "nofsdp" if args.no_fsdp else "",
+                "paged" if args.paged_cache else "", args.extra]))
             with open(os.path.join(args.out, tag + ".json"), "w") as f:
                 json.dump(rec, f, indent=2)
     return 0 if ok else 1

@@ -4,6 +4,7 @@ optional periodic weight refresh from a checkpoint directory (the
 production pattern: rollout pods polling the trainer's parameter store).
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --requests 32
+    PYTHONPATH=src python -m repro.launch.serve --cache paged --block-size 16
 """
 from __future__ import annotations
 
@@ -32,6 +33,17 @@ def main():
     ap.add_argument("--ckpt", default="", help="load weights from checkpoint")
     ap.add_argument("--refresh-every", type=int, default=0,
                     help="decode steps between weight refresh interrupts")
+    ap.add_argument("--cache", default="ring", choices=["ring", "paged"],
+                    help="KV-cache organization: 'ring' = per-slot ring "
+                         "buffers (default); 'paged' = global block pool + "
+                         "per-slot block tables with prompt-prefix sharing "
+                         "(DESIGN.md §Paged KV-cache pool)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block for --cache paged "
+                         "(default: 16)")
+    ap.add_argument("--pool-blocks", type=int, default=0,
+                    help="paged pool size in blocks; 0 = worst-case "
+                         "(slots * ceil(max_len / block_size))")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -44,7 +56,9 @@ def main():
         print(f"loaded checkpoint {args.ckpt} (version {meta.get('version')})")
     engine = RolloutEngine(model, params, n_slots=args.slots,
                            prompt_len=args.prompt_len,
-                           max_gen_len=args.max_gen, seed=args.seed)
+                           max_gen_len=args.max_gen, seed=args.seed,
+                           cache=args.cache, block_size=args.block_size,
+                           n_blocks=args.pool_blocks or None)
 
     gen = MathTaskGenerator(seed=args.seed)
     pending = []
@@ -67,12 +81,16 @@ def main():
             raise RuntimeError("serve loop did not converge")
     dt = time.time() - t0
     toks = sum(len(f.response) for f in done)
-    print(json.dumps({
+    out = {
         "requests": len(done), "decode_steps": steps,
         "generated_tokens": toks, "tokens_per_s": round(toks / dt, 1),
         "interruptions": engine.interruptions,
         "mean_len": round(toks / len(done), 2),
-    }))
+    }
+    if args.cache == "paged":
+        out["prefix_reused_blocks"] = engine.prefix_reused_blocks
+        out["reprefill_tokens"] = engine.reprefill_tokens
+    print(json.dumps(out))
 
 
 if __name__ == "__main__":

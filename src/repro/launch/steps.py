@@ -150,3 +150,13 @@ def make_serve_step(model):
     def serve_step(params, token, cache):
         return model.decode_step(params, token, cache)
     return serve_step
+
+
+def make_paged_serve_step(model):
+    """Paged-cache decode step (DESIGN.md §Paged KV-cache pool):
+    paged_serve_step(params, token, cache, tables) -> (logits, cache) —
+    ONE new token against the block-pool cache through the per-slot
+    block tables."""
+    def paged_serve_step(params, token, cache, tables):
+        return model.decode_step_paged(params, token, cache, tables)
+    return paged_serve_step

@@ -146,6 +146,97 @@ def attn_decode_step(cfg: ModelConfig, params, x_t, t, cache, *, window: int = 0
 
 
 # ---------------------------------------------------------------------------
+# KV cache (paged block pool)
+# ---------------------------------------------------------------------------
+#
+# The paged cache replaces the per-slot (B, W, ...) ring with a global
+# pool of fixed-size blocks plus a per-slot block table held OUTSIDE the
+# layer caches (it is shared by every attention layer; see
+# DESIGN.md §Paged KV-cache pool).  Layer state is only the pool:
+#   {"k_pool": (N, bs, Hkv, hd), "v_pool": (N, bs, Hkv, hd)}
+# Token positions are implicit — table entry e covers absolute positions
+# [e*bs, (e+1)*bs) — so there is no ``pos`` array; validity is decided
+# positionally from (table entry, t, window) at read time.  Windowed
+# layers mask instead of wrapping: blocks wholly outside the window stay
+# allocated (reclamation is a noted extension, not a correctness issue).
+
+
+def init_paged_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
+                     dtype=jnp.float32):
+    shape = (n_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+    return {"k_pool": jnp.zeros(shape, dtype), "v_pool": jnp.zeros(shape, dtype)}
+
+
+def _pool_scatter(pool, dest, offsets, vals):
+    """pool: (N, bs, Hkv, hd); dest/offsets: (T,) physical block / in-block
+    slot per token (dest < 0 = skip); vals: (T, Hkv, hd).  Out-of-range
+    rows are dropped, so masked tokens simply don't write."""
+    n = pool.shape[0]
+    safe = jnp.where(dest >= 0, dest, n)                  # OOB -> dropped
+    return pool.at[safe, offsets].set(vals.astype(pool.dtype), mode="drop")
+
+
+def prefill_into_paged_cache(cfg: ModelConfig, params, x, positions, pool,
+                             dest_blocks, *, valid=None, window: int = 0):
+    """Full attention over the (right-padded) rows AND write K/V into the
+    paged pool.
+
+    dest_blocks: (B, S) int32 physical destination block for each token,
+    -1 = do not write (padding, or a shared read-only prefix block some
+    other slot already populated).  The attention math is row-local —
+    every key a prompt token needs is inside its own row — so prefix
+    sharing only changes which rows *write* a block, never what is read.
+    """
+    b, s, _ = x.shape
+    bs = pool["k_pool"].shape[1]
+    if valid is None:
+        valid = jnp.ones((b, s), bool)
+    segment_ids = jnp.where(valid, 0, -1).astype(jnp.int32)
+    q, k, v = _project_qkv(cfg, params, x, positions)
+    out = ops.flash_attention(q, k, v, segment_ids, causal=True, window=window)
+
+    dest = jnp.where(valid, dest_blocks, -1).reshape(-1)
+    offsets = (positions % bs).reshape(-1)
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    new_pool = {
+        "k_pool": _pool_scatter(pool["k_pool"], dest, offsets,
+                                k.reshape(-1, hkv, hd)),
+        "v_pool": _pool_scatter(pool["v_pool"], dest, offsets,
+                                v.reshape(-1, hkv, hd)),
+    }
+    o = layers.matmul(out.reshape(b, s, cfg.q_dim), params["wo"])
+    return o, new_pool
+
+
+def attn_decode_step_paged(cfg: ModelConfig, params, x_t, t, pool,
+                           block_tables, *, window: int = 0):
+    """One-token decode against the paged pool.  x_t: (B, d); t: (B,)
+    absolute position; block_tables: (B, E) int32 (-1 = unbound)."""
+    b, d = x_t.shape
+    bs = pool["k_pool"].shape[1]
+    q = layers.matmul(x_t, params["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    k = layers.matmul(x_t, params["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = layers.matmul(x_t, params["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = layers.head_norm_apply(params["q_norm"], q)
+        k = layers.head_norm_apply(params["k_norm"], k)
+    q = layers.apply_rope(q, t[:, None], cfg.rope_theta)
+    k = layers.apply_rope(k, t[:, None], cfg.rope_theta)
+
+    # write the current token at (table[t // bs], t % bs); slots whose
+    # entry is unbound (inactive slot / dummy row) drop the write
+    entry = jnp.clip(t // bs, 0, block_tables.shape[1] - 1)
+    dest = jnp.take_along_axis(block_tables, entry[:, None], axis=1)[:, 0]
+    pool = {
+        "k_pool": _pool_scatter(pool["k_pool"], dest, t % bs, k[:, 0]),
+        "v_pool": _pool_scatter(pool["v_pool"], dest, t % bs, v[:, 0]),
+    }
+    out = ops.paged_decode_attention(q[:, 0], pool["k_pool"], pool["v_pool"],
+                                     block_tables, t, window=window)
+    return layers.matmul(out.reshape(b, cfg.q_dim), params["wo"]), pool
+
+
+# ---------------------------------------------------------------------------
 # Cross attention (whisper decoder)
 # ---------------------------------------------------------------------------
 

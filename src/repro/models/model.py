@@ -87,6 +87,18 @@ def cache_specs(model, cfg: ModelConfig, batch: int, max_len: int,
     return jax.eval_shape(lambda: model.init_cache(batch, max_len, dtype))
 
 
+def paged_cache_specs(model, cfg: ModelConfig, batch: int, max_len: int,
+                      block_size: int, n_blocks: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytrees of the paged decode cache and the (B, E)
+    block-table stand-in, E = ceil(max_len / block_size)
+    (DESIGN.md §Paged KV-cache pool; no alloc)."""
+    cache = jax.eval_shape(
+        lambda: model.init_paged_cache(batch, n_blocks, block_size, dtype))
+    entries = -(-max_len // block_size)
+    tables = jax.ShapeDtypeStruct((batch, max(entries, 1)), jnp.int32)
+    return cache, tables
+
+
 def param_specs(model, cfg: ModelConfig, dtype=jnp.bfloat16):
     return jax.eval_shape(
         lambda: model.init(jax.random.key(0), dtype))

@@ -163,6 +163,50 @@ def block_prefill(cfg: ModelConfig, bt: str, p, h, positions, cache, valid=None)
     raise ValueError(bt)
 
 
+def block_prefill_paged(cfg: ModelConfig, bt: str, p, h, positions, cache,
+                        dest_blocks, slot_ids, valid=None):
+    """Paged-cache prefill dispatch (DESIGN.md §Paged KV-cache pool).
+
+    Attention blocks write K/V straight into the *global* block pool at
+    ``dest_blocks`` (the pool is shared state, not per-row, so there is
+    no separate cache_insert step).  Recurrent blocks have O(1) per-slot
+    state with nothing to page: their state re-scan runs per row exactly
+    as in the ring path and the result rows scatter into the slot-major
+    state arrays at ``slot_ids`` (OOB ids = dummy rows, dropped).
+    """
+    if bt in ATTN_KINDS:
+        hin = layers.norm_apply(cfg, p["attn_norm"], h)
+        a, cache = attention.prefill_into_paged_cache(
+            cfg, p["attn"], hin, positions, cache, dest_blocks, valid=valid,
+            window=_block_window(cfg, bt))
+        h = h + a
+        hin = layers.norm_apply(cfg, p["mlp_norm"], h)
+        y = moe.moe_apply(cfg, p["moe"], hin)[0] if cfg.is_moe \
+            else layers.mlp_apply(cfg, p["mlp"], hin)
+        return h + y, cache
+    h, sub = block_prefill(cfg, bt, p, h, positions, None, valid=valid)
+    full = jax.tree.map(
+        lambda f, s: f.at[slot_ids].set(s.astype(f.dtype), mode="drop"),
+        cache, sub)
+    return h, full
+
+
+def block_decode_paged(cfg: ModelConfig, bt: str, p, h_t, t, cache, tables):
+    """One-token paged dispatch: attention reads/writes the block pool
+    through the slot block tables; recurrent blocks are unchanged."""
+    if bt in ATTN_KINDS:
+        hin = layers.norm_apply(cfg, p["attn_norm"], h_t)
+        a, cache = attention.attn_decode_step_paged(
+            cfg, p["attn"], hin, t, cache, tables,
+            window=_block_window(cfg, bt))
+        h_t = h_t + a
+        hin = layers.norm_apply(cfg, p["mlp_norm"], h_t)
+        y = moe.moe_apply(cfg, p["moe"], hin)[0] if cfg.is_moe \
+            else layers.mlp_apply(cfg, p["mlp"], hin)
+        return h_t + y, cache
+    return block_decode(cfg, bt, p, h_t, t, cache)
+
+
 def block_decode(cfg: ModelConfig, bt: str, p, h_t, t, cache):
     """One token.  h_t: (B, d); t: (B,) absolute positions."""
     if bt in ATTN_KINDS:
@@ -363,6 +407,107 @@ class LM:
             "rem": jax.tree.map(ins_b, full["rem"], sub["rem"]),
             "t": full["t"].at[slots].set(sub["t"], mode="drop"),
         }
+
+    # ---- paged serving (DESIGN.md §Paged KV-cache pool) ------------------
+    def init_paged_cache(self, batch: int, n_blocks: int, block_size: int,
+                         dtype=jnp.float32):
+        """Paged decode cache: attention layers hold slices of a global
+        (n_blocks, block_size, Hkv, hd) KV pool — no per-slot width —
+        while recurrent layers keep their O(1) slot-major state.  The
+        per-slot block table lives with the caller (it is host-managed
+        and shared by every attention layer), so it is an argument to
+        ``prefill_paged``/``decode_step_paged``, not a cache leaf."""
+        cfg = self.cfg
+
+        def single(bt):
+            if bt in ATTN_KINDS:
+                return attention.init_paged_cache(cfg, n_blocks, block_size,
+                                                  dtype)
+            return block_init_cache(cfg, bt, batch, 0, dtype)
+
+        caches = []
+        for bt in self.pattern:
+            stacked = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (self.n_units,) + x.shape),
+                single(bt))
+            caches.append(stacked)
+        rem = tuple(single(self.pattern[j]) for j in range(self.n_rem))
+        return {"units": tuple(caches), "rem": rem,
+                "t": jnp.zeros((batch,), jnp.int32)}
+
+    def prefill_paged(self, params, tokens, cache, dest_blocks, slot_ids, *,
+                      positions=None, length=None):
+        """Group prefill into the paged pool.  ``dest_blocks``: (G, S)
+        int32 physical destination block per token (-1 = don't write:
+        padding, or a shared prefix block another slot already holds);
+        ``slot_ids``: (G,) target slots for recurrent state and ``t``
+        (out-of-range = dummy row).  Attention is row-local, so shared
+        blocks change only who writes, never what is computed."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                         (b, s))
+        if length is None:
+            length = jnp.full((b,), s, jnp.int32)
+        valid = positions < length[:, None]
+        h, positions = self._embed(params, tokens, positions, None)
+
+        def unit_fn(h, xs):
+            unit_params, unit_cache = xs
+            new_cache = []
+            for j, bt in enumerate(self.pattern):
+                h, c = block_prefill_paged(cfg, bt, unit_params[j], h,
+                                           positions, unit_cache[j],
+                                           dest_blocks, slot_ids, valid=valid)
+                new_cache.append(c)
+            return h, tuple(new_cache)
+
+        h, new_caches = jax.lax.scan(unit_fn, h, (params["units"], cache["units"]))
+        rem_caches = []
+        for j in range(self.n_rem):
+            h, c = block_prefill_paged(cfg, self.pattern[j], params["rem"][j],
+                                       h, positions, cache["rem"][j],
+                                       dest_blocks, slot_ids, valid=valid)
+            rem_caches.append(c)
+        h = layers.norm_apply(cfg, params["final_norm"], h)
+        idx = jnp.clip(length - 1, 0, h.shape[1] - 1)
+        h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
+        logits = self.logits(params, h_last)
+        t = cache["t"].at[slot_ids].set(length, mode="drop")
+        return logits, {"units": new_caches, "rem": tuple(rem_caches), "t": t}
+
+    def decode_step_paged(self, params, token, cache, tables):
+        """token: (B,) int32; tables: (B, E) int32 slot block tables.
+        Returns (logits (B, Vp), new cache)."""
+        cfg = self.cfg
+        t = cache["t"]
+        h = layers.embed_apply(params["embed"], token)
+        if cfg.rope_theta <= 0:
+            pe = layers.sinusoidal_positions(cfg.max_position_embeddings,
+                                             cfg.d_model)
+            h = h + jnp.take(pe, jnp.clip(t, 0, pe.shape[0] - 1),
+                             axis=0).astype(h.dtype)
+
+        def unit_fn(h, xs):
+            unit_params, unit_cache = xs
+            new_cache = []
+            for j, bt in enumerate(self.pattern):
+                h, c = block_decode_paged(cfg, bt, unit_params[j], h, t,
+                                          unit_cache[j], tables)
+                new_cache.append(c)
+            return h, tuple(new_cache)
+
+        h, new_caches = jax.lax.scan(unit_fn, h, (params["units"], cache["units"]))
+        rem_caches = []
+        for j in range(self.n_rem):
+            h, c = block_decode_paged(cfg, self.pattern[j], params["rem"][j],
+                                      h, t, cache["rem"][j], tables)
+            rem_caches.append(c)
+        h = layers.norm_apply(cfg, params["final_norm"], h)
+        logits = self.logits(params, h)
+        return logits, {"units": new_caches, "rem": tuple(rem_caches),
+                        "t": t + 1}
 
     def decode_step(self, params, token, cache):
         """token: (B,) int32.  Returns (logits (B, Vp), new cache)."""

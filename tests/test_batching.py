@@ -94,3 +94,59 @@ def test_pack_rejects_oversize():
         batching.pack_sequences(
             [{"tokens": list(range(100)), "loss_mask": [1.0] * 100,
               "behav_logprob": [0.0] * 100, "advantage": 1.0}], 50)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV block allocator (DESIGN.md §Paged KV-cache pool)
+# ---------------------------------------------------------------------------
+
+def test_block_allocator_free_list_roundtrip():
+    a = batching.BlockAllocator(4, block_size=8)
+    blocks = [a.alloc(version=0) for _ in range(4)]
+    assert sorted(blocks) == [0, 1, 2, 3] and a.n_free == 0
+    with pytest.raises(MemoryError):
+        a.alloc(version=0)
+    for b in blocks:
+        assert a.release(b)
+    assert a.n_free == 4 and a.n_live == 0
+
+
+def test_block_allocator_refcounted_sharing():
+    a = batching.BlockAllocator(4, block_size=8)
+    b = a.alloc(version=0)
+    a.register(123, b)
+    assert a.lookup(123) == b
+    a.retain(a.lookup(123))
+    assert a.refcount(b) == 2
+    assert not a.release(b)            # first sharer leaves: still live
+    assert a.lookup(123) == b          # registration survives refcount > 0
+    assert a.release(b)                # last sharer frees + unregisters
+    assert a.lookup(123) is None and a.n_free == 4
+
+
+def test_prefix_block_hashes_chain():
+    toks = list(range(20))
+    h = batching.prefix_block_hashes(0, toks, 8)
+    assert len(h) == 2                 # only full blocks; 4-token tail ignored
+    # chained: same prefix -> same chain; any earlier divergence breaks it
+    h2 = batching.prefix_block_hashes(0, toks[:16] + [99, 98], 8)
+    assert h2 == h
+    div = batching.prefix_block_hashes(0, [7] + toks[1:], 8)
+    assert div[0] != h[0] and div[1] != h[1]
+    # version is part of the seed: a weight bump invalidates every hash
+    assert batching.prefix_block_hashes(1, toks, 8) != h
+
+
+def test_plan_prefix_shares_and_rolls_back():
+    a = batching.BlockAllocator(3, block_size=4)
+    p = list(range(8))                 # 2 full blocks
+    b1, reused1 = a.plan_prefix(0, p)
+    assert len(b1) == 2 and reused1 == 0
+    b2, reused2 = a.plan_prefix(0, p)
+    assert b2 == b1 and reused2 == 2   # full reuse, no new blocks
+    assert a.n_free == 1
+    # a prompt needing 2 fresh blocks cannot fit: rollback leaves state intact
+    with pytest.raises(MemoryError):
+        a.plan_prefix(0, [50 + i for i in range(8)])
+    assert a.n_free == 1
+    assert all(a.refcount(b) == 2 for b in b1)

@@ -19,11 +19,12 @@ def _tiny(family="dense", **kw):
     return ModelConfig(**base)
 
 
-def _engine(cfg, seed=0, n_slots=4):
+def _engine(cfg, seed=0, n_slots=4, **kw):
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.key(7))
     return model, params, RolloutEngine(model, params, n_slots=n_slots,
-                                        prompt_len=8, max_gen_len=6, seed=seed)
+                                        prompt_len=8, max_gen_len=6,
+                                        seed=seed, **kw)
 
 
 def _reqs(n, start=0):
@@ -47,6 +48,7 @@ def _run_to_completion(engine, reqs, interrupt_at=()):
     return done
 
 
+@pytest.mark.parametrize("cache", ["ring", "paged"])
 @pytest.mark.parametrize("family,extra", [
     ("dense", {}),
     ("dense", {"sliding_window": 4}),
@@ -55,10 +57,10 @@ def _run_to_completion(engine, reqs, interrupt_at=()):
     ("ssm", {"block_pattern": ("mlstm", "slstm"), "d_ff": 0,
              "n_kv_heads": 4}),
 ])
-def test_interruption_with_same_weights_is_identity(family, extra):
+def test_interruption_with_same_weights_is_identity(family, extra, cache):
     cfg = _tiny(family, **extra)
-    _, _, e1 = _engine(cfg, seed=3)
-    _, _, e2 = _engine(cfg, seed=3)
+    _, _, e1 = _engine(cfg, seed=3, cache=cache, block_size=4)
+    _, _, e2 = _engine(cfg, seed=3, cache=cache, block_size=4)
     d1 = _run_to_completion(e1, _reqs(4))
     d2 = _run_to_completion(e2, _reqs(4), interrupt_at=(1, 3))
     assert e2.interruptions == 2
@@ -126,3 +128,171 @@ def test_inflight_tokens_accounting():
     assert e.inflight_tokens() == 3 * 4      # three 4-token prompts
     e.step()
     assert e.inflight_tokens() == 3 * 5
+
+
+# ---------------------------------------------------------------------------
+# Paged cache engine (DESIGN.md §Paged KV-cache pool)
+# ---------------------------------------------------------------------------
+
+def _group_reqs(n_groups, group, prompt_len=6):
+    """GRPO-style groups: ``group`` samples of each prompt."""
+    out = []
+    for gi in range(n_groups):
+        prompt = [1, 40 + gi] + [5 + (gi + j) % 7 for j in range(prompt_len - 2)]
+        for k in range(group):
+            out.append({"rid": gi * group + k, "prompt_id": gi,
+                        "prompt": prompt, "answer": None})
+    return out
+
+
+@pytest.mark.parametrize("family,extra", [
+    ("dense", {}),
+    ("dense", {"sliding_window": 4}),
+    ("hybrid", {"block_pattern": ("rec", "local"), "d_ff": 64,
+                "local_window": 4}),
+])
+def test_paged_engine_matches_ring_engine(family, extra):
+    """Identical seeds -> the paged engine reproduces the ring engine's
+    trajectories exactly, including prefix-shared GRPO groups."""
+    cfg = _tiny(family, **extra)
+    _, _, e_ring = _engine(cfg, seed=5)
+    _, _, e_paged = _engine(cfg, seed=5, cache="paged", block_size=4)
+    reqs = _group_reqs(3, 2)
+    d1 = _run_to_completion(e_ring, reqs)
+    d2 = _run_to_completion(e_paged, reqs)
+    for rid in d1:
+        assert d1[rid].response == d2[rid].response, family
+        np.testing.assert_allclose(d1[rid].logprobs, d2[rid].logprobs,
+                                   atol=1e-4)
+    # groups share full prompt blocks: the 2nd sample of each group reuses
+    assert e_paged.prefix_reused_blocks > 0
+    # every block returned to the free list once all slots drained
+    assert e_paged.allocator.n_live == 0
+
+
+def test_paged_prefix_sharing_across_update_weights():
+    """Prefix-shared groups survive a real (changed-weights) interrupt:
+    the re-prefill rewrites each shared physical block once — not once
+    per slot — and sharing persists for post-interrupt admissions."""
+    cfg = _tiny()
+    model, params, e = _engine(cfg, n_slots=4, cache="paged", block_size=4)
+    e.admit(_group_reqs(1, 4, prompt_len=8))   # one group of 4, 2 full blocks
+    assert e.prefix_reused_blocks == 3 * 2     # 3 followers x 2 shared blocks
+    e.step()
+    new_params = jax.tree.map(lambda x: x * 1.01, params)
+    assert e.update_weights(new_params, version=1)
+    # invalidated writes: 2 shared prompt blocks (8 tokens, written ONCE)
+    # + one partial per-slot block holding the first fed response token
+    assert e.reprefill_tokens == 8 + 4 * 1
+    done = {}
+    steps = 0
+    while len(done) < 4 and steps < 100:
+        for f in e.step():
+            done[f.rid] = f
+        steps += 1
+    assert len(done) == 4
+    for f in done.values():
+        assert set(f.versions) <= {0, 1}
+        assert len(f.versions) == len(f.response)
+    assert e.allocator.n_live == 0
+    # a fresh admission of the same prompt under v1 shares again
+    before = e.prefix_reused_blocks
+    e.admit(_group_reqs(1, 2, prompt_len=8))
+    assert e.prefix_reused_blocks == before + 2
+
+
+def test_paged_new_params_without_version_bump_still_rewrites():
+    """Version tags can't detect staleness when the caller swaps params
+    without bumping the version: the paged engine must fall back to a
+    full rewrite (like the ring engine) instead of silently decoding
+    new-weight queries against old-weight KV."""
+    cfg = _tiny()
+    model, params, e_ring = _engine(cfg, seed=4, cache="ring")
+    _, _, e_paged = _engine(cfg, seed=4, cache="paged", block_size=4)
+    new_params = jax.tree.map(lambda x: x * 1.02, params)
+    reqs = _reqs(3)
+
+    def run(e):
+        done, pending, step = {}, list(reqs), 0
+        while len(done) < len(reqs):
+            k = e.admit(pending)
+            pending = pending[k:]
+            if step == 1:
+                e.update_weights(new_params, version=e.version)  # no bump
+            for f in e.step():
+                done[f.rid] = f
+            step += 1
+            assert step < 300
+        return done
+
+    d1, d2 = run(e_ring), run(e_paged)
+    assert e_paged.reprefill_tokens > 0        # the forced rewrite happened
+    for rid in d1:
+        assert d1[rid].response == d2[rid].response
+        np.testing.assert_allclose(d1[rid].logprobs, d2[rid].logprobs,
+                                   atol=1e-4)
+
+
+def test_paged_empty_prompt_matches_ring_after_pool_reuse():
+    """An empty prompt still feeds one pad token whose KV must be
+    written: a freshly allocated pool block can hold a *released*
+    request's contents, so a dropped write would make the output depend
+    on allocation history (regression test)."""
+    cfg = _tiny()
+    _, _, e_ring = _engine(cfg, seed=9, n_slots=2)
+    _, _, e_paged = _engine(cfg, seed=9, n_slots=2, cache="paged",
+                            block_size=4)
+    # first a normal request dirties pool blocks, then an empty prompt
+    reqs = [{"rid": 0, "prompt_id": 0, "prompt": [1, 4, 5, 6], "answer": None}]
+    d1 = dict(_run_to_completion(e_ring, reqs))
+    d2 = dict(_run_to_completion(e_paged, reqs))
+    empty = [{"rid": 1, "prompt_id": 1, "prompt": [], "answer": None}]
+    d1.update(_run_to_completion(e_ring, empty))
+    d2.update(_run_to_completion(e_paged, empty))
+    for rid in d1:
+        assert d1[rid].response == d2[rid].response
+    # and across a same-weights interrupt: BOTH engines' re-prefills
+    # must re-feed the pad token (the seed ring engine dropped it,
+    # shifting every position by one)
+    for kw in ({}, {"cache": "paged", "block_size": 4}):
+        _, _, e3 = _engine(cfg, seed=9, n_slots=2, **kw)
+        d3 = dict(_run_to_completion(e3, reqs))
+        d3.update(_run_to_completion(e3, empty, interrupt_at=(1,)))
+        for rid in d1:
+            assert d1[rid].response == d3[rid].response, kw
+
+
+def test_paged_pool_exhaustion_defers_admission():
+    """A pool too small for every slot admits what fits; finished slots
+    return blocks and the rest are admitted later."""
+    cfg = _tiny()
+    # each request needs ceil((4 + 6 - 1) / 4) = 3 blocks; pool of 7
+    # admits two distinct prompts, not three
+    model, params, e = _engine(cfg, n_slots=4, cache="paged",
+                               block_size=4, n_blocks=7)
+    reqs = _reqs(3)
+    n = e.admit(reqs)
+    assert n == 2 and e.allocator.n_free == 1
+    done = {}
+    pending = reqs[n:]
+    steps = 0
+    while len(done) < 3 and steps < 200:
+        k = e.admit(pending)
+        pending = pending[k:]
+        for f in e.step():
+            done[f.rid] = f
+        steps += 1
+    assert len(done) == 3
+    assert e.allocator.n_live == 0
+
+
+def test_paged_blocks_scale_with_history_not_max_len():
+    """The memory story: live blocks track what slots actually hold
+    (shared prompts counted once), not n_slots * max_len."""
+    cfg = _tiny()
+    _, _, e = _engine(cfg, n_slots=4, cache="paged", block_size=4)
+    e.admit(_group_reqs(1, 4, prompt_len=8))
+    # ring equivalent: 4 slots x ceil(max_len/bs) = 4 * ceil(14/4) = 16
+    # paged: 2 shared prompt blocks + 4 slots x ceil((8+6-1)/4 - 2) tail
+    assert e.allocator.n_live == 2 + 4 * 2
+    assert e.blocks_in_use() < 4 * (-(-e.max_len // 4))

@@ -1,0 +1,129 @@
+"""Docs consistency checker (the CI docs lane).
+
+Two guarantees:
+
+1. Every ``DESIGN.md §<section>`` reference in a Python source file
+   resolves to a heading of DESIGN.md.  Docstrings cite sections by
+   name; this is what keeps those citations from rotting (the original
+   sin this tool exists to prevent: code shipping with references to a
+   DESIGN.md that didn't exist).
+2. Relative markdown links in the documentation set (README.md,
+   DESIGN.md, benchmarks/README.md) point at files that exist, and
+   ``#anchor`` fragments match a heading (GitHub slug rules) in the
+   target document.
+
+Exit status is non-zero with one line per violation.  Stdlib only — the
+CI docs lane runs it without installing the package.
+
+    python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SOURCE_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+DOC_FILES = ("README.md", "DESIGN.md", "benchmarks/README.md")
+
+# a section citation: the filename, '§', then a name running until a
+# character that can't be part of a heading (citations close with ')',
+# ':', '.', etc.)
+SECTION_REF = re.compile(r"DESIGN\.md\s+§\s*([A-Za-z0-9][A-Za-z0-9 -]*)")
+HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def headings_of(md_path: Path):
+    """Heading texts of a markdown file (code fences excluded)."""
+    out = []
+    fenced = False
+    for line in md_path.read_text(encoding="utf-8").splitlines():
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            continue
+        if fenced:
+            continue
+        m = HEADING.match(line)
+        if m:
+            out.append(m.group(2))
+    return out
+
+
+def github_slug(heading: str) -> str:
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def check_section_refs(errors):
+    design = ROOT / "DESIGN.md"
+    if not design.exists():
+        errors.append("DESIGN.md does not exist but source files cite it")
+        return
+    headings = headings_of(design)
+
+    def resolves(ref: str) -> bool:
+        # tolerate prose flowing after the section name (whitespace was
+        # collapsed): the reference resolves iff it IS a heading or
+        # continues one at a word boundary
+        return any(ref == h or ref.startswith(h + " ") for h in headings)
+
+    for d in SOURCE_DIRS:
+        for py in sorted((ROOT / d).rglob("*.py")):
+            # docstrings wrap: collapse all whitespace before matching
+            text = re.sub(r"\s+", " ", py.read_text(encoding="utf-8"))
+            for m in SECTION_REF.finditer(text):
+                ref = m.group(1).strip()
+                if not resolves(ref):
+                    errors.append(
+                        f"{py.relative_to(ROOT)}: 'DESIGN.md §{ref}' does "
+                        f"not match any DESIGN.md heading {headings}")
+
+
+def check_markdown_links(errors):
+    for doc in DOC_FILES:
+        path = ROOT / doc
+        if not path.exists():
+            errors.append(f"{doc}: missing documentation file")
+            continue
+        fenced = False
+        for ln, line in enumerate(path.read_text(encoding="utf-8")
+                                  .splitlines(), 1):
+            if line.lstrip().startswith("```"):
+                fenced = not fenced
+                continue
+            if fenced:
+                continue
+            for m in MD_LINK.finditer(line):
+                target = m.group(1)
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                file_part, _, anchor = target.partition("#")
+                dest = (path.parent / file_part).resolve() if file_part \
+                    else path
+                if not dest.exists():
+                    errors.append(f"{doc}:{ln}: broken link '{target}'")
+                    continue
+                if anchor and dest.suffix == ".md":
+                    slugs = [github_slug(h) for h in headings_of(dest)]
+                    if anchor not in slugs:
+                        errors.append(f"{doc}:{ln}: anchor '#{anchor}' not a "
+                                      f"heading of {file_part or doc}")
+
+
+def main() -> int:
+    errors: list[str] = []
+    check_section_refs(errors)
+    check_markdown_links(errors)
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    if not errors:
+        n_docs = len(DOC_FILES)
+        print(f"check_docs: OK (section refs + links across {n_docs} docs)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
