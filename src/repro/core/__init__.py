@@ -7,23 +7,28 @@
   batching     Algorithm 1 dynamic micro-batching + sequence packing
   rollout      interruptible continuous-batching generation engine
   trainer      PPO trainer worker (pack -> prox recompute -> minibatches)
-  controller   virtual-clock rollout controller (Fig. 2/3 data flow)
-  simulator    cluster-scale discrete-event model (same controller)
+  scheduler    transport-agnostic scheduling core (policy only)
+  controller   virtual-clock executor (Fig. 2/3 data flow, deterministic)
+  runtime      threaded disaggregated executor (real concurrency)
+  simulator    cluster-scale discrete-event model (same scheduler)
   reward       rule-based reward service
   weights      versioned parameter store (trainer -> rollout publication)
 """
 from repro.core.buffer import ReplayBuffer, Trajectory
-from repro.core.controller import AsyncRLController, StepLog, TimingModel
+from repro.core.controller import AsyncRLController, TimingModel
 from repro.core.reward import RewardService
 from repro.core.rollout import Finished, RolloutEngine
+from repro.core.runtime import ThreadedRuntime
+from repro.core.scheduler import AsyncScheduler, StepLog
 from repro.core.staleness import StalenessController, StalenessStats
 from repro.core.trainer import PPOTrainer, TrainMetrics
 from repro.core.weights import ParameterStore
 
 __all__ = [
-    "AsyncRLController", "Finished", "ParameterStore", "PPOTrainer",
-    "ReplayBuffer", "RewardService", "RolloutEngine", "StalenessController",
-    "StalenessStats", "StepLog", "TimingModel", "TrainMetrics", "Trajectory",
+    "AsyncRLController", "AsyncScheduler", "Finished", "ParameterStore",
+    "PPOTrainer", "ReplayBuffer", "RewardService", "RolloutEngine",
+    "StalenessController", "StalenessStats", "StepLog", "ThreadedRuntime",
+    "TimingModel", "TrainMetrics", "Trajectory",
 ]
 from repro.core.evaluate import EvalResult, evaluate  # noqa: E402
 

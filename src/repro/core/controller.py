@@ -1,12 +1,14 @@
-"""Rollout controller (Section 4.1, Figure 2/3): the bridge between
-rollout workers, the reward service, the replay buffer, and trainer
-workers.
+"""Virtual-clock executor (Section 4.1, Figure 2/3): drives the shared
+scheduling core (core/scheduler.py) under an explicit **virtual clock**
+driven by a TimingModel.
 
-The controller runs the *real* JAX computation (generation + PPO updates)
-under an explicit **virtual clock** driven by a TimingModel.  This gives
-deterministic, measurable concurrency semantics on a single-host CPU —
-the structure of AReaL's asynchronous pipeline without nondeterministic
-threads:
+The policy — staleness-gated admission, reward collection, oldest-first
+batch formation, weight-publication accounting — lives in
+``AsyncScheduler`` (DESIGN.md §Async runtime); this executor supplies the
+*transport*: deterministic single-thread interleaving of the real JAX
+computation (generation + PPO updates) with measurable concurrency
+semantics on a single-host CPU — the structure of AReaL's asynchronous
+pipeline without nondeterministic threads:
 
   * rollout workers decode continuously; each decode step advances the
     clock by the generation-pool cost of one token step;
@@ -19,22 +21,21 @@ threads:
   * admission respects the staleness controller (Eq. 3);
   * reward computation and weight transfer are pipelined (latency-only).
 
-The same controller drives the pure-timing cluster simulator
+The same executor drives the pure-timing cluster simulator
 (core/simulator.py provides stub engine/trainer with the same duck-typed
-API), which is how the paper-scale scaling figures are produced.
+API), which is how the paper-scale scaling figures are produced.  For
+real two-thread execution on disjoint device submeshes, see
+``core/runtime.py::ThreadedRuntime`` — same scheduler, real transport.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
-
-import numpy as np
+from dataclasses import dataclass
+from typing import Callable, List, Optional
 
 from repro.configs.base import RLConfig
-from repro.core.buffer import ReplayBuffer, Trajectory
 from repro.core.reward import RewardService
-from repro.core.staleness import StalenessController, StalenessStats
+from repro.core.scheduler import (AsyncScheduler,  # noqa: F401  (re-export)
+                                  SchedulerExecutorMixin, StepLog)
 
 
 @dataclass
@@ -50,43 +51,37 @@ class TimingModel:
                                          # devices, so phases serialize
 
 
-@dataclass
-class StepLog:
-    version: int
-    clock: float
-    reward_mean: float
-    accuracy: float
-    staleness_mean: float
-    staleness_max: int
-    n_tokens: int
-    gen_tokens_total: int
-    interruptions: int
-    loss: float = 0.0
-    diag: Dict = field(default_factory=dict)
-
-
-class AsyncRLController:
-    def __init__(self, *, engine, trainer, prompt_stream, rl: RLConfig,
+class AsyncRLController(SchedulerExecutorMixin):
+    def __init__(self, *, engine, trainer, prompt_stream=None,
+                 rl: Optional[RLConfig] = None,
                  timing: Optional[TimingModel] = None,
                  reward: Optional[RewardService] = None,
-                 on_step: Optional[Callable] = None):
+                 on_step: Optional[Callable] = None,
+                 scheduler: Optional[AsyncScheduler] = None):
         self.engine = engine
         self.trainer = trainer
-        self.stream = prompt_stream
-        self.rl = rl
+        if scheduler is not None:
+            if prompt_stream is not None or reward is not None \
+                    or on_step is not None:
+                raise ValueError(
+                    "scheduler= already owns prompt_stream/reward/on_step; "
+                    "configure them on the AsyncScheduler instead")
+            if rl is not None and rl is not scheduler.rl:
+                raise ValueError(
+                    "rl= disagrees with scheduler.rl; the scheduler's "
+                    "RLConfig governs admission and must be the same object")
+            self.sched = scheduler
+            self.rl = scheduler.rl
+        else:
+            if prompt_stream is None or rl is None:
+                raise ValueError(
+                    "AsyncRLController needs prompt_stream= and rl= "
+                    "(or a prebuilt scheduler=)")
+            self.rl = rl
+            self.sched = AsyncScheduler(prompt_stream=prompt_stream, rl=rl,
+                                        reward=reward, on_step=on_step)
         self.timing = timing or TimingModel()
-        self.reward = reward or RewardService(rl.reward_correct,
-                                              rl.reward_incorrect)
-        self.buffer = ReplayBuffer()
-        self.stal = StalenessController(batch_size=rl.batch_size,
-                                        max_staleness=(math.inf
-                                                       if rl.max_staleness < 0
-                                                       else rl.max_staleness))
-        self.stal_stats = StalenessStats()
         self.clock = 0.0
-        self.history: List[StepLog] = []
-        self.on_step = on_step
-        self._next_rid = 0
         self._train_batch = None
         self._train_done_at = 0.0
 
@@ -94,35 +89,23 @@ class AsyncRLController:
     def _admit(self) -> None:
         if self.engine.has_pending_weights:
             return        # non-interruptible drain: no new admissions
-        free = len(self.engine.free_slots())
-        reqs = []
-        while free > len(reqs) and self.stal.can_submit(len(reqs) + 1):
-            prob, gid = self.stream.next_request()
-            reqs.append({"rid": self._next_rid, "prompt_id": gid,
-                         "prompt": prob.prompt_tokens, "answer": prob.answer})
-            self._next_rid += 1
+        reqs = self.sched.plan_admission(len(self.engine.free_slots()))
         if reqs:
+            # paged engines may take fewer than offered (pool exhaustion);
+            # the scheduler requeues the remainder for the next plan
             n = self.engine.admit(reqs, clock=self.clock)
-            assert n == len(reqs)
-            self.stal.submit(n)
+            self.sched.admitted(reqs, n)
             self.clock += self.timing.prefill(
-                sum(len(r["prompt"]) for r in reqs))
+                sum(len(r["prompt"]) for r in reqs[:n]))
 
     def _collect(self, finished) -> None:
-        for f in finished:
-            r = self.reward.score(f.response, f.answer)
-            self.buffer.add(Trajectory(
-                rid=f.rid, prompt_id=f.prompt_id,
-                prompt_tokens=f.prompt, response_tokens=f.response,
-                behav_logprobs=f.logprobs, versions=f.versions,
-                behavior_version=f.behavior_version, reward=r,
-                answer=f.answer, submit_time=f.submit_time,
-                finish_time=self.clock + self.timing.reward_latency))
+        self.sched.collect(finished,
+                           finish_time=self.clock + self.timing.reward_latency)
 
     def _maybe_start_training(self) -> None:
         if self._train_batch is not None:
             return
-        batch = self.buffer.pop_batch(self.rl.batch_size)
+        batch = self.sched.buffer.pop_batch(self.rl.batch_size)
         if batch is None:
             return
         self._train_batch = batch
@@ -138,11 +121,9 @@ class AsyncRLController:
             return
         batch = self._train_batch
         self._train_batch = None
-        for t in batch:
-            self.stal_stats.record(
-                max(0, self.stal.policy_version - t.behavior_version))
+        self.sched.record_consumed(batch)
         metrics = self.trainer.train_step(batch)
-        self.stal.on_policy_update(self.trainer.version)
+        self.sched.note_policy_update(self.trainer.version)
         self.clock += self.timing.weight_sync
         inflight = self.engine.inflight_tokens()
         applied = self.engine.update_weights(
@@ -151,19 +132,10 @@ class AsyncRLController:
         if applied and inflight:
             # interruption overhead: re-prefill of every in-flight prefix
             self.clock += self.timing.prefill(inflight)
-        log = StepLog(
-            version=self.trainer.version, clock=self.clock,
-            reward_mean=metrics.reward_mean,
-            accuracy=self.reward.recent_accuracy,
-            staleness_mean=metrics.staleness_mean,
-            staleness_max=metrics.staleness_max,
-            n_tokens=metrics.n_tokens,
-            gen_tokens_total=self.engine.tokens_generated,
-            interruptions=self.engine.interruptions,
-            loss=metrics.loss, diag=metrics.diag)
-        self.history.append(log)
-        if self.on_step:
-            self.on_step(log)
+        self.sched.log_step(metrics, version=self.trainer.version,
+                            clock=self.clock,
+                            gen_tokens_total=self.engine.tokens_generated,
+                            interruptions=self.engine.interruptions)
 
     # ---- main loop ----------------------------------------------------------
     def run(self, n_steps: int, max_wallclock: float = float("inf")) -> List[StepLog]:
@@ -197,5 +169,4 @@ class AsyncRLController:
         updates (tokens/virtual-second)."""
         if not self.history:
             return 0.0
-        toks = sum(h.n_tokens for h in self.history)
-        return toks / max(self.history[-1].clock, 1e-9)
+        return self.sched.tokens_consumed() / max(self.history[-1].clock, 1e-9)

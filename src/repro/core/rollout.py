@@ -35,6 +35,7 @@ Two cache organizations (``cache="ring" | "paged"``):
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -82,7 +83,15 @@ class Finished:
 
 
 class RolloutEngine:
-    """Batched, interruptible generation engine for a decoder-only LM."""
+    """Batched, interruptible generation engine for a decoder-only LM.
+
+    Threading contract: the engine is SINGLE-DRIVER.  All state-mutating
+    calls (``admit``/``step``/``update_weights``/``maybe_apply_pending``)
+    must come from one thread — the rollout thread in the threaded
+    runtime (DESIGN.md §Async runtime); weight publication from the
+    trainer side goes through the ``ParameterStore``, never by calling
+    into the engine directly.  The contract is enforced by a cheap
+    owner-thread assertion; ``release_driver()`` hands ownership off."""
 
     def __init__(self, model, params, *, n_slots: int, prompt_len: int,
                  max_gen_len: int, temperature: float = 1.0,
@@ -106,6 +115,7 @@ class RolloutEngine:
 
         self.slots = [Slot() for _ in range(n_slots)]
         self._pending_weights: Optional[Tuple] = None
+        self._driver_thread: Optional[int] = None
 
         # stats
         self.tokens_generated = 0
@@ -187,6 +197,29 @@ class RolloutEngine:
         self._step_count += 1
         return jax.random.fold_in(self._rng, self._step_count)
 
+    # ---- threading contract -----------------------------------------------
+    def _assert_single_driver(self) -> None:
+        """Slot bookkeeping, the block allocator, and the cache handle are
+        mutated without locks: exactly ONE thread may drive
+        ``admit``/``step``/``update_weights``/``maybe_apply_pending``
+        (DESIGN.md §Async runtime).  The first driving call binds the
+        owner; a second driving thread fails loudly here instead of
+        silently corrupting slot state."""
+        me = threading.get_ident()
+        if self._driver_thread is None:
+            self._driver_thread = me
+        elif self._driver_thread != me:
+            raise RuntimeError(
+                f"RolloutEngine is single-driver: bound to thread "
+                f"{self._driver_thread}, driven from {me}. Route all "
+                f"engine calls through one rollout thread, or call "
+                f"release_driver() for a deliberate handoff.")
+
+    def release_driver(self) -> None:
+        """Unbind the owner thread (deliberate handoff, e.g. the rollout
+        thread exiting so the main thread may inspect/drive the engine)."""
+        self._driver_thread = None
+
     # ---- public API -------------------------------------------------------
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if not s.active]
@@ -205,6 +238,7 @@ class RolloutEngine:
         """requests: dicts with rid, prompt_id, prompt (list[int]), answer.
         Returns number admitted (bounded by free slots; in paged mode also
         by free pool blocks — prefix-shared blocks don't count)."""
+        self._assert_single_driver()
         if self.cache_mode == "paged":
             return self._admit_paged(requests, clock)
         free = self.free_slots()
@@ -317,6 +351,7 @@ class RolloutEngine:
 
     def step(self) -> List[Finished]:
         """One decode step across all slots; returns finished trajectories."""
+        self._assert_single_driver()
         if self.n_active == 0:
             return []
         pend = np.array([s.pending for s in self.slots], np.int32)
@@ -363,6 +398,7 @@ class RolloutEngine:
                        interruptible: bool = True) -> bool:
         """Returns True if applied now; False if deferred (non-interruptible
         mode with in-flight requests — the Fig. 6b baseline)."""
+        self._assert_single_driver()
         if not interruptible and self.n_active > 0:
             self._pending_weights = (params, version)
             return False
@@ -387,6 +423,7 @@ class RolloutEngine:
         return True
 
     def maybe_apply_pending(self) -> bool:
+        self._assert_single_driver()
         if self._pending_weights is not None and self.n_active == 0:
             params, version = self._pending_weights
             self._pending_weights = None

@@ -1,0 +1,263 @@
+"""Threaded disaggregated runtime (DESIGN.md §Async runtime): REAL
+concurrency for the AReaL pipeline.
+
+Two threads drive the shared scheduling core (core/scheduler.py) on
+disjoint device submeshes (launch/disaggregated.py):
+
+  * the **rollout thread** owns the ``RolloutEngine`` (single-driver
+    contract) on the rollout submesh: it admits staleness-admissible
+    prompts, streams decode steps, scores finished trajectories into the
+    replay buffer, and — at each step boundary — picks up any newer
+    weights the trainer has published (the interruptible-generation
+    semantics: the engine re-prefills in-flight prefixes and decoding
+    continues);
+  * the **trainer thread** owns the ``PPOTrainer`` on the trainer
+    submesh: it blocks on ``ReplayBuffer.pop_batch(timeout=...)``, runs
+    the PPO update, then publishes the new weights — the cross-submesh
+    ``disaggregated.push_weights`` device_put happens HERE, on the
+    trainer thread, off the generation critical path — into the
+    ``ParameterStore``.
+
+Weight-publication path:
+
+    trainer thread                       rollout thread
+    ──────────────                       ──────────────
+    train_step(batch)                    step() / admit() ...
+    push_weights(params, rollout_mesh)       │
+    store.publish(version, params) ──────►  step boundary:
+    note_policy_update(version)             store.latest() newer?
+    pop_batch(...) blocks                    └─ engine.update_weights
+                                                (interrupt + re-prefill)
+
+Generation never blocks on training and training never blocks on
+generation beyond data availability — the paper's full asynchrony, with
+the staleness controller (Eq. 3) as the only coupling.
+
+``run_serial`` drives the SAME components on one thread in strict
+generate-then-train alternation: the forced-serial baseline that
+``benchmarks/async_overlap.py`` measures real wall-clock overlap
+against.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, Optional
+
+from repro.core.scheduler import (AsyncScheduler, SchedulerExecutorMixin,
+                                  StepLog)
+from repro.core.weights import ParameterStore
+
+
+class ThreadedRuntime(SchedulerExecutorMixin):
+    """Two-thread executor for the async scheduling core.
+
+    Parameters
+    ----------
+    engine, trainer : the rollout engine and PPO trainer (real or the
+        simulator stubs — any duck-typed pair the virtual executor takes).
+    scheduler : the shared ``AsyncScheduler`` policy core.
+    store : ``ParameterStore`` carrying trainer→rollout publications
+        (created if omitted).
+    rollout_mesh, param_specs : when set, published params are
+        ``disaggregated.push_weights``-ed onto the rollout submesh by the
+        trainer thread before the store publication.
+    """
+
+    def __init__(self, *, engine, trainer, scheduler: AsyncScheduler,
+                 store: Optional[ParameterStore] = None,
+                 rollout_mesh=None, param_specs=None,
+                 idle_sleep: float = 1e-3):
+        self.engine = engine
+        self.trainer = trainer
+        self.sched = scheduler
+        self.rl = scheduler.rl
+        self.store = store or ParameterStore()
+        self.rollout_mesh = rollout_mesh
+        self.param_specs = param_specs
+        self.idle_sleep = idle_sleep
+
+        self.clock = 0.0                  # wall seconds of the last run
+        self._t0 = 0.0
+        self._stop = threading.Event()
+        self._errors: List[BaseException] = []
+
+        # overlap accounting (read by benchmarks/async_overlap.py):
+        # trainer_busy_s is wall time inside train_step; tokens_during_train
+        # counts tokens the rollout thread generated while the trainer was
+        # mid-update — nonzero iff generation and training truly overlap.
+        self.trainer_busy_s = 0.0
+        self.tokens_during_train = 0
+        self._train_busy = False
+
+    def effective_throughput(self) -> float:
+        """Tokens consumed by PPO updates per wall second."""
+        return self.sched.tokens_consumed() / max(self.clock, 1e-9)
+
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    # ---- rollout side -----------------------------------------------------
+    def _maybe_pickup_weights(self) -> None:
+        """Step-boundary weight pickup: if the trainer published a newer
+        version, interrupt + re-prefill (rollout-thread work, on the
+        rollout submesh — the only generation-side cost of an update)."""
+        latest = self.store.latest()
+        if latest is not None and latest[0] > self.engine.version:
+            version, params = latest
+            self.engine.update_weights(params, version,
+                                       interruptible=self.rl.interruptible)
+
+    def _rollout_tick(self) -> bool:
+        """One admission + decode round; returns True if any slot advanced."""
+        eng = self.engine
+        self._maybe_pickup_weights()
+        eng.maybe_apply_pending()
+        if not eng.has_pending_weights:
+            reqs = self.sched.plan_admission(len(eng.free_slots()))
+            if reqs:
+                n = eng.admit(reqs, clock=self._now())
+                self.sched.admitted(reqs, n)
+        if eng.n_active == 0:
+            return False
+        n_act = eng.n_active
+        busy = self._train_busy           # sampled before the step
+        finished = eng.step()
+        if busy:
+            self.tokens_during_train += n_act
+        self.sched.collect(finished, finish_time=self._now())
+        return True
+
+    def _rollout_loop(self) -> None:
+        try:
+            while not self._stop.is_set():
+                if not self._rollout_tick():
+                    time.sleep(self.idle_sleep)
+        except BaseException as e:       # noqa: BLE001 — surfaced in run()
+            self._errors.append(e)
+            self._stop.set()
+        finally:
+            release = getattr(self.engine, "release_driver", None)
+            if release:
+                release()
+
+    # ---- trainer side -----------------------------------------------------
+    def _train_once(self, batch) -> StepLog:
+        self.sched.record_consumed(batch)
+        self._train_busy = True
+        t0 = time.perf_counter()
+        try:
+            metrics = self.trainer.train_step(batch)
+        finally:
+            self._train_busy = False
+            self.trainer_busy_s += time.perf_counter() - t0
+        # publication OFF the generation critical path: the cross-submesh
+        # device_put runs on THIS thread; rollout picks the result up at
+        # its next step boundary
+        params = self.trainer.params
+        if self.rollout_mesh is not None:
+            from repro.launch.disaggregated import push_weights
+            params = push_weights(params, self.rollout_mesh, self.param_specs)
+        self.store.publish(self.trainer.version, params)
+        self.sched.note_policy_update(self.trainer.version)
+        return self.sched.log_step(
+            metrics, version=self.trainer.version, clock=self._now(),
+            gen_tokens_total=self.engine.tokens_generated,
+            interruptions=self.engine.interruptions)
+
+    def _trainer_loop(self, target: int) -> None:
+        try:
+            while self.trainer.version < target and not self._stop.is_set():
+                batch = self.sched.buffer.pop_batch(self.rl.batch_size,
+                                                    timeout=0.2)
+                if batch is None:
+                    if self.sched.buffer.closed:
+                        break
+                    continue
+                self._train_once(batch)
+        except BaseException as e:       # noqa: BLE001 — surfaced in run()
+            self._errors.append(e)
+        finally:
+            self._stop.set()             # rollout exits at its next tick
+
+    # ---- entry points -----------------------------------------------------
+    def run(self, n_steps: int, timeout: Optional[float] = None) -> List[StepLog]:
+        """Run until the trainer completes ``n_steps`` more versions.
+
+        ``timeout`` (wall seconds) bounds the whole run: on expiry both
+        threads are signalled to stop and TimeoutError is raised — a
+        deadlock fails fast instead of hanging CI.  The buffer stays
+        open, so the run can be retried with a larger deadline."""
+        target = self.trainer.version + n_steps
+        self._stop.clear()
+        self._errors.clear()
+        self._t0 = time.perf_counter()
+        rollout = threading.Thread(target=self._rollout_loop,
+                                   name="areal-rollout", daemon=True)
+        trainer = threading.Thread(target=self._trainer_loop, args=(target,),
+                                   name="areal-trainer", daemon=True)
+        rollout.start()
+        trainer.start()
+        trainer.join(timeout)
+        if trainer.is_alive():
+            # _stop alone unblocks both threads (the trainer's pop_batch
+            # polls on a short timeout), so the buffer stays open and the
+            # runtime can be re-run with a larger deadline
+            self._stop.set()
+            trainer.join(10.0)
+            rollout.join(10.0)
+            self.clock = time.perf_counter() - self._t0
+            raise TimeoutError(
+                f"threaded runtime exceeded {timeout}s at version "
+                f"{self.trainer.version}/{target} "
+                f"(buffered={len(self.sched.buffer)}, "
+                f"active={self.engine.n_active})")
+        rollout.join(30.0)
+        self.clock = time.perf_counter() - self._t0
+        if rollout.is_alive():
+            # do NOT touch the engine: the stuck thread still owns it
+            raise RuntimeError(
+                "rollout thread failed to stop within 30s of the trainer "
+                f"finishing (active={self.engine.n_active}); engine state "
+                "was left to the stuck thread")
+        if self._errors:
+            raise self._errors[0]
+        # the rollout thread released the engine on exit: pick up the final
+        # published version here so post-run engine state matches the
+        # trainer (as the synchronous executors guarantee), then release
+        # again so a later run()'s fresh rollout thread can bind
+        self._maybe_pickup_weights()
+        self.engine.maybe_apply_pending()
+        release = getattr(self.engine, "release_driver", None)
+        if release:
+            release()
+        return self.sched.history
+
+    def run_serial(self, n_steps: int, max_idle_ticks: int = 1000) -> List[StepLog]:
+        """Forced-serial baseline: the same engine/trainer/scheduler on
+        ONE thread, strictly alternating generate-until-batch-ready and
+        train — the colocated-synchronous regime the paper's asynchrony
+        is measured against (benchmarks/async_overlap.py)."""
+        target = self.trainer.version + n_steps
+        self._t0 = time.perf_counter()
+        while self.trainer.version < target:
+            idle = 0
+            while len(self.sched.buffer) < self.rl.batch_size:
+                if self._rollout_tick():
+                    idle = 0
+                else:
+                    idle += 1
+                    if idle > max_idle_ticks:
+                        raise RuntimeError(
+                            "serial runtime stalled: no active slots and "
+                            "no admissible requests (check eta/batch/slots)")
+            batch = self.sched.buffer.pop_batch(self.rl.batch_size)
+            assert batch is not None
+            self._train_once(batch)
+        self._maybe_pickup_weights()
+        self.engine.maybe_apply_pending()
+        release = getattr(self.engine, "release_driver", None)
+        if release:
+            release()                     # symmetric with run(): re-entrant
+        self.clock = time.perf_counter() - self._t0
+        return self.sched.history

@@ -1,0 +1,213 @@
+"""Transport-agnostic asynchronous-RL scheduling core (DESIGN.md §Async
+runtime).
+
+AReaL's pipeline policy — what to admit, when a batch forms, what a
+training step publishes — is independent of *how* the pipeline executes.
+``AsyncScheduler`` owns exactly that policy surface:
+
+  * staleness-gated admission (Eq. 3): requests are pulled from the
+    prompt stream only while the trajectories they would produce can
+    still land within ``max_staleness`` of the trainer's version;
+  * reward collection: finished generations are scored and appended to
+    the oldest-first, use-once replay buffer;
+  * batch formation: delegated to ``ReplayBuffer`` (oldest behavior
+    version first, every sample consumed exactly once);
+  * weight-publication accounting: each completed train step advances
+    the staleness controller's policy version and appends a ``StepLog``.
+
+It owns NO transport: no clock, no threads, no device placement.  Three
+executors drive it —
+
+  * ``core/controller.py::AsyncRLController`` — the virtual-clock
+    executor (deterministic single-thread interleaving under a
+    ``TimingModel``; produces every timing figure);
+  * ``core/runtime.py::ThreadedRuntime`` — real concurrency: a rollout
+    thread and a trainer thread on disjoint device submeshes;
+  * the same two with ``core/simulator.py``'s stub engine/trainer for
+    cluster-scale discrete-event studies.
+
+All methods are thread-safe: the virtual executor calls them from one
+thread, the threaded runtime from two (admission/collection on the
+rollout thread, batch formation/publication on the trainer thread).
+"""
+from __future__ import annotations
+
+import math
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.configs.base import RLConfig
+from repro.core.buffer import ReplayBuffer, Trajectory
+from repro.core.reward import RewardService
+from repro.core.staleness import StalenessController, StalenessStats
+
+
+@dataclass
+class StepLog:
+    """One training step's record, appended per policy version by every
+    executor (re-exported by ``core/controller.py`` for compatibility)."""
+    version: int
+    clock: float
+    reward_mean: float
+    accuracy: float
+    staleness_mean: float
+    staleness_max: int
+    n_tokens: int
+    gen_tokens_total: int
+    interruptions: int
+    loss: float = 0.0
+    diag: Dict = field(default_factory=dict)
+
+
+class AsyncScheduler:
+    """Policy core shared by every executor (DESIGN.md §Async runtime)."""
+
+    def __init__(self, *, prompt_stream, rl: RLConfig,
+                 reward: Optional[RewardService] = None,
+                 buffer: Optional[ReplayBuffer] = None,
+                 on_step: Optional[Callable] = None):
+        self.stream = prompt_stream
+        self.rl = rl
+        self.reward = reward or RewardService(rl.reward_correct,
+                                              rl.reward_incorrect)
+        self.buffer = buffer or ReplayBuffer()
+        self.stal = StalenessController(batch_size=rl.batch_size,
+                                        max_staleness=(math.inf
+                                                       if rl.max_staleness < 0
+                                                       else rl.max_staleness))
+        self.stal_stats = StalenessStats()
+        self.history: List[StepLog] = []
+        self.on_step = on_step
+        self._next_rid = 0
+        self._deferred: List[Dict] = []    # planned but not yet admitted
+        self._lock = threading.RLock()
+
+    # ---- admission (rollout side) -----------------------------------------
+    def plan_admission(self, n_free: int) -> List[Dict]:
+        """Requests the executor should try to admit right now: deferred
+        requests first (planned earlier, engine had no room), then fresh
+        pulls from the prompt stream — each admitted against Eq. 3 at the
+        CURRENT policy version.  Pulled requests must be handed back via
+        ``admitted`` (possibly with n < len(reqs)); they are not counted
+        as submitted until then."""
+        with self._lock:
+            reqs: List[Dict] = []
+            while (self._deferred and n_free > len(reqs)
+                   and self.stal.can_submit(len(reqs) + 1)):
+                reqs.append(self._deferred.pop(0))
+            while n_free > len(reqs) and self.stal.can_submit(len(reqs) + 1):
+                prob, gid = self.stream.next_request()
+                reqs.append({"rid": self._next_rid, "prompt_id": gid,
+                             "prompt": prob.prompt_tokens,
+                             "answer": prob.answer})
+                self._next_rid += 1
+            return reqs
+
+    def admitted(self, reqs: List[Dict], n: int) -> None:
+        """The engine accepted the first ``n`` of ``reqs``: count them as
+        submitted (Eq. 3 numerator); re-queue the remainder so a later
+        ``plan_admission`` retries them (paged engines defer admission on
+        pool exhaustion)."""
+        with self._lock:
+            self.stal.submit(n)
+            if n < len(reqs):
+                self._deferred[:0] = reqs[n:]
+
+    # ---- reward collection (rollout side) ---------------------------------
+    def collect(self, finished, finish_time: float) -> None:
+        """Score finished generations and buffer them oldest-first.
+        Runs under the scheduler lock: RewardService keeps unsynchronized
+        accuracy stats that ``log_step`` reads from the trainer side."""
+        if not finished:
+            return
+        with self._lock:
+            self._collect_locked(finished, finish_time)
+
+    def _collect_locked(self, finished, finish_time: float) -> None:
+        for f in finished:
+            r = self.reward.score(f.response, f.answer)
+            self.buffer.add(Trajectory(
+                rid=f.rid, prompt_id=f.prompt_id,
+                prompt_tokens=f.prompt, response_tokens=f.response,
+                behav_logprobs=f.logprobs, versions=f.versions,
+                behavior_version=f.behavior_version, reward=r,
+                answer=f.answer, submit_time=f.submit_time,
+                finish_time=finish_time))
+
+    # ---- training accounting (trainer side) -------------------------------
+    def record_consumed(self, batch: List[Trajectory]) -> None:
+        """Staleness bookkeeping for a batch about to be trained on,
+        measured against the policy version consuming it (i.e. BEFORE the
+        version bump this batch produces)."""
+        with self._lock:
+            for t in batch:
+                self.stal_stats.record(
+                    max(0, self.stal.policy_version - t.behavior_version))
+
+    def note_policy_update(self, version: int) -> None:
+        """A train step completed: admission now gates against ``version``."""
+        with self._lock:
+            self.stal.on_policy_update(version)
+
+    def log_step(self, metrics, *, version: int, clock: float,
+                 gen_tokens_total: int, interruptions: int) -> StepLog:
+        """Append the per-version StepLog (the executor supplies its own
+        notion of ``clock``: virtual seconds or wall seconds)."""
+        with self._lock:
+            log = StepLog(
+                version=version, clock=clock,
+                reward_mean=metrics.reward_mean,
+                accuracy=self.reward.recent_accuracy,
+                staleness_mean=metrics.staleness_mean,
+                staleness_max=metrics.staleness_max,
+                n_tokens=metrics.n_tokens,
+                gen_tokens_total=gen_tokens_total,
+                interruptions=interruptions,
+                loss=metrics.loss, diag=metrics.diag)
+            self.history.append(log)
+        if self.on_step:                   # user code: outside the lock
+            self.on_step(log)
+        return log
+
+    # ---- derived ----------------------------------------------------------
+    def tokens_consumed(self) -> int:
+        with self._lock:
+            return sum(h.n_tokens for h in self.history)
+
+
+class SchedulerExecutorMixin:
+    """The attribute surface every executor shares (pre-refactor
+    controllers owned these directly): delegates policy-owned state to
+    ``self.sched``.  Mixed into AsyncRLController and ThreadedRuntime so
+    the launch/benchmark/test layers see one interface."""
+
+    sched: AsyncScheduler
+
+    @property
+    def buffer(self) -> ReplayBuffer:
+        return self.sched.buffer
+
+    @property
+    def stal(self) -> StalenessController:
+        return self.sched.stal
+
+    @property
+    def stal_stats(self) -> StalenessStats:
+        return self.sched.stal_stats
+
+    @property
+    def reward(self) -> RewardService:
+        return self.sched.reward
+
+    @property
+    def history(self) -> List[StepLog]:
+        return self.sched.history
+
+    @property
+    def stream(self):
+        return self.sched.stream
+
+    @property
+    def on_step(self):
+        return self.sched.on_step

@@ -19,6 +19,7 @@ simulator and the dry-run roofline table are mutually consistent.
 from __future__ import annotations
 
 import math
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -125,6 +126,22 @@ class SimEngine:
         self.tokens_generated = 0
         self.interruptions = 0
         self.params = None
+        self._driver_thread = None
+
+    # same single-driver contract as the real engine, per
+    # DESIGN.md §Async runtime: the threaded runtime's thread discipline
+    # is exercised even in pure-simulation runs
+    def _assert_single_driver(self) -> None:
+        me = threading.get_ident()
+        if self._driver_thread is None:
+            self._driver_thread = me
+        elif self._driver_thread != me:
+            raise RuntimeError(
+                f"SimEngine is single-driver: bound to thread "
+                f"{self._driver_thread}, driven from {me}")
+
+    def release_driver(self) -> None:
+        self._driver_thread = None
 
     def _draw_len(self) -> int:
         mu = math.log(self.mean_len) - 0.5 * self.sigma ** 2
@@ -145,6 +162,7 @@ class SimEngine:
         return sum(s.prompt_len + s.generated for s in self.slots if s.active)
 
     def admit(self, requests: Sequence[Dict], clock: float = 0.0) -> int:
+        self._assert_single_driver()
         free = self.free_slots()
         take = list(requests)[:len(free)]
         for j, req in enumerate(take):
@@ -162,6 +180,7 @@ class SimEngine:
         return len(take)
 
     def step(self) -> List[Finished]:
+        self._assert_single_driver()
         finished = []
         for i, s in enumerate(self.slots):
             if not s.active:
@@ -183,6 +202,7 @@ class SimEngine:
 
     def update_weights(self, params, version: int, *,
                        interruptible: bool = True) -> bool:
+        self._assert_single_driver()
         if not interruptible and self.n_active > 0:
             self._pending_weights = (params, version)
             return False
@@ -192,6 +212,7 @@ class SimEngine:
         return True
 
     def maybe_apply_pending(self) -> bool:
+        self._assert_single_driver()
         if self._pending_weights is not None and self.n_active == 0:
             _, version = self._pending_weights
             self._pending_weights = None

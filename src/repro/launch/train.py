@@ -1,7 +1,8 @@
 """Distributed AReaL training launcher.
 
 Runs the full asynchronous RL pipeline (rollout engine + PPO trainer +
-controller) for a selected architecture at a selected scale:
+the shared scheduling core) for a selected architecture at a selected
+scale and under a selected executor:
 
   * ``--scale laptop``  (default): reduced model on the local devices —
     the runnable end-to-end driver (examples/ wrap this).
@@ -9,9 +10,23 @@ controller) for a selected architecture at a selected scale:
     hardware this trains; in this container it validates end-to-end
     lowering (use launch/dryrun.py for the full matrix).
 
+  * ``--runtime virtual`` (default): the deterministic virtual-clock
+    executor (core/controller.py) — real computation, simulated
+    concurrency under an analytic TimingModel.
+  * ``--runtime threaded``: the real threaded disaggregated runtime
+    (core/runtime.py, DESIGN.md §Async runtime): a rollout thread and a
+    trainer thread on disjoint device submeshes.  When more than one
+    device is visible the pool is split by
+    ``launch/disaggregated.py::split_devices`` (paper Sec 7.1's 75/25
+    inference/training layout by default) and weights flow
+    trainer→rollout through the ParameterStore + ``push_weights``; on a
+    single device both threads share it (concurrency without
+    disaggregation).  Run with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` for a local
+    multi-device pool.
+
 On a cluster, each pod runs this entry point under its own process
-group; the 75/25 rollout/train device split (paper Sec 7.1) maps to the
-disaggregated submeshes in launch/disaggregated.py.
+group.
 """
 from __future__ import annotations
 
@@ -21,16 +36,31 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_model_config, reduced
 from repro.configs.base import RLConfig
-from repro.core import (AsyncRLController, PPOTrainer, ParameterStore,
-                        RolloutEngine, TimingModel)
+from repro.core import (AsyncRLController, AsyncScheduler, PPOTrainer,
+                        ParameterStore, RolloutEngine, ThreadedRuntime)
 from repro.core.simulator import HardwareModel, WorkloadModel, make_llm_timing
 from repro.data import tokenizer
 from repro.data.dataset import PromptStream
+from repro.launch import disaggregated
 from repro.models.model import build_model
+
+
+def _place_disaggregated(engine, trainer, train_fraction: float):
+    """Split the visible device pool into rollout/trainer submeshes and
+    commit each role's state to its own submesh (computation follows
+    committed data, so the two threads run on disjoint devices)."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    roll_mesh, train_mesh = disaggregated.split_devices(train_fraction)
+    engine.params = disaggregated.push_weights(engine.params, roll_mesh)
+    train_sharding = NamedSharding(train_mesh, P())
+    trainer.params = jax.device_put(trainer.params, train_sharding)
+    trainer.opt_state = jax.device_put(trainer.opt_state, train_sharding)
+    return roll_mesh, train_mesh
 
 
 def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
@@ -40,10 +70,15 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
                  prompt_len: int = 24, max_gen_len: int = 16,
                  lr: float = 3e-4, seed: int = 1, adv_estimator: str = "grpo",
                  ckpt_dir: str = "", log_every: int = 1, max_operand: int = 9,
-                 colocated_sync: bool = False, on_step=None):
+                 colocated_sync: bool = False, on_step=None,
+                 runtime: str = "virtual", train_fraction: float = 0.25,
+                 run_timeout: float = 0.0, final_eval: bool = True):
     """End-to-end AReaL training on the synthetic math task.
 
-    Returns (controller, trainer, reward_service)."""
+    Returns (executor, trainer, reward_service); the executor is the
+    virtual-clock controller or the threaded runtime depending on
+    ``runtime`` — both expose .history/.clock/.effective_throughput()."""
+    assert runtime in ("virtual", "threaded"), runtime
     full_cfg = get_model_config(arch)
     cfg = full_cfg
     if scale == "laptop":
@@ -66,14 +101,6 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
     trainer = PPOTrainer(model, rl, params)
     store = ParameterStore(ckpt_dir=ckpt_dir or None,
                            ckpt_every=10 if ckpt_dir else 0)
-
-    # virtual-clock cost model for a small pod (sec 7.1: 75/25 split);
-    # costs reflect the TARGET architecture's size, not the reduced model
-    hw = HardwareModel()
-    wl = WorkloadModel(n_params=float(full_cfg.param_count()))
-    timing = make_llm_timing(hw, wl, n_gen_devices=96 if not colocated_sync else 128,
-                             n_train_devices=32 if not colocated_sync else 128,
-                             colocated=colocated_sync)
     stream = PromptStream(seed=seed, answers_per_prompt=answers_per_prompt,
                           max_operand=max_operand)
 
@@ -83,7 +110,10 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
         logs.append(log)
         if on_step:
             on_step(log)
-        store.publish(log.version, trainer.params, {"clock": log.clock})
+        if runtime == "virtual":
+            # the threaded runtime publishes on the trainer thread itself;
+            # here publication is the virtual executor's side channel
+            store.publish(log.version, trainer.params, {"clock": log.clock})
         if log.version % log_every == 0:
             print(f"v{log.version:4d} clock={log.clock:10.2f}s "
                   f"reward={log.reward_mean:+6.2f} acc={log.accuracy:.3f} "
@@ -91,10 +121,31 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
                   f"loss={log.loss:+.4f} interrupts={log.interruptions}",
                   flush=True)
 
-    ctl = AsyncRLController(engine=engine, trainer=trainer, prompt_stream=stream,
-                            rl=rl, timing=timing, on_step=_on_step)
-    ctl.run(steps)
-    if scale == "laptop":
+    sched = AsyncScheduler(prompt_stream=stream, rl=rl, on_step=_on_step)
+
+    if runtime == "threaded":
+        roll_mesh = None
+        if len(jax.devices()) > 1:
+            roll_mesh, train_mesh = _place_disaggregated(engine, trainer,
+                                                         train_fraction)
+            print(f"disaggregated: {roll_mesh.devices.size} rollout / "
+                  f"{train_mesh.devices.size} trainer devices", flush=True)
+        ctl = ThreadedRuntime(engine=engine, trainer=trainer, scheduler=sched,
+                              store=store, rollout_mesh=roll_mesh)
+        ctl.run(steps, timeout=run_timeout or None)
+    else:
+        # virtual-clock cost model for a small pod (sec 7.1: 75/25 split);
+        # costs reflect the TARGET architecture's size, not the reduced model
+        hw = HardwareModel()
+        wl = WorkloadModel(n_params=float(full_cfg.param_count()))
+        timing = make_llm_timing(hw, wl,
+                                 n_gen_devices=96 if not colocated_sync else 128,
+                                 n_train_devices=32 if not colocated_sync else 128,
+                                 colocated=colocated_sync)
+        ctl = AsyncRLController(engine=engine, trainer=trainer,
+                                scheduler=sched, rl=rl, timing=timing)
+        ctl.run(steps)
+    if scale == "laptop" and final_eval:
         # paper protocol: evaluate the FINAL checkpoint on held-out problems
         from repro.core.evaluate import evaluate
         res = evaluate(model, trainer.params, n_problems=64,
@@ -111,6 +162,16 @@ def main():
     ap.add_argument("--arch", default="areal-qwen-1.5b")
     ap.add_argument("--steps", type=int, default=25)
     ap.add_argument("--scale", default="laptop", choices=["laptop", "pod"])
+    ap.add_argument("--runtime", default="virtual",
+                    choices=["virtual", "threaded"],
+                    help="virtual-clock executor (deterministic) or the "
+                         "threaded disaggregated runtime (real concurrency)")
+    ap.add_argument("--train-fraction", type=float, default=0.25,
+                    help="trainer share of the device pool for the threaded "
+                         "runtime's submesh split (Sec 7.1: 0.25)")
+    ap.add_argument("--run-timeout", type=float, default=0.0,
+                    help="hard wall-clock bound (s) on a threaded run; "
+                         "0 = unbounded")
     ap.add_argument("--eta", type=int, default=4,
                     help="max staleness (-1 = unbounded, 0 = synchronous)")
     ap.add_argument("--naive-ppo", action="store_true",
@@ -123,6 +184,7 @@ def main():
     ap.add_argument("--adv", default="grpo", choices=["grpo", "rloo", "mc"])
     ap.add_argument("--seed", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--no-final-eval", action="store_true")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -131,15 +193,25 @@ def main():
         decoupled=not args.naive_ppo, interruptible=not args.no_interrupt,
         batch_size=args.batch_size, answers_per_prompt=args.answers_per_prompt,
         adv_estimator=args.adv, seed=args.seed, ckpt_dir=args.ckpt_dir,
-        colocated_sync=args.sync_colocated)
-    print(json.dumps({
-        "arch": args.arch, "steps": trainer.version,
-        "virtual_hours": ctl.clock / 3600,
+        colocated_sync=args.sync_colocated, runtime=args.runtime,
+        train_fraction=args.train_fraction, run_timeout=args.run_timeout,
+        final_eval=not args.no_final_eval)
+    out = {
+        "arch": args.arch, "runtime": args.runtime, "steps": trainer.version,
         "wall_s": round(time.time() - t0, 1),
         "final_accuracy": reward.recent_accuracy,
         "effective_throughput_tok_s": ctl.effective_throughput(),
         "staleness_hist": ctl.stal_stats.histogram(),
-    }))
+    }
+    if args.runtime == "virtual":
+        out["virtual_hours"] = ctl.clock / 3600
+    else:
+        out["run_wall_s"] = round(ctl.clock, 3)
+        out["trainer_busy_fraction"] = round(
+            ctl.trainer_busy_s / max(ctl.clock, 1e-9), 4)
+        out["tokens_during_train"] = ctl.tokens_during_train
+        out["n_devices"] = len(jax.devices())
+    print(json.dumps(out))
 
 
 if __name__ == "__main__":

@@ -28,3 +28,75 @@ def test_trajectory_properties():
                    versions=[0, 1], behavior_version=0)
     assert t.length == 5
     assert t.n_versions == 2
+
+
+def test_blocking_pop_wakes_on_add():
+    """pop_batch(timeout=...) blocks on the condition variable until a
+    full batch lands (the trainer thread's wait point, DESIGN.md
+    §Async runtime)."""
+    import threading
+    import time
+
+    buf = ReplayBuffer()
+    buf.add(_traj(0, 0))
+    out = {}
+
+    def consumer():
+        out["batch"] = buf.pop_batch(2, timeout=5.0)
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    time.sleep(0.05)                       # consumer is parked, batch short
+    buf.add(_traj(1, 0))
+    t.join(5.0)
+    assert not t.is_alive()
+    assert [x.rid for x in out["batch"]] == [0, 1]
+
+
+def test_blocking_pop_timeout_returns_none():
+    buf = ReplayBuffer()
+    buf.add(_traj(0, 0))
+    t0 = __import__("time").monotonic()
+    assert buf.pop_batch(2, timeout=0.05) is None
+    assert __import__("time").monotonic() - t0 >= 0.04
+    assert len(buf) == 1                   # nothing consumed on timeout
+
+
+def test_close_unblocks_waiters_and_rejects_adds():
+    import threading
+
+    buf = ReplayBuffer()
+    out = {}
+
+    def consumer():
+        out["batch"] = buf.pop_batch(4, timeout=10.0)
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    buf.close()
+    t.join(5.0)
+    assert not t.is_alive()
+    assert out["batch"] is None            # clean shutdown, not a hang
+    assert buf.closed
+    buf.close()                            # idempotent
+    import pytest
+    with pytest.raises(RuntimeError):
+        buf.add(_traj(9, 0))
+
+
+def test_insert_order_matches_per_pop_sort():
+    """add() inserts in (behavior_version, rid) order; any interleaving
+    of adds pops in exactly the order the old per-pop sort produced."""
+    import random
+
+    rng = random.Random(3)
+    items = [(rid, rng.randrange(4)) for rid in range(40)]
+    rng.shuffle(items)
+    buf = ReplayBuffer()
+    for rid, v in items:
+        buf.add(_traj(rid, v))
+    popped = []
+    while (b := buf.pop_batch(8)) is not None:
+        popped += [(t.behavior_version, t.rid) for t in b]
+    assert popped == sorted((v, rid) for rid, v in items)
+    assert buf.total_consumed == 40

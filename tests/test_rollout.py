@@ -296,3 +296,72 @@ def test_paged_blocks_scale_with_history_not_max_len():
     # paged: 2 shared prompt blocks + 4 slots x ceil((8+6-1)/4 - 2) tail
     assert e.allocator.n_live == 2 + 4 * 2
     assert e.blocks_in_use() < 4 * (-(-e.max_len // 4))
+
+
+def test_single_driver_contract_enforced():
+    """The engine is single-driver (DESIGN.md §Async runtime): once a
+    thread drives it, a second thread fails loudly instead of silently
+    corrupting slot state; release_driver() allows a deliberate handoff."""
+    import threading
+
+    cfg = _tiny()
+    _, _, e = _engine(cfg)
+    err = []
+
+    def drive():
+        try:
+            e.admit(_reqs(2))
+            e.step()
+        except BaseException as exc:        # pragma: no cover - fail path
+            err.append(exc)
+
+    t = threading.Thread(target=drive)
+    t.start()
+    t.join()
+    assert not err
+    with pytest.raises(RuntimeError, match="single-driver"):
+        e.step()
+    with pytest.raises(RuntimeError, match="single-driver"):
+        e.update_weights(e.params, e.version + 1)
+    e.release_driver()                      # deliberate handoff
+    e.step()                                # main thread is the driver now
+    assert e.tokens_generated >= 4
+
+
+def test_controller_requeues_paged_pool_exhaustion():
+    """A paged engine that admits fewer requests than offered (pool
+    exhaustion) must not crash the virtual executor: the scheduler
+    requeues the remainder and the run completes (DESIGN.md §Async
+    runtime)."""
+    from repro.configs.base import RLConfig
+    from repro.core import AsyncRLController, TimingModel
+    from repro.core.simulator import SimTrainer
+
+    class _Stream:
+        def __init__(self):
+            self.n = 0
+
+        def next_request(self):
+            class P:
+                prompt_tokens = [1, 2, 3, 4, 5, 6, 7, 8]
+                answer = None
+            self.n += 1
+            return P(), self.n
+
+    cfg = _tiny()
+    # pool sized so only ~2 of 4 slots fit at once: admission is
+    # persistently partial
+    _, params, e = _engine(cfg, n_slots=4, cache="paged", block_size=4,
+                           n_blocks=8)
+    trainer = SimTrainer()
+    trainer.params = params          # stub trainer republishes real params
+    rl = RLConfig(batch_size=4, max_staleness=4, interruptible=True)
+    ctl = AsyncRLController(engine=e, trainer=trainer,
+                            prompt_stream=_Stream(), rl=rl,
+                            timing=TimingModel(decode_step=lambda n: 0.01,
+                                               prefill=lambda t: 1e-4 * t,
+                                               train_step=lambda t: 0.1))
+    hist = ctl.run(2)
+    assert [h.version for h in hist] == [1, 2]
+    # the loop may have pre-popped the next batch into its train slot
+    assert ctl.buffer.total_consumed == 2 * 4 + len(ctl._train_batch or [])

@@ -1,0 +1,131 @@
+"""The scheduler/executor split (DESIGN.md §Async runtime): the
+virtual-clock executor reproduces pre-refactor StepLog histories
+bit-for-bit, the scheduler's admission/requeue policy is correct in
+isolation, and the threaded runtime drives both the simulator stubs and
+deadlocks to a bounded failure."""
+import pytest
+
+from repro.configs.base import RLConfig
+from repro.core import AsyncRLController, AsyncScheduler, ThreadedRuntime
+from repro.core.simulator import (HardwareModel, SimEngine, SimPromptStream,
+                                  SimTrainer, WorkloadModel, make_llm_timing)
+
+
+def _sim_parts(*, eta=4, batch=64, n_slots=64, mean_len=200, seed=7):
+    rl = RLConfig(batch_size=batch, max_staleness=eta, interruptible=True)
+    eng = SimEngine(n_slots=n_slots, mean_len=mean_len, max_len=2048,
+                    prompt_len=64, seed=seed)
+    sched = AsyncScheduler(prompt_stream=SimPromptStream(64), rl=rl)
+    return eng, SimTrainer(), sched, rl
+
+
+# Captured from the PRE-refactor AsyncRLController (commit 72b4cc5) on
+# this exact configuration: the virtual-clock executor must reproduce it
+# bit-for-bit through the extracted scheduler (acceptance criterion).
+GOLDEN_SIM = [
+    # (version, clock, n_tokens, gen_tokens_total, interruptions,
+    #  staleness_mean, staleness_max)
+    (1, 0.6184465176673283, 10556, 14720, 1, 0.0, 0),
+    (2, 1.080034191133172, 12834, 25408, 2, 0.84375, 1),
+    (3, 1.5666662545012766, 13694, 36736, 3, 1.109375, 2),
+    (4, 2.1070502903751605, 15557, 49472, 4, 1.3125, 3),
+    (5, 2.5722474789733587, 15714, 60224, 5, 1.296875, 4),
+    (6, 3.1015424840246997, 14680, 72640, 6, 1.21875, 5),
+]
+
+
+def test_virtual_executor_reproduces_prerefactor_history_bitforbit():
+    hw = HardwareModel()
+    wl = WorkloadModel(n_params=1e9)
+    timing = make_llm_timing(hw, wl, n_gen_devices=24, n_train_devices=8)
+    eng, trainer, sched, rl = _sim_parts()
+    ctl = AsyncRLController(engine=eng, trainer=trainer, scheduler=sched,
+                            rl=rl, timing=timing)
+    hist = ctl.run(6)
+    got = [(h.version, h.clock, h.n_tokens, h.gen_tokens_total,
+            h.interruptions, h.staleness_mean, h.staleness_max)
+           for h in hist]
+    assert got == GOLDEN_SIM
+
+
+def test_scheduler_requeues_partial_admission():
+    """Requests the engine could not take (paged pool exhaustion) are
+    re-offered by the next plan_admission, before fresh stream pulls,
+    and only the admitted count hits the Eq. 3 budget."""
+    rl = RLConfig(batch_size=4, max_staleness=0)
+    sched = AsyncScheduler(prompt_stream=SimPromptStream(64), rl=rl)
+    reqs = sched.plan_admission(3)
+    assert [r["rid"] for r in reqs] == [0, 1, 2]
+    sched.admitted(reqs, 1)                    # engine took only the first
+    assert sched.stal.n_submitted == 1
+    again = sched.plan_admission(3)
+    assert [r["rid"] for r in again] == [1, 2, 3]   # deferred first, then new
+    sched.admitted(again, 3)
+    assert sched.stal.n_submitted == 4
+    # eta=0, batch=4: the Eq. 3 budget for version 0 is now exhausted
+    assert sched.plan_admission(8) == []
+
+
+def test_threaded_runtime_on_simulator_stubs():
+    """Same scheduler, real threads: the stub engine/trainer complete the
+    run with every trajectory consumed exactly once and the staleness
+    bound enforced."""
+    eng, trainer, sched, rl = _sim_parts(batch=32, n_slots=32, mean_len=50)
+    rt = ThreadedRuntime(engine=eng, trainer=trainer, scheduler=sched)
+    hist = rt.run(5, timeout=60)
+    assert [h.version for h in hist] == [1, 2, 3, 4, 5]
+    assert rt.buffer.total_consumed == 5 * 32
+    assert rt.buffer.total_added >= rt.buffer.total_consumed
+    # Eq. 3 bounds SUBMISSION; stragglers may exceed eta by a small margin
+    assert max(h.staleness_max for h in hist) <= 4 + 2
+    assert rt.clock > 0 and rt.effective_throughput() > 0
+
+
+def test_threaded_runtime_resumable():
+    """A second run() continues from the trainer's version (fresh threads
+    rebind the engine driver released by the first run)."""
+    eng, trainer, sched, rl = _sim_parts(batch=16, n_slots=16, mean_len=30)
+    rt = ThreadedRuntime(engine=eng, trainer=trainer, scheduler=sched)
+    rt.run(2, timeout=60)
+    rt.run(3, timeout=60)
+    assert [h.version for h in rt.history] == [1, 2, 3, 4, 5]
+    assert rt.buffer.total_consumed == 5 * 16
+
+
+def test_threaded_runtime_timeout_fails_fast_and_is_retryable():
+    """A pipeline that can never form a batch raises TimeoutError at the
+    deadline instead of hanging (the CI smoke relies on this) — and the
+    buffer stays open, so lifting the blockage and retrying works."""
+    eng, trainer, sched, rl = _sim_parts(batch=64, n_slots=64, mean_len=30)
+    sched.stal.n_submitted = 10**9             # exhaust the Eq. 3 budget
+    rt = ThreadedRuntime(engine=eng, trainer=trainer, scheduler=sched)
+    with pytest.raises(TimeoutError):
+        rt.run(1, timeout=0.5)
+    assert trainer.version == 0
+    assert not rt.buffer.closed
+    sched.stal.n_submitted = 0                 # lift the blockage; retry
+    hist = rt.run(1, timeout=60)
+    assert [h.version for h in hist] == [1]
+
+
+def test_serial_then_threaded_run_shares_engine():
+    """run_serial releases the engine driver like run() does, so a serial
+    warmup followed by a threaded run (the benchmark's pattern, in either
+    order) binds cleanly."""
+    eng, trainer, sched, rl = _sim_parts(batch=16, n_slots=16, mean_len=30)
+    rt = ThreadedRuntime(engine=eng, trainer=trainer, scheduler=sched)
+    rt.run_serial(2)
+    rt.run(2, timeout=60)
+    rt.run_serial(1)
+    assert [h.version for h in rt.history] == [1, 2, 3, 4, 5]
+
+
+def test_virtual_and_threaded_share_legacy_surface():
+    """Both executors expose the history/buffer/stal/reward surface the
+    launch and benchmark layers consume."""
+    eng, trainer, sched, rl = _sim_parts(batch=16, n_slots=16, mean_len=30)
+    rt = ThreadedRuntime(engine=eng, trainer=trainer, scheduler=sched)
+    rt.run(1, timeout=60)
+    for attr in ("buffer", "stal", "stal_stats", "reward", "history"):
+        assert getattr(rt, attr) is not None
+    assert rt.stal_stats.histogram()
