@@ -43,7 +43,7 @@ import os
 import subprocess
 import sys
 
-from benchmarks.common import emit
+from benchmarks.common import bench_path, emit
 
 DEVICES = 4
 STEPS = 5               # measured versions; fixed window (see module doc)
@@ -151,7 +151,7 @@ def main() -> None:
     rec["overlap_demonstrated"] = (
         rec["threaded"]["trainer_busy_fraction"] > 0
         and rec["threaded"]["tokens_during_train"] > 0)
-    with open("BENCH_async_overlap.json", "w") as f:
+    with open(bench_path("BENCH_async_overlap.json"), "w") as f:
         json.dump(rec, f, indent=2)
 
     us_per_version = rec["threaded"]["wall_s"] / rec["threaded"]["versions"] * 1e6

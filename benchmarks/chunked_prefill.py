@@ -1,0 +1,183 @@
+"""Chunked prefill vs monolithic: decode-stall and effective throughput.
+
+The monolithic engine freezes EVERY decoding slot whenever a group is
+admitted (whole-prompt prefill) or weights are published (full-history
+re-prefill): the merged token stream across slots shows one long gap per
+prefill event.  Chunked prefill (DESIGN.md §Chunked prefill) amortizes
+the same work across engine steps — each step ingests at most
+``--prefill-chunk`` tokens and then advances every fully-ingested slot,
+so an interrupted slot resumes as soon as *its* history is re-ingested.
+
+Both engines run the SAME request schedule, interrupt schedule, seed and
+per-request RNG streams, so they generate identical trajectories (the
+PR's identity property) and the comparison is stall/wall-clock at equal
+output.  Per mode we record:
+
+  * ``max_decode_stall_s`` — the headline metric: the longest gap in the
+    MERGED token stream (wall time during which no slot sampled a
+    token).  This is the generation dead time a prefill event causes;
+    the acceptance bar is chunked >= 2x smaller.
+  * ``max_slot_gap_s`` — worst per-slot inter-token gap (honest upper
+    bound: the LAST slot in the FIFO re-ingest queue waits for the whole
+    backlog, so this improves less than the global stall).
+  * effective throughput (generated tokens / wall s) — must stay ~equal.
+
+Results land in ``BENCH_chunked_prefill.json`` (via ``bench_path``: smoke
+runs never clobber the committed full-run baseline).  Warmup runs the
+ENTIRE scenario once first, covering every jit signature — decode,
+monolithic admission, the full-width re-prefill, chunk ingest, and row
+reset (first-compile of the re-prefill is ~1s on CPU and would otherwise
+land inside exactly one mode's timed window).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from benchmarks.common import bench_path, emit, smoke_steps
+
+N_SLOTS = 8
+PROMPT_LEN = 48
+MAX_GEN = 16
+CHUNK = 8
+N_REQUESTS = 16
+INTERRUPT_EVERY = 64        # generated tokens between weight publications
+
+
+def _build(prefill_chunk: int, seed: int = 0):
+    import jax
+
+    from repro.configs.base import ModelConfig
+    from repro.core.rollout import RolloutEngine
+    from repro.data import tokenizer
+    from repro.models.model import build_model
+
+    cfg = ModelConfig(name="bench-chunk", family="dense", n_layers=2,
+                      d_model=48, n_heads=4, n_kv_heads=2, d_ff=96,
+                      vocab_size=tokenizer.VOCAB_SIZE)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.key(seed))
+    eng = RolloutEngine(model, params, n_slots=N_SLOTS,
+                        prompt_len=PROMPT_LEN, max_gen_len=MAX_GEN,
+                        seed=seed, rng="request",
+                        prefill_chunk=prefill_chunk)
+    return eng, params
+
+
+def _requests(n):
+    out = []
+    for i in range(n):
+        prompt = [1 + (7 * i + j) % 40 for j in range(PROMPT_LEN)]
+        out.append({"rid": i, "prompt_id": i, "prompt": prompt,
+                    "answer": None})
+    return out
+
+
+def _drive(eng, params, n_requests: int):
+    """Run the fixed scenario; returns (token_times, per_slot_times,
+    wall_s, tokens).  Interrupts publish freshly materialized params
+    (``x * 1.0``: new buffers, bit-identical values — the engine pays
+    the FULL re-prefill cost while trajectories stay comparable across
+    modes) every ``INTERRUPT_EVERY`` generated tokens, so both modes
+    interrupt at the same generation points."""
+    import jax
+
+    done = 0
+    pending = _requests(n_requests)
+    t0 = time.perf_counter()
+    token_times = []                       # merged stream sample times
+    slot_times = {}                        # rid -> times of its samples
+    step = 0
+    version = eng.version
+    next_interrupt = INTERRUPT_EVERY
+    counts = {}                            # rid -> samples seen so far
+    responses = {}                         # rid -> full sampled sequence
+    while done < n_requests:
+        n = eng.admit(pending)
+        pending = pending[n:]
+        if eng.tokens_generated >= next_interrupt:
+            next_interrupt += INTERRUPT_EVERY
+            version += 1
+            params = jax.tree.map(lambda x: x * 1.0, params)
+            eng.update_weights(params, version)
+        finished = eng.step()
+        now = time.perf_counter() - t0
+        for s in eng.slots:
+            if s.active and len(s.response) > counts.get(s.rid, 0):
+                counts[s.rid] = len(s.response)
+                token_times.append(now)
+                slot_times.setdefault(s.rid, []).append(now)
+        for f in finished:
+            done += 1
+            responses[f.rid] = tuple(f.response)
+            if len(f.response) > counts.get(f.rid, 0):
+                counts[f.rid] = len(f.response)
+                token_times.append(now)
+                slot_times.setdefault(f.rid, []).append(now)
+        step += 1
+        assert step < 20_000, "benchmark scenario did not converge"
+    wall = time.perf_counter() - t0
+    return token_times, slot_times, wall, sum(counts.values()), responses
+
+
+def _measure(prefill_chunk: int, n_requests: int, seed: int = 0):
+    """Returns (metrics record, full per-request token sequences)."""
+    eng, params = _build(prefill_chunk, seed)
+    _drive(eng, params, n_requests)                     # warmup: compiles all
+    eng2, params2 = _build(prefill_chunk, seed)
+    token_times, slot_times, wall, tokens, responses = _drive(
+        eng2, params2, n_requests)
+    times = sorted(token_times)
+    global_gaps = [b - a for a, b in zip(times, times[1:])]
+    slot_gaps = [b - a for ts in slot_times.values()
+                 for a, b in zip(ts, ts[1:])]
+    return {
+        "mode": "chunked" if prefill_chunk else "monolithic",
+        "prefill_chunk": prefill_chunk,
+        "wall_s": round(wall, 4),
+        "tokens": tokens,
+        "throughput_tok_s": round(tokens / wall, 2),
+        "max_decode_stall_s": round(max(global_gaps), 5),
+        "max_slot_gap_s": round(max(slot_gaps), 5),
+        "interruptions": eng2.interruptions,
+        "reprefill_tokens": eng2.reprefill_tokens,
+        "decode_steps_during_prefill": eng2.decode_steps_during_prefill,
+    }, responses
+
+
+def main() -> None:
+    n_requests = smoke_steps(N_REQUESTS, N_SLOTS + 2)
+    mono, mono_resp = _measure(0, n_requests)
+    chunk, chunk_resp = _measure(CHUNK, n_requests)
+    # identity is asserted on the FULL token sequences (a bug that alters
+    # sampled tokens without changing lengths must not pass), and recorded
+    # so the CI regression gate can band on it
+    identical = mono_resp == chunk_resp
+    assert identical, \
+        "chunked and monolithic trajectories diverged (identity property)"
+
+    stall_x = mono["max_decode_stall_s"] / max(chunk["max_decode_stall_s"],
+                                               1e-9)
+    tput_x = chunk["throughput_tok_s"] / max(mono["throughput_tok_s"], 1e-9)
+    record = {
+        "config": {"n_slots": N_SLOTS, "prompt_len": PROMPT_LEN,
+                   "max_gen_len": MAX_GEN, "prefill_chunk": CHUNK,
+                   "n_requests": n_requests,
+                   "interrupt_every_tokens": INTERRUPT_EVERY},
+        "monolithic": mono,
+        "chunked": chunk,
+        "stall_reduction_x": round(stall_x, 3),
+        "throughput_ratio": round(tput_x, 3),
+        "trajectories_identical": identical,
+    }
+    with open(bench_path("BENCH_chunked_prefill.json"), "w") as f:
+        json.dump(record, f, indent=2)
+
+    emit("chunked_prefill_stall", chunk["max_decode_stall_s"] * 1e6,
+         f"stall_x{stall_x:.2f}")
+    emit("chunked_prefill_tput", chunk["wall_s"] / max(chunk["tokens"], 1) * 1e6,
+         f"tput_x{tput_x:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,9 @@ train step / packing call), derived = the paper-facing metric
 """
 from __future__ import annotations
 
+import glob
 import os
+import tempfile
 import time
 from contextlib import contextmanager
 
@@ -22,6 +24,36 @@ SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
 def smoke_steps(n: int, smoke_n: int = 1) -> int:
     """``n`` normally, ``smoke_n`` when smoke mode is on."""
     return smoke_n if SMOKE else n
+
+
+def bench_path(filename: str) -> str:
+    """Where a BENCH_*.json artifact goes.
+
+    Committed baselines live in the repo root and are FULL-RUN numbers;
+    smoke runs (CI, 2-core hosts) produce reduced-step numbers that must
+    never clobber them, so with smoke mode on — or ``REPRO_BENCH_OUT``
+    set — results land in the scratch dir instead.  The CI bench lane
+    asserts ``git diff --exit-code`` afterwards and feeds the scratch dir
+    to ``tools/check_bench.py`` (the benchmark-regression gate)."""
+    out = os.environ.get("REPRO_BENCH_OUT", "")
+    if not out and SMOKE:       # module-global read: sees run.py's rebinding
+        out = os.path.join(tempfile.gettempdir(), "repro-bench")
+    if not out:
+        return filename
+    os.makedirs(out, exist_ok=True)
+    return os.path.join(out, filename)
+
+
+def clean_bench_outputs() -> None:
+    """Remove stale BENCH_*.json from the scratch out dir (no-op when
+    results go to the repo root).  ``run.py`` calls this at the start of
+    a smoke pass: the scratch dir is shared across runs, and a leftover
+    artifact from a previous run must not satisfy the regression gate
+    when the current run's benchmark crashes before writing."""
+    d = os.path.dirname(bench_path("_"))
+    if d:
+        for f in glob.glob(os.path.join(d, "BENCH_*.json")):
+            os.remove(f)
 
 
 def emit(name: str, us_per_call: float, derived: str):

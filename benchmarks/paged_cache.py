@@ -27,7 +27,7 @@ from __future__ import annotations
 import json
 import time
 
-from benchmarks.common import emit, smoke_steps
+from benchmarks.common import bench_path, emit, smoke_steps
 from repro.configs import get_model_config
 from repro.configs.base import RLConfig
 from repro.core.batching import BlockAllocator
@@ -138,7 +138,7 @@ def main() -> None:
         "decode_step_us": {"ring": round(us_ring, 1),
                            "paged": round(us_paged, 1)},
     }
-    with open("BENCH_paged_cache.json", "w") as f:
+    with open(bench_path("BENCH_paged_cache.json"), "w") as f:
         json.dump(record, f, indent=2)
 
     emit("paged_cache_slots", us_paged, f"slots_x{min_ratio:.2f}")

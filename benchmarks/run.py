@@ -13,6 +13,7 @@ keeps the perf scripts from rotting); with ``name`` only that module.
   fig6a_dynamic_batching Fig. 6a: Algorithm 1 vs static micro-batching
   fig6b_interruptible    Fig. 6b: interruptible-generation ablation
   paged_cache            Paged vs ring KV cache: slots at fixed HBM
+  chunked_prefill        Chunked vs monolithic prefill: decode-stall
   async_overlap          Threaded runtime: real gen/train wall-clock overlap
   roofline_report        Roofline terms from the dry-run artifacts
 
@@ -23,10 +24,11 @@ from __future__ import annotations
 import sys
 import traceback
 
-from benchmarks import (async_overlap, fig1_timeline, fig4_scaling,
-                        fig5c_throughput, fig6a_dynamic_batching,
-                        fig6b_interruptible, paged_cache, roofline_report,
-                        table1_end_to_end, table2_staleness, table8_rloo)
+from benchmarks import (async_overlap, chunked_prefill, fig1_timeline,
+                        fig4_scaling, fig5c_throughput,
+                        fig6a_dynamic_batching, fig6b_interruptible,
+                        paged_cache, roofline_report, table1_end_to_end,
+                        table2_staleness, table8_rloo)
 from benchmarks.common import emit
 
 MODULES = [
@@ -39,6 +41,7 @@ MODULES = [
     ("fig6a", fig6a_dynamic_batching),
     ("fig6b", fig6b_interruptible),
     ("paged", paged_cache),
+    ("chunked", chunked_prefill),
     ("overlap", async_overlap),
     ("roofline", roofline_report),
 ]
@@ -48,10 +51,11 @@ MODULES = [
 # simulator/controller stack (fig1) and the real model + packing/PPO
 # step path (fig6a); roofline exercises the artifact plumbing; paged
 # keeps the paged-cache engine + allocator benchmark from rotting;
+# chunked keeps the chunked-prefill engine + stall metric from rotting;
 # overlap keeps the threaded disaggregated runtime from rotting (a
 # subprocess on 4 fake devices with a hard timeout, so a deadlock fails
 # fast instead of hanging the lane).
-SMOKE_MODULES = ("fig1", "fig6a", "paged", "overlap", "roofline")
+SMOKE_MODULES = ("fig1", "fig6a", "paged", "chunked", "overlap", "roofline")
 
 
 def main() -> None:
@@ -60,6 +64,7 @@ def main() -> None:
     if smoke:
         from benchmarks import common
         common.SMOKE = True
+        common.clean_bench_outputs()       # no stale gate inputs
         args = [a for a in args if a != "--smoke"]
     print("name,us_per_call,derived")
     only = args[0] if args else None

@@ -61,6 +61,38 @@ def static_batching(seq_lens: Sequence[int], n_microbatches: int) -> List[List[i
 
 
 # ---------------------------------------------------------------------------
+# Chunked-prefill planner (DESIGN.md §Chunked prefill)
+# ---------------------------------------------------------------------------
+
+def plan_prefill_chunks(total: int, budget: int, align: int = 1,
+                        start: int = 0) -> List[Tuple[int, int]]:
+    """Token-budget chunk plan for one slot's pending prefill work.
+
+    Splits the history span [start, total) into consecutive (begin, end)
+    spans of at most ``budget`` tokens, covering every token exactly
+    once.  Every span end except the last is rounded DOWN to a multiple
+    of ``align`` when that loses no progress (paged engines align to
+    ``block_size`` so a prefix-shared block is rewritten by exactly one
+    chunk and its version tag means "fully written"); when
+    budget < align the spans are necessarily sub-block — safe, because
+    the engine ingests slots strictly FIFO, so no other sharer reads a
+    half-written block in between.
+    """
+    assert budget > 0 and align >= 1 and 0 <= start <= total
+    spans: List[Tuple[int, int]] = []
+    b = start
+    while b < total:
+        e = min(total, b + budget)
+        if e < total and align > 1:
+            aligned = (e // align) * align
+            if aligned > b:
+                e = aligned
+        spans.append((b, e))
+        b = e
+    return spans
+
+
+# ---------------------------------------------------------------------------
 # Paged KV-cache block allocator (host side of the paged rollout engine)
 # ---------------------------------------------------------------------------
 

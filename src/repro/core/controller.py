@@ -84,6 +84,9 @@ class AsyncRLController(SchedulerExecutorMixin):
         self.clock = 0.0
         self._train_batch = None
         self._train_done_at = 0.0
+        # chunked engines (DESIGN.md §Chunked prefill) do prefill work
+        # inside step(), not at admission/interrupt: bill it there
+        self._chunked = getattr(engine, "prefill_chunk", 0) > 0
 
     # ---- pieces -----------------------------------------------------------
     def _admit(self) -> None:
@@ -92,11 +95,18 @@ class AsyncRLController(SchedulerExecutorMixin):
         reqs = self.sched.plan_admission(len(self.engine.free_slots()))
         if reqs:
             # paged engines may take fewer than offered (pool exhaustion);
-            # the scheduler requeues the remainder for the next plan
+            # the scheduler requeues the remainder for the next plan,
+            # gated by the engine's own deferral count rather than
+            # another free_slots() probe
             n = self.engine.admit(reqs, clock=self.clock)
-            self.sched.admitted(reqs, n)
-            self.clock += self.timing.prefill(
-                sum(len(r["prompt"]) for r in reqs[:n]))
+            self.sched.admitted(reqs, n,
+                                deferred=getattr(self.engine,
+                                                 "deferred_last", 0))
+            if not self._chunked:
+                # chunked admission does no prefill here: its ingest spans
+                # are billed inside the step loop as they actually run
+                self.clock += self.timing.prefill(
+                    sum(len(r["prompt"]) for r in reqs[:n]))
 
     def _collect(self, finished) -> None:
         self.sched.collect(finished,
@@ -129,8 +139,10 @@ class AsyncRLController(SchedulerExecutorMixin):
         applied = self.engine.update_weights(
             self.trainer.params, self.trainer.version,
             interruptible=self.rl.interruptible)
-        if applied and inflight:
+        if applied and inflight and not self._chunked:
             # interruption overhead: re-prefill of every in-flight prefix
+            # (chunked engines amortize it: billed per span in the step
+            # loop instead of as a lump here)
             self.clock += self.timing.prefill(inflight)
         self.sched.log_step(metrics, version=self.trainer.version,
                             clock=self.clock,
@@ -147,8 +159,20 @@ class AsyncRLController(SchedulerExecutorMixin):
             self._admit()
             self._maybe_start_training()
             if self.engine.n_active > 0:
+                if self._chunked:
+                    ing0 = (self.engine.prefill_tokens
+                            + self.engine.reprefill_tokens)
                 finished = self.engine.step()
                 self.clock += self.timing.decode_step(self.engine.n_active)
+                if self._chunked:
+                    # bill the span(s) this step actually ingested (the
+                    # engine's counters are span-length for admission and
+                    # deduped writes for re-ingest — the cost the chunked
+                    # engine actually pays)
+                    ing = (self.engine.prefill_tokens
+                           + self.engine.reprefill_tokens) - ing0
+                    if ing:
+                        self.clock += self.timing.prefill(ing)
                 self._collect(finished)
                 stall_guard = 0
             elif self._train_batch is not None:

@@ -32,19 +32,37 @@ Two cache organizations (``cache="ring" | "paged"``):
                  via a prefix-hash, and the ``update_weights`` re-prefill
                  rewrites each *physical* block at most once — blocks
                  already tagged with the new version are skipped.
+
+Two prefill disciplines (``prefill_chunk``):
+
+  * ``0`` (monolithic) — admission prefills the whole group in one call
+    and ``update_weights`` re-prefills every in-flight prefix before any
+    slot decodes again: every decoding slot STALLS for the full prefill.
+  * ``> 0`` (chunked, DESIGN.md §Chunked prefill) — prompt ingestion and
+    the post-interrupt re-prefill are split into spans of at most
+    ``prefill_chunk`` tokens by ``core.batching.plan_prefill_chunks``;
+    ``step()`` becomes a unified engine step that ingests at most ONE
+    span (strictly FIFO across slots) and then advances every slot whose
+    history is fully ingested.  An interrupted slot resumes decoding as
+    soon as *its* history is back, not when the whole batch is.  Chunked
+    mode requires per-request RNG streams (``rng="request"``): each
+    sampled token draws from fold_in(fold_in(seed, rid), draw_index), so
+    trajectories are identical to the monolithic engine's no matter how
+    ingestion is scheduled.
 """
 from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, RLConfig
-from repro.core.batching import BlockAllocator, prefix_block_hashes
+from repro.core.batching import (BlockAllocator, plan_prefill_chunks,
+                                 prefix_block_hashes)
 from repro.data import tokenizer
 
 
@@ -61,11 +79,26 @@ class Slot:
     pending: int = 0                   # sampled token not yet fed to cache
     answer: object = None
     submit_time: float = 0.0
+    # chunked-prefill bookkeeping (DESIGN.md §Chunked prefill):
+    # the history being ingested, the per-slot watermark (tokens of it
+    # already in the cache), the planned spans still to feed, and — paged
+    # mode — the physical blocks this ingest pass has written so far
+    ingest_tokens: List[int] = field(default_factory=list)
+    ingested: int = 0
+    chunk_plan: List[Tuple[int, int]] = field(default_factory=list)
+    written_blocks: Set[int] = field(default_factory=set)
+    reingest: bool = False             # redo after an interrupt, not fresh
 
     @property
     def history_len(self) -> int:
         """Tokens already ingested by the cache (prompt + fed responses)."""
         return len(self.prompt) + len(self.response) - (1 if self.response else 0)
+
+    @property
+    def ingesting(self) -> bool:
+        """True while the slot's history is not yet fully in the cache
+        (the slot holds its resources but does not decode)."""
+        return self.active and self.ingested < len(self.ingest_tokens)
 
 
 @dataclass
@@ -98,7 +131,8 @@ class RolloutEngine:
                  eos_id: int = tokenizer.EOS, seed: int = 0,
                  version: int = 0, dtype=jnp.float32,
                  cache: str = "ring", block_size: int = 16,
-                 n_blocks: Optional[int] = None):
+                 n_blocks: Optional[int] = None,
+                 prefill_chunk: int = 0, rng: str = "auto"):
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.params = params
@@ -116,6 +150,7 @@ class RolloutEngine:
         self.slots = [Slot() for _ in range(n_slots)]
         self._pending_weights: Optional[Tuple] = None
         self._driver_thread: Optional[int] = None
+        self._ingest_queue: List[int] = []
 
         # stats
         self.tokens_generated = 0
@@ -123,6 +158,24 @@ class RolloutEngine:
         self.prefill_tokens = 0
         self.reprefill_tokens = 0
         self.prefix_reused_blocks = 0
+        self.deferred = 0                  # requests bounced on pool pressure
+        self.deferred_last = 0             # ... by the most recent admit()
+        self.decode_steps_during_prefill = 0
+
+        # RNG discipline: "step" folds a global step counter into one key
+        # per jit call (the legacy scheme — trajectories depend on batch
+        # timing); "request" derives every draw from (seed, rid,
+        # draw_index), making trajectories independent of admission
+        # timing, interrupts, and chunking (DESIGN.md §Chunked prefill).
+        self.prefill_chunk = int(prefill_chunk)
+        if rng == "auto":
+            rng = "request" if self.prefill_chunk else "step"
+        assert rng in ("step", "request"), rng
+        if self.prefill_chunk and rng != "request":
+            raise ValueError("prefill_chunk > 0 requires rng='request': "
+                             "the step-counter scheme cannot reproduce "
+                             "monolithic trajectories under chunking")
+        self.rng_mode = rng
 
         assert cache in ("ring", "paged"), cache
         self.cache_mode = cache
@@ -141,18 +194,34 @@ class RolloutEngine:
                                                 block_size, dtype)
             self._jit_decode_paged = jax.jit(self._decode_paged_fn)
             self._jit_prefill_paged = jax.jit(self._prefill_paged_fn)
+            if self.prefill_chunk:
+                self._jit_chunk_paged = jax.jit(self._chunk_paged_fn)
+                self._jit_chunk_paged_quiet = jax.jit(self._chunk_paged_quiet_fn)
         else:
+            if self.prefill_chunk and not hasattr(model, "prefill_chunk"):
+                raise ValueError(
+                    "prefill_chunk > 0 needs a decoder-only LM with chunked "
+                    "prefill support (DESIGN.md §Chunked prefill)")
             self.cache = model.init_cache(n_slots, self.max_len, dtype)
             self._jit_decode = jax.jit(self._decode_fn)
             self._jit_prefill = jax.jit(self._prefill_fn)
             self._jit_insert = jax.jit(self.model.cache_insert)
+            if self.prefill_chunk:
+                self._jit_chunk = jax.jit(self._chunk_fn)
+                self._jit_chunk_quiet = jax.jit(self._chunk_quiet_fn)
+        if self.prefill_chunk:
+            self._jit_reset = jax.jit(self.model.reset_slot_rows)
 
-    # ---- jit bodies -------------------------------------------------------
-    def _sample(self, logits, rng):
+    # ---- sampling ---------------------------------------------------------
+    def _masked_logits(self, logits):
         lf = logits.astype(jnp.float32)
         # mask padded vocab tail
         v = self.cfg.vocab_size
-        lf = jnp.where(jnp.arange(lf.shape[-1]) < v, lf, -1e30)
+        return jnp.where(jnp.arange(lf.shape[-1]) < v, lf, -1e30)
+
+    def _sample(self, logits, rng):
+        """Legacy step-counter scheme: one key samples the whole batch."""
+        lf = self._masked_logits(logits)
         if self.temperature <= 0.0:            # greedy (evaluation protocol)
             tok = jnp.argmax(lf, axis=-1)
         else:
@@ -163,35 +232,93 @@ class RolloutEngine:
         lp_tok = jnp.take_along_axis(lp, tok[..., None], axis=-1)[..., 0]
         return tok.astype(jnp.int32), lp_tok
 
-    def _decode_fn(self, params, token, cache, rng):
-        logits, cache = self.model.decode_step(params, token, cache)
-        tok, lp = self._sample(logits, rng)
+    def _sample_request(self, logits, rids, draws):
+        """Per-request streams: row j draws with key
+        fold_in(fold_in(seed, rid_j), draw_j) — batch-layout independent,
+        so chunked and monolithic engines sample identically
+        (DESIGN.md §Chunked prefill)."""
+        lf = self._masked_logits(logits)
+        if self.temperature <= 0.0:
+            tok = jnp.argmax(lf, axis=-1)
+        else:
+            if self.temperature != 1.0:
+                lf = lf / self.temperature
+            keys = jax.vmap(lambda r, d: jax.random.fold_in(
+                jax.random.fold_in(self._rng, r), d))(rids, draws)
+            tok = jax.vmap(jax.random.categorical)(keys, lf)
+        lp = jax.nn.log_softmax(lf, axis=-1)
+        lp_tok = jnp.take_along_axis(lp, tok[..., None], axis=-1)[..., 0]
+        return tok.astype(jnp.int32), lp_tok
+
+    def _sample_any(self, logits, rng, rids, draws):
+        if self.rng_mode == "request":
+            return self._sample_request(logits, rids, draws)
+        return self._sample(logits, rng)
+
+    # ---- jit bodies -------------------------------------------------------
+    def _decode_fn(self, params, token, cache, active, rng, rids, draws):
+        logits, cache = self.model.decode_step(params, token, cache, active)
+        tok, lp = self._sample_any(logits, rng, rids, draws)
         return tok, lp, cache
 
-    def _prefill_fn(self, params, tokens, lengths, rng):
+    def _prefill_fn(self, params, tokens, lengths, rng, rids):
         """Group prefill over (G, L) right-padded tokens -> fresh sub-cache
         + first sampled token per row."""
         g = tokens.shape[0]
         cache = self.model.init_cache(g, self.max_len, self.dtype)
         logits, cache = self.model.prefill(params, tokens, cache, length=lengths)
-        tok, lp = self._sample(logits, rng)
+        tok, lp = self._sample_any(logits, rng, rids, jnp.zeros_like(rids))
         return tok, lp, cache
 
-    def _decode_paged_fn(self, params, token, cache, tables, rng):
+    def _decode_paged_fn(self, params, token, cache, tables, active, rng,
+                         rids, draws):
         logits, cache = self.model.decode_step_paged(params, token, cache,
-                                                     tables)
-        tok, lp = self._sample(logits, rng)
+                                                     tables, active)
+        tok, lp = self._sample_any(logits, rng, rids, draws)
         return tok, lp, cache
 
     def _prefill_paged_fn(self, params, tokens, lengths, dest, slot_ids,
-                          cache, rng):
+                          cache, rng, rids):
         """Group prefill writing straight into the global block pool
         (``dest`` carries the physical destination block per token; -1 =
         shared/padded, not written) + first sampled token per row."""
         logits, cache = self.model.prefill_paged(params, tokens, cache, dest,
                                                  slot_ids, length=lengths)
-        tok, lp = self._sample(logits, rng)
+        tok, lp = self._sample_any(logits, rng, rids, jnp.zeros_like(rids))
         return tok, lp, cache
+
+    def _chunk_fn(self, params, tokens, cache, slot_ids, start, length, rids):
+        """One ring-cache ingest span + first-token sample (used only for
+        the span that completes a prompt; draw index 0 of the request)."""
+        logits, cache = self.model.prefill_chunk(params, tokens, cache,
+                                                 slot_ids, start, length)
+        tok, lp = self._sample_request(logits, rids, jnp.zeros_like(rids))
+        return tok, lp, cache
+
+    def _chunk_quiet_fn(self, params, tokens, cache, slot_ids, start, length):
+        """Non-completing ingest span: only the cache advance is returned,
+        so XLA dead-code-eliminates the logits head and sampling — at
+        production vocab sizes that is the dominant per-span FLOP after
+        attention."""
+        _, cache = self.model.prefill_chunk(params, tokens, cache,
+                                            slot_ids, start, length)
+        return cache
+
+    def _chunk_paged_fn(self, params, tokens, cache, tables, dest, slot_ids,
+                        start, length, rids):
+        """One paged ingest span (pool writes at ``dest``) + first-token
+        sample."""
+        logits, cache = self.model.prefill_chunk_paged(
+            params, tokens, cache, tables, dest, slot_ids, start, length)
+        tok, lp = self._sample_request(logits, rids, jnp.zeros_like(rids))
+        return tok, lp, cache
+
+    def _chunk_paged_quiet_fn(self, params, tokens, cache, tables, dest,
+                              slot_ids, start, length):
+        """Non-completing paged span (see ``_chunk_quiet_fn``)."""
+        _, cache = self.model.prefill_chunk_paged(
+            params, tokens, cache, tables, dest, slot_ids, start, length)
+        return cache
 
     def _next_rng(self):
         self._step_count += 1
@@ -234,11 +361,39 @@ class RolloutEngine:
     def blocks_in_use(self) -> int:
         return self.allocator.n_live if self.cache_mode == "paged" else 0
 
+    def ingest_backlog_tokens(self) -> int:
+        """Prefill tokens still queued for chunked ingestion."""
+        return sum(len(s.ingest_tokens) - s.ingested
+                   for s in self.slots if s.ingesting)
+
+    def stats(self) -> Dict[str, int]:
+        """Engine counters (DESIGN.md §Chunked prefill).  ``deferred`` /
+        ``deferred_last`` count requests the engine bounced on POOL
+        pressure while a free slot existed — the ``AsyncScheduler`` uses
+        them to requeue without pulling fresh work the engine cannot
+        take, instead of re-probing ``free_slots()`` (which only sees
+        slot, not block, headroom)."""
+        return {
+            "tokens_generated": self.tokens_generated,
+            "interruptions": self.interruptions,
+            "prefill_tokens": self.prefill_tokens,
+            "reprefill_tokens": self.reprefill_tokens,
+            "prefix_reused_blocks": self.prefix_reused_blocks,
+            "deferred": self.deferred,
+            "deferred_last": self.deferred_last,
+            "decode_steps_during_prefill": self.decode_steps_during_prefill,
+            "ingest_backlog_tokens": self.ingest_backlog_tokens(),
+        }
+
     def admit(self, requests: Sequence[Dict], clock: float = 0.0) -> int:
         """requests: dicts with rid, prompt_id, prompt (list[int]), answer.
         Returns number admitted (bounded by free slots; in paged mode also
-        by free pool blocks — prefix-shared blocks don't count)."""
+        by free pool blocks — prefix-shared blocks don't count).  Requests
+        bounced on pool pressure are counted in ``deferred_last``."""
         self._assert_single_driver()
+        self.deferred_last = 0
+        if self.prefill_chunk:
+            return self._admit_chunked(requests, clock)
         if self.cache_mode == "paged":
             return self._admit_paged(requests, clock)
         free = self.free_slots()
@@ -248,15 +403,18 @@ class RolloutEngine:
         g = self.n_slots
         toks = np.zeros((g, self.prompt_len), np.int32)
         lens = np.zeros((g,), np.int32)
+        rids = np.zeros((g,), np.int32)
         slot_ids = np.full((g,), self.n_slots + 1, np.int32)   # OOB -> dropped
         for j, req in enumerate(take):
             p = list(req["prompt"])[: self.prompt_len]
             toks[j, :len(p)] = p
             lens[j] = len(p)
+            rids[j] = req["rid"]
             slot_ids[j] = free[j]
         lens = np.maximum(lens, 1)
         tok0, lp0, sub_cache = self._jit_prefill(
-            self.params, jnp.asarray(toks), jnp.asarray(lens), self._next_rng())
+            self.params, jnp.asarray(toks), jnp.asarray(lens),
+            self._next_rng(), jnp.asarray(rids))
         self.cache = self._jit_insert(self.cache, sub_cache, jnp.asarray(slot_ids))
         self._activate_slots(take, free, lens, tok0, lp0, clock)
         return len(take)
@@ -288,12 +446,39 @@ class RolloutEngine:
         lp = max(min(len(prompt), self.prompt_len), 1)
         return -(-(lp + self.max_gen_len - 1) // self.block_size)
 
+    def _plan_blocks(self, prompt: Sequence[int],
+                     fresh_unwritten: bool) -> Optional[Tuple[List[int], int]]:
+        """Reserve the block-table row for one request: prefix-shared
+        leading blocks plus a freshly allocated tail.  Returns (row,
+        n_reused) or None when the pool cannot cover it (the caller
+        defers the request).  ``fresh_unwritten`` tags every fresh block
+        version -1 ("no contents yet") so the chunked dest rule writes
+        it on first touch."""
+        bs = self.block_size
+        need = self.blocks_needed(prompt)
+        n_full = len(prompt) // bs
+        try:
+            prefix, reused = self.allocator.plan_prefix(self.version, prompt)
+        except MemoryError:
+            return None
+        if self.allocator.n_free < need - n_full:
+            for b in prefix:
+                self.allocator.release(b)
+            return None                    # pool full: request stays queued
+        tag = -1 if fresh_unwritten else self.version
+        if fresh_unwritten:
+            for b in prefix[reused:]:
+                self.allocator.set_version(b, -1)
+        tail = [self.allocator.alloc(tag) for _ in range(need - n_full)]
+        self.prefix_reused_blocks += reused
+        return prefix + tail, reused
+
     def _admit_paged(self, requests: Sequence[Dict], clock: float) -> int:
         free = self.free_slots()
         g = self.n_slots
-        bs = self.block_size
         toks = np.zeros((g, self.prompt_len), np.int32)
         lens = np.zeros((g,), np.int32)
+        rids = np.zeros((g,), np.int32)
         dest = np.full((g, self.prompt_len), -1, np.int32)
         slot_ids = np.full((g,), self.n_slots + 1, np.int32)   # OOB -> dropped
         take: List[Dict] = []
@@ -301,46 +486,44 @@ class RolloutEngine:
             if len(take) >= len(free):
                 break
             p = list(req["prompt"])[: self.prompt_len]
-            need = self.blocks_needed(p)
-            n_full = len(p) // bs
-            try:
-                # full prompt blocks: shared where the prefix hash hits
-                prefix, reused = self.allocator.plan_prefix(self.version, p)
-            except MemoryError:
+            plan = self._plan_blocks(p, fresh_unwritten=False)
+            if plan is None:
                 break
-            if self.allocator.n_free < need - n_full:
-                for b in prefix:
-                    self.allocator.release(b)
-                break                      # pool full: request stays queued
-            tail = [self.allocator.alloc(self.version)
-                    for _ in range(need - n_full)]
-            row = prefix + tail
+            row, reused = plan
             j = len(take)
             i = free[j]
             self.tables[i, :] = -1
             self.tables[i, :len(row)] = row
             toks[j, :len(p)] = p
             lens[j] = max(len(p), 1)
+            rids[j] = req["rid"]
             slot_ids[j] = i
             # write every position the prefill ingests — lens[j], not
             # len(p): an empty prompt still feeds one pad token whose KV
             # the ring engine stores, and a fresh pool block may hold a
             # released request's stale contents
             for pos in range(int(lens[j])):
-                e = pos // bs
+                e = pos // self.block_size
                 if e >= reused:            # shared blocks are already filled
                     dest[j, pos] = row[e]
-            self.prefix_reused_blocks += reused
             take.append(req)
+        self._count_deferred(requests, free, len(take))
         if not take:
             return 0
         self._tables_dev = None
         tok0, lp0, self.cache = self._jit_prefill_paged(
             self.params, jnp.asarray(toks), jnp.asarray(lens),
             jnp.asarray(dest), jnp.asarray(slot_ids), self.cache,
-            self._next_rng())
+            self._next_rng(), jnp.asarray(rids))
         self._activate_slots(take, free, lens, tok0, lp0, clock)
         return len(take)
+
+    def _count_deferred(self, requests, free, n_taken: int) -> None:
+        """Pool-pressure deferral accounting: the admission loop only
+        stops early on block exhaustion, so any request that had a free
+        slot but was not taken was deferred for POOL resources."""
+        self.deferred_last = max(0, min(len(requests), len(free)) - n_taken)
+        self.deferred += self.deferred_last
 
     def _release_slot_blocks(self, i: int) -> None:
         for b in self.tables[i]:
@@ -349,12 +532,177 @@ class RolloutEngine:
         self.tables[i, :] = -1
         self._tables_dev = None
 
+    # ---- chunked admission / ingestion (DESIGN.md §Chunked prefill) -------
+    def _admit_chunked(self, requests: Sequence[Dict], clock: float) -> int:
+        """Admission without blocking: occupy the slot (and, paged,
+        reserve its blocks) and queue the prompt for span-by-span
+        ingestion; no prefill happens here.  The first token is sampled
+        by the span that completes the prompt."""
+        free = self.free_slots()
+        take: List[Dict] = []
+        reset_ids: List[int] = []
+        for req in requests:
+            if len(take) >= len(free):
+                break
+            i = free[len(take)]
+            p = list(req["prompt"])[: self.prompt_len]
+            if self.cache_mode == "paged":
+                plan = self._plan_blocks(p, fresh_unwritten=True)
+                if plan is None:
+                    break
+                row, _ = plan
+                self.tables[i, :] = -1
+                self.tables[i, :len(row)] = row
+                self._tables_dev = None
+            s = self.slots[i] = Slot()
+            s.active = True
+            s.rid = req["rid"]
+            s.prompt_id = req.get("prompt_id", req["rid"])
+            s.prompt = p
+            s.behavior_version = self.version
+            s.answer = req.get("answer")
+            s.submit_time = clock
+            self._queue_ingest(i, p or [0])
+            reset_ids.append(i)
+            take.append(req)
+        if self.cache_mode == "paged":
+            self._count_deferred(requests, free, len(take))
+        if reset_ids:
+            self._reset_rows(reset_ids)
+        return len(take)
+
+    def _queue_ingest(self, i: int, history: List[int],
+                      reingest: bool = False) -> None:
+        s = self.slots[i]
+        s.ingest_tokens = history
+        s.ingested = 0
+        s.written_blocks = set()
+        s.reingest = reingest
+        align = self.block_size if self.cache_mode == "paged" else 1
+        s.chunk_plan = plan_prefill_chunks(len(history), self.prefill_chunk,
+                                           align=align)
+        self._ingest_queue.append(i)
+
+    def _reset_rows(self, slot_ids: List[int]) -> None:
+        ids = np.full((self.n_slots,), self.n_slots + 1, np.int32)
+        ids[:len(slot_ids)] = slot_ids
+        self.cache = self._jit_reset(self.cache, jnp.asarray(ids))
+
+    def _ingest_one_chunk(self) -> None:
+        """Feed the head-of-queue slot's next span.  Strictly FIFO across
+        slots: a slot's ingestion completes before the next slot's
+        starts, which is what makes prefix-shared pool blocks safe to
+        skip — a "current" block observed by a later slot was fully
+        written by an earlier, completed one."""
+        i = self._ingest_queue[0]
+        s = self.slots[i]
+        begin, end = s.chunk_plan.pop(0)
+        c = self.prefill_chunk
+        span = s.ingest_tokens[begin:end]
+        toks = np.zeros((1, c), np.int32)
+        toks[0, :len(span)] = span
+        start = jnp.asarray([begin], jnp.int32)
+        length = jnp.asarray([len(span)], jnp.int32)
+        sids = jnp.asarray([i], jnp.int32)
+        rids = jnp.asarray([max(s.rid, 0)], jnp.int32)
+        # the sample matters only for the span completing a fresh prompt;
+        # other spans take the "quiet" jit whose logits head is DCE'd
+        completes = not s.chunk_plan and not s.response
+        tok0 = lp0 = None
+        if self.cache_mode == "paged":
+            bs = self.block_size
+            dest = np.full((1, c), -1, np.int32)
+            written = 0
+            for k, pos in enumerate(range(begin, end)):
+                e_ = pos // bs
+                b = int(self.tables[i, e_])
+                if (self.allocator.version_of(b) == self.version
+                        and b not in s.written_blocks):
+                    continue               # fully written by a completed slot
+                dest[0, k] = b
+                written += 1
+                s.written_blocks.add(b)
+                # tag current only once the block's contents are COMPLETE
+                # (the span reaches its last position, or the history's):
+                # sub-block spans happen when budget < block_size, and an
+                # interrupt landing BETWEEN them must see the block stale,
+                # not skip the half-written remainder on re-ingest
+                if end >= min((e_ + 1) * bs, len(s.ingest_tokens)):
+                    self.allocator.set_version(b, self.version)
+            if completes:
+                tok0, lp0, self.cache = self._jit_chunk_paged(
+                    self.params, jnp.asarray(toks), self.cache,
+                    jnp.asarray(self.tables[i:i + 1]), jnp.asarray(dest),
+                    sids, start, length, rids)
+            else:
+                self.cache = self._jit_chunk_paged_quiet(
+                    self.params, jnp.asarray(toks), self.cache,
+                    jnp.asarray(self.tables[i:i + 1]), jnp.asarray(dest),
+                    sids, start, length)
+        else:
+            written = len(span)
+            if completes:
+                tok0, lp0, self.cache = self._jit_chunk(
+                    self.params, jnp.asarray(toks), self.cache,
+                    sids, start, length, rids)
+            else:
+                self.cache = self._jit_chunk_quiet(
+                    self.params, jnp.asarray(toks), self.cache,
+                    sids, start, length)
+        s.ingested = end
+        # accounting keys on REDO-vs-fresh, not on response presence: a
+        # slot interrupted mid-admission re-ingests with no token sampled
+        # yet, and those redone spans are reprefill work (deduped writes
+        # in paged mode), not additional prompt prefill
+        if s.reingest:
+            self.reprefill_tokens += written
+        else:
+            self.prefill_tokens += len(span)
+        if not s.ingesting:                # span completed the history
+            self._ingest_queue.pop(0)
+            s.written_blocks = set()
+            if self.cache_mode == "paged":
+                # (re-)publish the prompt's full blocks under the current
+                # version so later admissions share them
+                for e, h in enumerate(prefix_block_hashes(
+                        self.version, s.prompt, self.block_size)):
+                    self.allocator.register(h, int(self.tables[i, e]))
+            if completes:
+                # admission ingest: the completing span's sample is the
+                # request's first token (draw index 0)
+                s.response = [int(np.asarray(tok0)[0])]
+                s.logprobs = [float(np.asarray(lp0)[0])]
+                s.versions = [self.version]
+                s.behavior_version = self.version
+                s.pending = s.response[0]
+
     def step(self) -> List[Finished]:
-        """One decode step across all slots; returns finished trajectories."""
+        """One unified engine step (DESIGN.md §Chunked prefill): ingest at
+        most one prefill span, then advance every slot whose history is
+        fully in the cache.  Returns finished trajectories.  Monolithic
+        engines (prefill_chunk=0) never have a span queued, so this is
+        exactly one decode step across all active slots."""
         self._assert_single_driver()
-        if self.n_active == 0:
+        if self._ingest_queue:
+            self._ingest_one_chunk()
+            # Forward-progress guarantee: while NO slot can decode there is
+            # nothing to overlap with, so keep ingesting until the head
+            # slot's history completes and it can resume.  Without this, a
+            # weight-publication rate faster than one span per history
+            # (e.g. --refresh-every 1) would reset the backlog every step
+            # and the engine would never decode a token again.
+            while self._ingest_queue and not any(
+                    s.active and not s.ingesting for s in self.slots):
+                self._ingest_one_chunk()
+        act = np.array([s.active and not s.ingesting for s in self.slots])
+        if not act.any():
             return []
+        if self._ingest_queue:
+            self.decode_steps_during_prefill += 1
         pend = np.array([s.pending for s in self.slots], np.int32)
+        rids = np.array([max(s.rid, 0) for s in self.slots], np.int32)
+        draws = np.array([len(s.response) for s in self.slots], np.int32)
+        rng = self._next_rng() if self.rng_mode == "step" else self._rng
         if self.cache_mode == "paged":
             # tables only change at admission/finish/interrupt; keep the
             # decode loop free of per-step host->device table uploads
@@ -362,15 +710,17 @@ class RolloutEngine:
                 self._tables_dev = jnp.asarray(self.tables)
             tok, lp, self.cache = self._jit_decode_paged(
                 self.params, jnp.asarray(pend), self.cache,
-                self._tables_dev, self._next_rng())
+                self._tables_dev, jnp.asarray(act), rng,
+                jnp.asarray(rids), jnp.asarray(draws))
         else:
             tok, lp, self.cache = self._jit_decode(
-                self.params, jnp.asarray(pend), self.cache, self._next_rng())
+                self.params, jnp.asarray(pend), self.cache, jnp.asarray(act),
+                rng, jnp.asarray(rids), jnp.asarray(draws))
         tok = np.asarray(tok)
         lp = np.asarray(lp)
         finished: List[Finished] = []
         for i, s in enumerate(self.slots):
-            if not s.active:
+            if not act[i]:
                 continue
             # the pending token is now ingested; the new sample continues it
             t_new, lp_new = int(tok[i]), float(lp[i])
@@ -412,11 +762,14 @@ class RolloutEngine:
             # version number (the tag no longer identifies the contents)
             self.allocator.clear_prefix_map()
         if self.n_active > 0:
-            if self.cache_mode == "paged":
+            force = params_changed and same_version
+            if self.prefill_chunk:
+                self._requeue_all_histories(force)
+            elif self.cache_mode == "paged":
                 # force: version tags can't detect staleness when the
                 # caller swapped params without bumping the version —
                 # rewrite everything, like the ring engine does
-                self._reprefill_paged(force=params_changed and same_version)
+                self._reprefill_paged(force=force)
             else:
                 self._reprefill_all()
             self.interruptions += 1
@@ -437,6 +790,34 @@ class RolloutEngine:
     @property
     def has_pending_weights(self) -> bool:
         return self._pending_weights is not None
+
+    def _requeue_all_histories(self, force: bool) -> None:
+        """Chunked interruption (DESIGN.md §Chunked prefill): instead of a
+        monolithic re-prefill, every in-flight history re-enters the
+        ingest queue at watermark 0; decoding resumes per slot as its
+        history completes.  A slot interrupted mid-ingest simply restarts
+        its (possibly grown) history.  With ``force`` (new params under a
+        reused version number) every live block of the interrupted slots
+        is tagged stale so the dest rule rewrites it."""
+        if self.cache_mode == "paged" and force:
+            for i, s in enumerate(self.slots):
+                if not s.active:
+                    continue
+                for b in self.tables[i]:
+                    if b >= 0:
+                        self.allocator.set_version(int(b), -1)
+        self._ingest_queue = []
+        reset_ids = []
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                continue
+            # the re-fed history includes the pad token an empty prompt
+            # was admitted with (see _reprefill_all) and keeps the last
+            # sampled token pending
+            hist = ((s.prompt or [0]) + s.response[:-1])[: self.max_len]
+            self._queue_ingest(i, hist, reingest=True)
+            reset_ids.append(i)
+        self._reset_rows(reset_ids)
 
     def _reprefill_all(self) -> None:
         """Discard all device state computed under the old weights and
@@ -469,7 +850,8 @@ class RolloutEngine:
         # keeps the decode RNG stream untouched, so an interruption with
         # unchanged weights is bit-identical to no interruption (Prop. 1 test).
         _, _, sub_cache = self._jit_prefill(
-            self.params, jnp.asarray(toks), jnp.asarray(lens), jax.random.key(0))
+            self.params, jnp.asarray(toks), jnp.asarray(lens),
+            jax.random.key(0), jnp.zeros((g,), jnp.int32))
         self.cache = self._jit_insert(self.cache, sub_cache,
                                       jnp.asarray(slot_ids))
 
@@ -518,4 +900,4 @@ class RolloutEngine:
         _, _, self.cache = self._jit_prefill_paged(
             self.params, jnp.asarray(toks), jnp.asarray(lens),
             jnp.asarray(dest), jnp.asarray(slot_ids), self.cache,
-            jax.random.key(0))
+            jax.random.key(0), jnp.zeros((g,), jnp.int32))

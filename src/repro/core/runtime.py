@@ -117,7 +117,10 @@ class ThreadedRuntime(SchedulerExecutorMixin):
             reqs = self.sched.plan_admission(len(eng.free_slots()))
             if reqs:
                 n = eng.admit(reqs, clock=self._now())
-                self.sched.admitted(reqs, n)
+                # the engine's own pool-pressure count drives requeue
+                # (free_slots() cannot see block headroom)
+                self.sched.admitted(reqs, n,
+                                    deferred=getattr(eng, "deferred_last", 0))
         if eng.n_active == 0:
             return False
         n_act = eng.n_active

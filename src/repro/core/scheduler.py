@@ -81,6 +81,7 @@ class AsyncScheduler:
         self.on_step = on_step
         self._next_rid = 0
         self._deferred: List[Dict] = []    # planned but not yet admitted
+        self._starved = False              # engine bounced work on resources
         self._lock = threading.RLock()
 
     # ---- admission (rollout side) -----------------------------------------
@@ -90,13 +91,20 @@ class AsyncScheduler:
         pulls from the prompt stream — each admitted against Eq. 3 at the
         CURRENT policy version.  Pulled requests must be handed back via
         ``admitted`` (possibly with n < len(reqs)); they are not counted
-        as submitted until then."""
+        as submitted until then.
+
+        While the engine reports itself resource-starved (``admitted``
+        got ``deferred > 0``: pool pressure despite free slots), only the
+        deferred backlog is re-offered — free-slot count alone overstates
+        a paged engine's capacity, and pulling fresh stream work it
+        cannot take would just grow the backlog."""
         with self._lock:
             reqs: List[Dict] = []
             while (self._deferred and n_free > len(reqs)
                    and self.stal.can_submit(len(reqs) + 1)):
                 reqs.append(self._deferred.pop(0))
-            while n_free > len(reqs) and self.stal.can_submit(len(reqs) + 1):
+            while (not self._starved and n_free > len(reqs)
+                   and self.stal.can_submit(len(reqs) + 1)):
                 prob, gid = self.stream.next_request()
                 reqs.append({"rid": self._next_rid, "prompt_id": gid,
                              "prompt": prob.prompt_tokens,
@@ -104,15 +112,20 @@ class AsyncScheduler:
                 self._next_rid += 1
             return reqs
 
-    def admitted(self, reqs: List[Dict], n: int) -> None:
+    def admitted(self, reqs: List[Dict], n: int, deferred: int = 0) -> None:
         """The engine accepted the first ``n`` of ``reqs``: count them as
         submitted (Eq. 3 numerator); re-queue the remainder so a later
-        ``plan_admission`` retries them (paged engines defer admission on
-        pool exhaustion)."""
+        ``plan_admission`` retries them.  ``deferred`` is the engine's
+        own count of requests it bounced on POOL pressure
+        (``RolloutEngine.stats()["deferred_last"]``): while nonzero the
+        scheduler stops pulling fresh stream work and only retries the
+        backlog, instead of re-probing ``free_slots()`` — which cannot
+        see block-pool headroom (DESIGN.md §Chunked prefill)."""
         with self._lock:
             self.stal.submit(n)
             if n < len(reqs):
                 self._deferred[:0] = reqs[n:]
+            self._starved = deferred > 0
 
     # ---- reward collection (rollout side) ---------------------------------
     def collect(self, finished, finish_time: float) -> None:

@@ -21,6 +21,7 @@ from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.linear_scan import linear_scan_pallas
 from repro.kernels.paged_decode_attention import paged_decode_attention_pallas
+from repro.kernels.paged_prefill_attention import paged_prefill_attention_pallas
 
 _BACKEND = "jnp"
 _LANE = 128
@@ -138,6 +139,52 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, t, *,
         qp, kp, vp, block_tables, t, window=window, softmax_scale=scale,
         interpret=(backend == "pallas_interpret"))
     return out[:, :, :hd]
+
+
+# ---------------------------------------------------------------------------
+# prefill continuation (chunked prefill, DESIGN.md §Chunked prefill)
+# ---------------------------------------------------------------------------
+
+def chunked_prefill_attention(q, k, v, key_pos, q_pos, *, window: int = 0,
+                              softmax_scale: Optional[float] = None,
+                              backend: Optional[str] = None):
+    """q: (B, C, H, hd) chunk of queries at absolute positions q_pos
+    (B, C); k, v: (B, S, Hkv, hd) with key_pos (B, S) absolute positions
+    (-1 = invalid).  Ring-cache prefill continuation: like
+    cross-attention in ``flash_attention``, this stays on the jnp oracle
+    on every backend — the production TPU path is the paged engine,
+    whose continuation has the Pallas kernel below."""
+    del backend
+    return _ref.chunked_prefill_attention(q, k, v, key_pos, q_pos,
+                                          window=window,
+                                          softmax_scale=softmax_scale)
+
+
+def paged_prefill_attention(q, k_pool, v_pool, block_tables, q_pos, *,
+                            window: int = 0,
+                            softmax_scale: Optional[float] = None,
+                            backend: Optional[str] = None):
+    """q: (B, C, H, hd) chunk of queries at absolute positions q_pos
+    (B, C) (-1 = padded row); pools: (N, bs, Hkv, hd); block_tables:
+    (B, E) int32 (-1 = unbound).  The chunk's own K/V must already be in
+    the pool (write-then-read).  See DESIGN.md §Chunked prefill."""
+    backend = backend or _BACKEND
+    if backend == "jnp":
+        return _ref.paged_prefill_attention(q, k_pool, v_pool, block_tables,
+                                            q_pos, window=window,
+                                            softmax_scale=softmax_scale)
+    b, c, h, hd = q.shape
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    cp = _round_up(c, 8)
+    hdp = _round_up(hd, _LANE)
+    qp = _pad_axis(_pad_axis(q, 1, cp), 3, hdp)
+    kp = _pad_axis(k_pool, 3, hdp)
+    vp = _pad_axis(v_pool, 3, hdp)
+    qpos = _pad_axis(q_pos, 1, cp, value=-1)    # padded queries mask out
+    out = paged_prefill_attention_pallas(
+        qp, kp, vp, block_tables, qpos, window=window, softmax_scale=scale,
+        interpret=(backend == "pallas_interpret"))
+    return out[:, :c, :, :hd]
 
 
 # ---------------------------------------------------------------------------

@@ -156,6 +156,66 @@ def decode_attention(q, k_cache, v_cache, cache_pos, t, *, window: int = 0,
     return out.reshape(b, h, hd).astype(q.dtype)
 
 
+def chunked_prefill_attention(q, k, v, key_pos, q_pos, *, window: int = 0,
+                              softmax_scale: Optional[float] = None):
+    """Chunk-of-queries attention against positioned keys (the prefill
+    continuation primitive, DESIGN.md §Chunked prefill).
+
+    q: (B, C, H, hd) — C query tokens at absolute positions q_pos (B, C)
+    (-1 = padded query row; its output is unspecified and must be
+    discarded).  k, v: (B, S, Hkv, hd) with key_pos (B, S) absolute
+    positions, -1 = invalid entry.  A key is visible to a query iff
+    key_pos >= 0, key_pos <= q_pos (causality), and — for window > 0 —
+    q_pos - key_pos < window.  Generalizes ``decode_attention``: with
+    C = 1 and q_pos = t it is the same computation.
+    """
+    b, c, h, hd = q.shape
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    hkv = k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, c, hkv, group, hd)
+    scores = jnp.einsum("bcngd,bwnd->bcngw", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    qp = q_pos[:, :, None, None, None].astype(jnp.int32)
+    kp = key_pos[:, None, None, None, :].astype(jnp.int32)
+    valid = (kp >= 0) & (kp <= qp) & (qp >= 0)
+    if window and window > 0:
+        valid &= kp > qp - window
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bcngw,bwnd->bcngd", probs.astype(q.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, c, h, hd).astype(q.dtype)
+
+
+def paged_prefill_attention(q, k_pool, v_pool, block_tables, q_pos, *,
+                            window: int = 0,
+                            softmax_scale: Optional[float] = None):
+    """Chunk-of-queries attention against a paged KV-block pool (the
+    paged prefill continuation, DESIGN.md §Chunked prefill).
+
+    q: (B, C, H, hd) — a chunk of C query tokens at absolute positions
+    q_pos (B, C) (-1 = padded row).  k_pool, v_pool: (N, bs, Hkv, hd);
+    block_tables: (B, E) int32, entry e covering positions
+    [e*bs, (e+1)*bs), -1 = unbound.  The chunk's own K/V must already be
+    written to the pool (write-then-read; blocks never wrap, unlike the
+    ring cache).  Semantics of record: gather each slot's blocks into a
+    flat positioned cache — exactly as ``paged_decode_attention`` does —
+    and defer to ``chunked_prefill_attention``.
+    """
+    b = q.shape[0]
+    n, bs, hkv, hd = k_pool.shape
+    e = block_tables.shape[1]
+    safe = jnp.clip(block_tables, 0, n - 1)                 # (B, E)
+    kg = k_pool[safe].reshape(b, e * bs, hkv, hd)
+    vg = v_pool[safe].reshape(b, e * bs, hkv, hd)
+    pos = jnp.broadcast_to(jnp.arange(e * bs, dtype=jnp.int32)[None], (b, e * bs))
+    bound = jnp.repeat(block_tables >= 0, bs, axis=1)       # (B, E*bs)
+    key_pos = jnp.where(bound, pos, -1)
+    return chunked_prefill_attention(q, kg, vg, key_pos, q_pos,
+                                     window=window, softmax_scale=softmax_scale)
+
+
 def paged_decode_attention(q, k_pool, v_pool, block_tables, t, *,
                            window: int = 0,
                            softmax_scale: Optional[float] = None):

@@ -90,7 +90,7 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
                  vocab_parallel: bool = False,
                  remat_policy: str = "none", accum_steps: int = 8,
                  paged_cache: bool = False, block_size: int = 16,
-                 extra: str = ""):
+                 prefill_chunk: int = 0, extra: str = ""):
     cfg = get_model_config(arch)
     shape = get_shape(shape_name)
     rec = {"arch": arch, "shape": shape_name,
@@ -98,6 +98,7 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
            "kind": shape.kind, "fsdp": fsdp, "vocab_parallel": vocab_parallel,
            "remat_policy": remat_policy, "accum_steps": accum_steps,
            "paged_cache": paged_cache,
+           "prefill_chunk": prefill_chunk,
            "extra": extra}
 
     if paged_cache and (shape.kind != "decode" or cfg.is_encdec):
@@ -213,6 +214,43 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
         rec["compile_s"] = round(time.time() - t0, 2)
 
+        if prefill_chunk and shape.kind == "decode" and paged_cache:
+            # chunked-prefill ingest step (DESIGN.md §Chunked prefill):
+            # one (1, prefill_chunk) span scattered into the pool and
+            # attended through a slot's block table — the unit the
+            # chunked engine interleaves between decode steps; proving
+            # it compiles on the production mesh is what gates
+            # --prefill-chunk rollouts at scale
+            t0 = time.time()
+            chunk_step = steps_mod.make_paged_prefill_chunk_step(model)
+            entries = tables_shape.shape[1]
+            i32 = jnp.int32
+            chunk_shapes = (
+                jax.ShapeDtypeStruct((1, prefill_chunk), i32),   # tokens
+                cache_shape,
+                jax.ShapeDtypeStruct((1, entries), i32),         # tables
+                jax.ShapeDtypeStruct((1, prefill_chunk), i32),   # dest
+                jax.ShapeDtypeStruct((1,), i32),                 # slot_ids
+                jax.ShapeDtypeStruct((1,), i32),                 # start
+                jax.ShapeDtypeStruct((1,), i32),                 # length
+            )
+            rep = jax.NamedSharding(mesh, jax.sharding.PartitionSpec())
+            chunk_logit = jax.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(None, "model"))
+            chunk_jit = jax.jit(
+                chunk_step,
+                in_shardings=(sharding.named(mesh, pspecs), rep,
+                              sharding.named(mesh, cspecs),
+                              rep, rep, rep, rep, rep),
+                out_shardings=(chunk_logit, sharding.named(mesh, cspecs)),
+                donate_argnums=(2,))
+            chunk_compiled = chunk_jit.lower(
+                params_shape, chunk_shapes[0], cache_shape,
+                *chunk_shapes[2:]).compile()
+            rec["chunk_compile_s"] = round(time.time() - t0, 2)
+            cma = chunk_compiled.memory_analysis()
+            rec["chunk_memory_temp_bytes"] = int(cma.temp_size_in_bytes)
+
         ma = compiled.memory_analysis()
         rec["memory"] = {
             "argument_bytes": int(ma.argument_size_in_bytes),
@@ -257,6 +295,10 @@ def main(argv=None):
                          "the ring-buffer serve_step")
     ap.add_argument("--block-size", type=int, default=16,
                     help="KV block width (tokens) for --paged-cache")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="decode shapes with --paged-cache: also lower + "
+                         "compile the chunked-prefill ingest step with "
+                         "spans of N tokens (DESIGN.md §Chunked prefill)")
     ap.add_argument("--extra", default="", help="free-form variant tag")
     ap.add_argument("--out", default=None, help="output dir for JSON records")
     args = ap.parse_args(argv)
@@ -279,6 +321,7 @@ def main(argv=None):
                                accum_steps=args.accum,
                                paged_cache=args.paged_cache,
                                block_size=args.block_size,
+                               prefill_chunk=args.prefill_chunk,
                                extra=args.extra)
         except Exception as e:  # a dry-run failure is a bug in the system
             rec = {"arch": arch, "shape": shp,

@@ -44,6 +44,11 @@ def main():
     ap.add_argument("--pool-blocks", type=int, default=0,
                     help="paged pool size in blocks; 0 = worst-case "
                          "(slots * ceil(max_len / block_size))")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: ingest at most N prompt tokens "
+                         "per engine step so admission and weight-refresh "
+                         "re-prefills never stall decoding (0 = monolithic; "
+                         "DESIGN.md §Chunked prefill)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -58,7 +63,8 @@ def main():
                            prompt_len=args.prompt_len,
                            max_gen_len=args.max_gen, seed=args.seed,
                            cache=args.cache, block_size=args.block_size,
-                           n_blocks=args.pool_blocks or None)
+                           n_blocks=args.pool_blocks or None,
+                           prefill_chunk=args.prefill_chunk)
 
     gen = MathTaskGenerator(seed=args.seed)
     pending = []
@@ -90,6 +96,10 @@ def main():
     if args.cache == "paged":
         out["prefix_reused_blocks"] = engine.prefix_reused_blocks
         out["reprefill_tokens"] = engine.reprefill_tokens
+        out["deferred"] = engine.deferred
+    if args.prefill_chunk:
+        out["decode_steps_during_prefill"] = \
+            engine.decode_steps_during_prefill
     print(json.dumps(out))
 
 

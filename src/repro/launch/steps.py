@@ -160,3 +160,17 @@ def make_paged_serve_step(model):
     def paged_serve_step(params, token, cache, tables):
         return model.decode_step_paged(params, token, cache, tables)
     return paged_serve_step
+
+
+def make_paged_prefill_chunk_step(model):
+    """Chunked-prefill ingest step (DESIGN.md §Chunked prefill):
+    chunk_step(params, tokens, cache, tables, dest, slot_ids, start,
+    length) -> (last-token logits, cache) — one span of at most
+    ``prefill_chunk`` prompt tokens scattered into the block pool and
+    attended against the slot's table, the unit of work the chunked
+    rollout engine interleaves between decode steps."""
+    def paged_prefill_chunk_step(params, tokens, cache, tables, dest,
+                                 slot_ids, start, length):
+        return model.prefill_chunk_paged(params, tokens, cache, tables, dest,
+                                         slot_ids, start, length)
+    return paged_prefill_chunk_step

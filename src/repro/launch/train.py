@@ -72,7 +72,8 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
                  ckpt_dir: str = "", log_every: int = 1, max_operand: int = 9,
                  colocated_sync: bool = False, on_step=None,
                  runtime: str = "virtual", train_fraction: float = 0.25,
-                 run_timeout: float = 0.0, final_eval: bool = True):
+                 run_timeout: float = 0.0, final_eval: bool = True,
+                 prefill_chunk: int = 0):
     """End-to-end AReaL training on the synthetic math task.
 
     Returns (executor, trainer, reward_service); the executor is the
@@ -97,7 +98,7 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
     params = model.init(jax.random.key(seed))
     engine = RolloutEngine(model, params, n_slots=n_slots,
                            prompt_len=prompt_len, max_gen_len=max_gen_len,
-                           seed=seed)
+                           seed=seed, prefill_chunk=prefill_chunk)
     trainer = PPOTrainer(model, rl, params)
     store = ParameterStore(ckpt_dir=ckpt_dir or None,
                            ckpt_every=10 if ckpt_dir else 0)
@@ -172,6 +173,12 @@ def main():
     ap.add_argument("--run-timeout", type=float, default=0.0,
                     help="hard wall-clock bound (s) on a threaded run; "
                          "0 = unbounded")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: ingest at most N prompt tokens "
+                         "per engine step (0 = monolithic; switches the "
+                         "engine to per-request RNG streams — trajectories "
+                         "differ from the default scheme at equal seed; "
+                         "DESIGN.md §Chunked prefill)")
     ap.add_argument("--eta", type=int, default=4,
                     help="max staleness (-1 = unbounded, 0 = synchronous)")
     ap.add_argument("--naive-ppo", action="store_true",
@@ -195,7 +202,7 @@ def main():
         adv_estimator=args.adv, seed=args.seed, ckpt_dir=args.ckpt_dir,
         colocated_sync=args.sync_colocated, runtime=args.runtime,
         train_fraction=args.train_fraction, run_timeout=args.run_timeout,
-        final_eval=not args.no_final_eval)
+        final_eval=not args.no_final_eval, prefill_chunk=args.prefill_chunk)
     out = {
         "arch": args.arch, "runtime": args.runtime, "steps": trainer.version,
         "wall_s": round(time.time() - t0, 1),

@@ -120,8 +120,68 @@ def prefill_into_cache(cfg: ModelConfig, params, x, positions, cache, *,
     return o, new_cache
 
 
-def attn_decode_step(cfg: ModelConfig, params, x_t, t, cache, *, window: int = 0):
-    """One-token decode.  x_t: (B, d); t: (B,) absolute position."""
+def prefill_chunk_into_cache(cfg: ModelConfig, params, x, positions, cache,
+                             start, *, valid=None, window: int = 0):
+    """Chunked prefill continuation against a ring cache
+    (DESIGN.md §Chunked prefill).
+
+    x: (B, C, d) chunk tokens at absolute ``positions`` (B, C); start:
+    (B,) each row's ingest watermark (the chunk's first absolute
+    position).  Attention keys are the cache entries STRICTLY BEFORE the
+    watermark (anything at >= start is stale: a re-prefill's old-weights
+    rows, or a previous occupant's leftovers) plus the chunk's own K/V —
+    concatenated rather than written-then-read, because a ring write of
+    the chunk could evict keys its own earliest queries still need when
+    the window wraps.  The chunk K/V then lands in the ring exactly as
+    ``prefill_into_cache`` writes it (last ``width`` valid tokens win).
+    """
+    b, c, _ = x.shape
+    w = cache["k"].shape[1]
+    if valid is None:
+        valid = jnp.ones((b, c), bool)
+    q, k, v = _project_qkv(cfg, params, x, positions)
+
+    hist_pos = jnp.where(cache["pos"] < start[:, None], cache["pos"], -1)
+    q_pos = jnp.where(valid, positions, -1)
+    keys = jnp.concatenate([cache["k"], k.astype(cache["k"].dtype)], axis=1)
+    vals = jnp.concatenate([cache["v"], v.astype(cache["v"].dtype)], axis=1)
+    key_pos = jnp.concatenate([hist_pos, q_pos], axis=1)
+    out = ops.chunked_prefill_attention(q, keys, vals, key_pos, q_pos,
+                                        window=window)
+
+    if c > w:
+        # keep the last w valid tokens per row (window >= w by design)
+        length = jnp.sum(valid.astype(jnp.int32), axis=1)          # (B,)
+        idx = length[:, None] - w + jnp.arange(w)[None, :]         # (B, w)
+        ok = idx >= 0
+        idx_c = jnp.clip(idx, 0, c - 1)
+        gat = lambda a: jnp.take_along_axis(a, idx_c[:, :, None, None], axis=1)
+        k, v = gat(k), gat(v)
+        positions = jnp.take_along_axis(positions, idx_c, axis=1)
+        valid = ok & jnp.take_along_axis(valid, idx_c, axis=1)
+
+    # invalid chunk tokens write NOTHING: their ring slot may hold a live
+    # earlier entry (positions are absolute, padding isn't), so they are
+    # dropped via an out-of-bounds index instead of marked with pos = -1
+    slots = jnp.where(valid, positions % w, w)
+    bidx = jnp.arange(b)[:, None]
+    new_cache = {
+        "k": cache["k"].at[bidx, slots].set(k.astype(cache["k"].dtype),
+                                            mode="drop"),
+        "v": cache["v"].at[bidx, slots].set(v.astype(cache["v"].dtype),
+                                            mode="drop"),
+        "pos": cache["pos"].at[bidx, slots].set(positions, mode="drop"),
+    }
+    o = layers.matmul(out.reshape(b, c, cfg.q_dim), params["wo"])
+    return o, new_cache
+
+
+def attn_decode_step(cfg: ModelConfig, params, x_t, t, cache, *, window: int = 0,
+                     active=None):
+    """One-token decode.  x_t: (B, d); t: (B,) absolute position.
+    active: optional (B,) bool — rows that are NOT decoding this step
+    (e.g. mid-ingest slots of the chunked engine, DESIGN.md §Chunked
+    prefill) drop their cache write instead of clobbering position t."""
     b, d = x_t.shape
     q = layers.matmul(x_t, params["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
     k = layers.matmul(x_t, params["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
@@ -134,11 +194,13 @@ def attn_decode_step(cfg: ModelConfig, params, x_t, t, cache, *, window: int = 0
 
     w = cache["k"].shape[1]
     slot = (t % w)                                            # (B,)
+    if active is not None:
+        slot = jnp.where(active, slot, w)                     # OOB -> dropped
     bidx = jnp.arange(b)
     cache = {
-        "k": cache["k"].at[bidx, slot].set(k[:, 0]),
-        "v": cache["v"].at[bidx, slot].set(v[:, 0]),
-        "pos": cache["pos"].at[bidx, slot].set(t),
+        "k": cache["k"].at[bidx, slot].set(k[:, 0], mode="drop"),
+        "v": cache["v"].at[bidx, slot].set(v[:, 0], mode="drop"),
+        "pos": cache["pos"].at[bidx, slot].set(t, mode="drop"),
     }
     out = ops.decode_attention(q[:, 0], cache["k"], cache["v"], cache["pos"],
                                t, window=window)
@@ -208,10 +270,51 @@ def prefill_into_paged_cache(cfg: ModelConfig, params, x, positions, pool,
     return o, new_pool
 
 
+def prefill_chunk_into_paged_cache(cfg: ModelConfig, params, x, positions,
+                                   pool, dest_blocks, block_tables, *,
+                                   valid=None, window: int = 0):
+    """Chunked prefill continuation against the paged pool
+    (DESIGN.md §Chunked prefill).
+
+    x: (B, C, d) chunk tokens at absolute ``positions`` (B, C);
+    dest_blocks: (B, C) physical destination block per token (-1 = do
+    not write: padding, or a block whose contents are already current —
+    a prefix-shared block, or one another sharer re-ingested first);
+    block_tables: (B, E) the chunk rows' slot tables.  The chunk K/V is
+    scattered into the pool FIRST, then the queries attend through the
+    block tables (write-then-read is exact here — pool blocks never
+    wrap), so prior chunks, shared prefix blocks, and the chunk itself
+    all come back through one positional mask.
+    """
+    b, c, _ = x.shape
+    bs = pool["k_pool"].shape[1]
+    if valid is None:
+        valid = jnp.ones((b, c), bool)
+    q, k, v = _project_qkv(cfg, params, x, positions)
+
+    dest = jnp.where(valid, dest_blocks, -1).reshape(-1)
+    offsets = (positions % bs).reshape(-1)
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    new_pool = {
+        "k_pool": _pool_scatter(pool["k_pool"], dest, offsets,
+                                k.reshape(-1, hkv, hd)),
+        "v_pool": _pool_scatter(pool["v_pool"], dest, offsets,
+                                v.reshape(-1, hkv, hd)),
+    }
+    q_pos = jnp.where(valid, positions, -1)
+    out = ops.paged_prefill_attention(q, new_pool["k_pool"],
+                                      new_pool["v_pool"], block_tables,
+                                      q_pos, window=window)
+    o = layers.matmul(out.reshape(b, c, cfg.q_dim), params["wo"])
+    return o, new_pool
+
+
 def attn_decode_step_paged(cfg: ModelConfig, params, x_t, t, pool,
-                           block_tables, *, window: int = 0):
+                           block_tables, *, window: int = 0, active=None):
     """One-token decode against the paged pool.  x_t: (B, d); t: (B,)
-    absolute position; block_tables: (B, E) int32 (-1 = unbound)."""
+    absolute position; block_tables: (B, E) int32 (-1 = unbound).
+    active: optional (B,) bool — non-decoding rows (mid-ingest slots of
+    the chunked engine) drop their pool write."""
     b, d = x_t.shape
     bs = pool["k_pool"].shape[1]
     q = layers.matmul(x_t, params["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
@@ -227,6 +330,8 @@ def attn_decode_step_paged(cfg: ModelConfig, params, x_t, t, pool,
     # entry is unbound (inactive slot / dummy row) drop the write
     entry = jnp.clip(t // bs, 0, block_tables.shape[1] - 1)
     dest = jnp.take_along_axis(block_tables, entry[:, None], axis=1)[:, 0]
+    if active is not None:
+        dest = jnp.where(active, dest, -1)
     pool = {
         "k_pool": _pool_scatter(pool["k_pool"], dest, t % bs, k[:, 0]),
         "v_pool": _pool_scatter(pool["v_pool"], dest, t % bs, v[:, 0]),

@@ -200,7 +200,7 @@ class EncDecLM:
             "t": full["t"].at[slots].set(sub["t"], mode="drop"),
         }
 
-    def decode_step(self, params, token, cache):
+    def decode_step(self, params, token, cache, active=None):
         cfg = self.cfg
         t = cache["t"]
         h = layers.embed_apply(params["embed"], token)
@@ -210,7 +210,8 @@ class EncDecLM:
         def layer_fn(h, xs):
             p, sc, ckv = xs
             hin = layers.norm_apply(cfg, p["self_norm"], h)
-            a, sc = attention.attn_decode_step(cfg, p["self"], hin, t, sc)
+            a, sc = attention.attn_decode_step(cfg, p["self"], hin, t, sc,
+                                               active=active)
             h = h + a
             hq = layers.norm_apply(cfg, p["cross_norm"], h)
             b = h.shape[0]
@@ -229,5 +230,6 @@ class EncDecLM:
             layer_fn, h, (params["decoder"], cache["self"], cache["cross"]))
         h = layers.norm_apply(cfg, params["final_norm"], h)
         logits = self.logits(params, h)
-        new_cache = {"self": self_cache, "cross": cache["cross"], "t": t + 1}
+        t_new = t + 1 if active is None else jnp.where(active, t + 1, t)
+        new_cache = {"self": self_cache, "cross": cache["cross"], "t": t_new}
         return logits, new_cache

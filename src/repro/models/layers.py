@@ -140,13 +140,20 @@ def causal_conv1d_init(key, width: int, channels: int, dtype=jnp.float32):
                   / math.sqrt(width)).astype(dtype)}
 
 
-def causal_conv1d_apply(params, x, segment_ids=None):
+def causal_conv1d_apply(params, x, segment_ids=None, history=None):
     """Depthwise causal conv.  x: (B, S, C).  With segment_ids, taps that
-    reach across a packed-segment boundary are zeroed (no leakage)."""
+    reach across a packed-segment boundary are zeroed (no leakage).
+    ``history`` (B, W-1, C) replaces the zero left-pad with the last real
+    inputs of an earlier span — the chunked-prefill continuation
+    (DESIGN.md §Chunked prefill); mutually exclusive with segment_ids."""
     w = params["w"]                       # (W, C)
     width = w.shape[0]
     s = x.shape[1]
-    xp = jnp.pad(x, [(0, 0), (width - 1, 0), (0, 0)])
+    if history is not None:
+        assert segment_ids is None, "conv history and packing are exclusive"
+        xp = jnp.concatenate([history.astype(x.dtype), x], axis=1)
+    else:
+        xp = jnp.pad(x, [(0, 0), (width - 1, 0), (0, 0)])
     if segment_ids is not None:
         sp = jnp.pad(segment_ids, [(0, 0), (width - 1, 0)],
                      constant_values=-2)
@@ -158,6 +165,21 @@ def causal_conv1d_apply(params, x, segment_ids=None):
             tap = jnp.where(ok, tap, 0.0)
         out = out + tap * w[i].astype(jnp.float32)
     return out.astype(x.dtype)
+
+
+def conv_history_update(history, x, length):
+    """Roll a (B, W-1, C) conv history forward over a right-padded span.
+
+    x: (B, S, C) span inputs with ``length`` (B,) real rows each; returns
+    the last W-1 *real* inputs of history ++ x — the state a stepwise
+    decode would have left (DESIGN.md §Chunked prefill)."""
+    w = history.shape[1]
+    cat = jnp.concatenate([history.astype(x.dtype), x], axis=1)
+    # real content occupies cat[:, :w + length); its last w rows start at
+    # ``length`` (always >= 0, so no clipping of the window start)
+    idx = length[:, None] + jnp.arange(w)[None, :]                 # (B, w)
+    return jnp.take_along_axis(
+        cat, jnp.clip(idx, 0, cat.shape[1] - 1)[..., None], axis=1)
 
 
 def causal_conv1d_step(params, conv_state, x_t):

@@ -51,15 +51,19 @@ def _lru_coeffs(p, xc):
     return a, x_in
 
 
-def rglru_forward(cfg: ModelConfig, p, x, h0=None, segment_ids=None, valid=None):
+def rglru_forward(cfg: ModelConfig, p, x, h0=None, segment_ids=None, valid=None,
+                  conv_hist=None):
     """x: (B, S, d) pre-normed.  Returns (out, h_last).
 
     valid: (B, S) bool — padded steps become identity transitions
     (a=1, input=0) so the final state is the state at the last real token.
+    conv_hist: (B, W-1, width) conv left-context from an earlier span
+    (chunked prefill continuation; DESIGN.md §Chunked prefill).
     """
     gate = jax.nn.gelu(layers.matmul(x, p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
     xr = layers.matmul(x, p["w_rec"])
-    xc = layers.causal_conv1d_apply(p["conv"], xr, segment_ids)
+    xc = layers.causal_conv1d_apply(p["conv"], xr, segment_ids,
+                                    history=conv_hist)
     a, x_in = _lru_coeffs(p, xc)
     if valid is not None:
         a = jnp.where(valid[..., None], a, 1.0)
@@ -95,11 +99,21 @@ def rglru_decode_step(cfg: ModelConfig, p, x_t, state):
 
 def rglru_prefill_state(cfg: ModelConfig, p, x, state=None, valid=None):
     """Forward over a prefix, returning output and final state (for the
-    AReaL interruption path: re-scan prefix under new weights)."""
+    AReaL interruption path: re-scan prefix under new weights).
+
+    With ``state`` the span CONTINUES a previous one: the recurrence
+    starts from state["h"] and the conv taps see state["conv"] as left
+    context — the chunked-prefill path (DESIGN.md §Chunked prefill)."""
     h0 = None if state is None else state["h"]
-    out, h_last = rglru_forward(cfg, p, x, h0=h0, valid=valid)
+    conv_hist = None if state is None else state["conv"]
+    out, h_last = rglru_forward(cfg, p, x, h0=h0, valid=valid,
+                                conv_hist=conv_hist)
     xr = layers.matmul(x, p["w_rec"])
-    if valid is not None:
+    if state is not None:
+        length = (jnp.sum(valid.astype(jnp.int32), axis=1) if valid is not None
+                  else jnp.full((x.shape[0],), x.shape[1], jnp.int32))
+        hist = layers.conv_history_update(state["conv"], xr, length)
+    elif valid is not None:
         # conv history must hold the last (width-1) *real* inputs per row
         w = cfg.conv1d_width - 1
         length = jnp.sum(valid.astype(jnp.int32), axis=1)          # (B,)

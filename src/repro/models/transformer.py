@@ -191,51 +191,136 @@ def block_prefill_paged(cfg: ModelConfig, bt: str, p, h, positions, cache,
     return h, full
 
 
-def block_decode_paged(cfg: ModelConfig, bt: str, p, h_t, t, cache, tables):
+def block_prefill_chunk(cfg: ModelConfig, bt: str, p, h, positions, cache,
+                        start, valid=None):
+    """Chunked-prefill continuation, ring dispatch (DESIGN.md §Chunked
+    prefill): attention attends the chunk against the slot's existing
+    cache rows (entries strictly before ``start``) plus itself and writes
+    its K/V in; recurrent blocks continue their state from the slot's
+    current rows.  Returns (h, advanced per-row cache)."""
+    if bt in ATTN_KINDS:
+        hin = layers.norm_apply(cfg, p["attn_norm"], h)
+        a, cache = attention.prefill_chunk_into_cache(
+            cfg, p["attn"], hin, positions, cache, start, valid=valid,
+            window=_block_window(cfg, bt))
+        h = h + a
+        hin = layers.norm_apply(cfg, p["mlp_norm"], h)
+        y = moe.moe_apply(cfg, p["moe"], hin)[0] if cfg.is_moe \
+            else layers.mlp_apply(cfg, p["mlp"], hin)
+        return h + y, cache
+    return _block_chunk_state(cfg, bt, p, h, cache, valid)
+
+
+def block_prefill_chunk_paged(cfg: ModelConfig, bt: str, p, h, positions,
+                              cache, dest_blocks, tables, valid=None):
+    """Chunked-prefill continuation, paged dispatch: attention scatters
+    the chunk K/V into the global pool at ``dest_blocks`` then attends
+    through the rows' block ``tables``; recurrent state is per-row
+    exactly as in the ring dispatch."""
+    if bt in ATTN_KINDS:
+        hin = layers.norm_apply(cfg, p["attn_norm"], h)
+        a, cache = attention.prefill_chunk_into_paged_cache(
+            cfg, p["attn"], hin, positions, cache, dest_blocks, tables,
+            valid=valid, window=_block_window(cfg, bt))
+        h = h + a
+        hin = layers.norm_apply(cfg, p["mlp_norm"], h)
+        y = moe.moe_apply(cfg, p["moe"], hin)[0] if cfg.is_moe \
+            else layers.mlp_apply(cfg, p["mlp"], hin)
+        return h + y, cache
+    return _block_chunk_state(cfg, bt, p, h, cache, valid)
+
+
+def _block_chunk_state(cfg: ModelConfig, bt: str, p, h, cache, valid):
+    """Recurrent-state chunk continuation shared by both cache layouts:
+    the span continues from the row's current state (h0 / (C, n, m) /
+    conv history) instead of rescanning from scratch — exact, per
+    DESIGN.md §Chunked prefill."""
+    if bt == "rec":
+        hin = layers.norm_apply(cfg, p["rec_norm"], h)
+        r, cache = rglru.rglru_prefill_state(cfg, p["rec"], hin, state=cache,
+                                             valid=valid)
+        h = h + r
+        y = layers.mlp_apply(cfg, p["mlp"], layers.norm_apply(cfg, p["mlp_norm"], h))
+        return h + y, cache
+    if bt == "mlstm":
+        hin = layers.norm_apply(cfg, p["cell"]["norm"], h)
+        y, cache = xlstm.mlstm_forward_chunked(cfg, p["cell"], hin,
+                                               valid=valid, state=cache,
+                                               return_state=True)
+        return h + y, cache
+    if bt == "slstm":
+        c = p["cell"]
+        y, cache = xlstm.slstm_forward(cfg, c, layers.norm_apply(cfg, c["norm"], h),
+                                       state=cache, valid=valid)
+        h = h + y
+        f = xlstm.slstm_ffn(cfg, c, layers.norm_apply(cfg, c["ffn_norm"], h))
+        return h + f, cache
+    raise ValueError(bt)
+
+
+def block_decode_paged(cfg: ModelConfig, bt: str, p, h_t, t, cache, tables,
+                       active=None):
     """One-token paged dispatch: attention reads/writes the block pool
     through the slot block tables; recurrent blocks are unchanged."""
     if bt in ATTN_KINDS:
         hin = layers.norm_apply(cfg, p["attn_norm"], h_t)
         a, cache = attention.attn_decode_step_paged(
             cfg, p["attn"], hin, t, cache, tables,
-            window=_block_window(cfg, bt))
+            window=_block_window(cfg, bt), active=active)
         h_t = h_t + a
         hin = layers.norm_apply(cfg, p["mlp_norm"], h_t)
         y = moe.moe_apply(cfg, p["moe"], hin)[0] if cfg.is_moe \
             else layers.mlp_apply(cfg, p["mlp"], hin)
         return h_t + y, cache
-    return block_decode(cfg, bt, p, h_t, t, cache)
+    return block_decode(cfg, bt, p, h_t, t, cache, active=active)
 
 
-def block_decode(cfg: ModelConfig, bt: str, p, h_t, t, cache):
-    """One token.  h_t: (B, d); t: (B,) absolute positions."""
+def _mask_rows(new, old, active):
+    """Keep ``old`` state on rows where ``active`` is False (leaves are
+    batch-major (B, ...))."""
+    keep = lambda nw, od: jnp.where(
+        active.reshape((-1,) + (1,) * (nw.ndim - 1)), nw, od)
+    return jax.tree.map(keep, new, old)
+
+
+def block_decode(cfg: ModelConfig, bt: str, p, h_t, t, cache, active=None):
+    """One token.  h_t: (B, d); t: (B,) absolute positions.  active:
+    optional (B,) bool — rows that are NOT decoding this step (mid-ingest
+    slots of the chunked engine, DESIGN.md §Chunked prefill) keep their
+    cache/recurrent state untouched instead of absorbing a garbage token."""
     if bt in ATTN_KINDS:
         hin = layers.norm_apply(cfg, p["attn_norm"], h_t)
         a, cache = attention.attn_decode_step(cfg, p["attn"], hin, t, cache,
-                                              window=_block_window(cfg, bt))
+                                              window=_block_window(cfg, bt),
+                                              active=active)
         h_t = h_t + a
         hin = layers.norm_apply(cfg, p["mlp_norm"], h_t)
         y = moe.moe_apply(cfg, p["moe"], hin)[0] if cfg.is_moe \
             else layers.mlp_apply(cfg, p["mlp"], hin)
         return h_t + y, cache
+    old = cache
     if bt == "rec":
         hin = layers.norm_apply(cfg, p["rec_norm"], h_t)
         r, cache = rglru.rglru_decode_step(cfg, p["rec"], hin, cache)
         h_t = h_t + r
         y = layers.mlp_apply(cfg, p["mlp"], layers.norm_apply(cfg, p["mlp_norm"], h_t))
-        return h_t + y, cache
-    if bt == "mlstm":
+        out = h_t + y
+    elif bt == "mlstm":
         hin = layers.norm_apply(cfg, p["cell"]["norm"], h_t)
         y, cache = xlstm.mlstm_decode_step(cfg, p["cell"], hin, cache)
-        return h_t + y, cache
-    if bt == "slstm":
+        out = h_t + y
+    elif bt == "slstm":
         c = p["cell"]
         hin = layers.norm_apply(cfg, c["norm"], h_t)
         cache = xlstm._slstm_cell(cfg, c, hin, cache)
         h_t = h_t + xlstm.slstm_cell_out(cfg, c, cache, h_t.dtype)
         f = xlstm.slstm_ffn(cfg, c, layers.norm_apply(cfg, c["ffn_norm"], h_t))
-        return h_t + f, cache
-    raise ValueError(bt)
+        out = h_t + f
+    else:
+        raise ValueError(bt)
+    if active is not None:
+        cache = _mask_rows(cache, old, active)
+    return out, cache
 
 
 # ---------------------------------------------------------------------------
@@ -395,18 +480,177 @@ class LM:
         new_cache = {"units": new_caches, "rem": tuple(rem_caches), "t": length}
         return logits, new_cache
 
-    def cache_insert(self, full, sub, slots):
+    def _attn_is_global(self, pooled: bool):
+        """Per-pattern-position flags: with a paged cache, attention
+        leaves are global pools (not slot-major) and must bypass the
+        per-slot gather/scatter."""
+        if not pooled:
+            return [False] * len(self.pattern)
+        return [bt in ATTN_KINDS for bt in self.pattern]
+
+    def cache_insert(self, full, sub, slots, pooled_attn: bool = False):
         """Scatter a sub-batch cache (from a group prefill) into the slot
         cache at ``slots`` (int32 (G,)); out-of-range slot ids are dropped
         (used to mask dummy admission rows).  ``units`` leaves are
-        (n_units, B, ...) — batch axis 1; ``rem``/``t`` are batch-major."""
+        (n_units, B, ...) — batch axis 1; ``rem``/``t`` are batch-major.
+        ``pooled_attn``: the attention leaves of ``sub`` are updated
+        GLOBAL pools (paged chunk continuation) — they replace ``full``'s
+        wholesale instead of row-scattering."""
+        is_glob = self._attn_is_global(pooled_attn)
         ins_u = lambda x, y: x.at[:, slots].set(y.astype(x.dtype), mode="drop")
         ins_b = lambda x, y: x.at[slots].set(y.astype(x.dtype), mode="drop")
         return {
-            "units": jax.tree.map(ins_u, full["units"], sub["units"]),
-            "rem": jax.tree.map(ins_b, full["rem"], sub["rem"]),
+            "units": tuple(
+                su if is_glob[j] else jax.tree.map(ins_u, fu, su)
+                for j, (fu, su) in enumerate(zip(full["units"], sub["units"]))),
+            "rem": tuple(
+                sr if is_glob[j] else jax.tree.map(ins_b, fr, sr)
+                for j, (fr, sr) in enumerate(zip(full["rem"], sub["rem"]))),
             "t": full["t"].at[slots].set(sub["t"], mode="drop"),
         }
+
+    def cache_gather(self, cache, slots, pooled_attn: bool = False):
+        """Inverse of ``cache_insert``: pull the per-slot rows at
+        ``slots`` into a sub-batch cache (out-of-range ids gather a
+        clamped row — callers scatter the result back with mode="drop",
+        so dummy rows are never observed).  ``pooled_attn``: pass the
+        global pool leaves through untouched."""
+        is_glob = self._attn_is_global(pooled_attn)
+        gat_u = lambda x: x[:, jnp.clip(slots, 0, x.shape[1] - 1)]
+        gat_b = lambda x: x[jnp.clip(slots, 0, x.shape[0] - 1)]
+        return {
+            "units": tuple(
+                cu if is_glob[j] else jax.tree.map(gat_u, cu)
+                for j, cu in enumerate(cache["units"])),
+            "rem": tuple(
+                cr if is_glob[j] else jax.tree.map(gat_b, cr)
+                for j, cr in enumerate(cache["rem"])),
+            "t": gat_b(cache["t"]),
+        }
+
+    def reset_slot_rows(self, cache, slots):
+        """Reset the slot-major rows of ``cache`` at ``slots`` to their
+        initial values (out-of-range ids dropped).  The chunked engine
+        calls this when a slot (re)starts ingestion at watermark 0, so
+        chunk continuations always resume from a pristine state
+        (DESIGN.md §Chunked prefill).  Ring KV rows reset too (pos = -1,
+        invalidating the whole row); paged pool leaves (k_pool/v_pool)
+        are global — not slot-major — and are left alone: stale pool
+        contents are handled positionally and by block version tags."""
+        from jax.tree_util import tree_map_with_path
+
+        def init_of(path, x):
+            name = getattr(path[-1], "key", None)
+            if name in ("k_pool", "v_pool"):
+                return None                      # global pool: untouched
+            if name == "pos":
+                return -1
+            if name == "m":                      # mlstm/slstm log-max tracker
+                return xlstm.NEG_INF
+            return 0
+
+        def reset_u(path, x):
+            v = init_of(path, x)
+            if v is None:
+                return x
+            return x.at[:, slots].set(jnp.asarray(v, x.dtype), mode="drop")
+
+        def reset_b(path, x):
+            v = init_of(path, x)
+            if v is None:
+                return x
+            return x.at[slots].set(jnp.asarray(v, x.dtype), mode="drop")
+
+        return {
+            "units": tree_map_with_path(reset_u, cache["units"]),
+            "rem": tree_map_with_path(reset_b, cache["rem"]),
+            "t": cache["t"].at[slots].set(0, mode="drop"),
+        }
+
+    def prefill_chunk(self, params, tokens, cache, slot_ids, start, length):
+        """Chunked-prefill continuation against the ring cache
+        (DESIGN.md §Chunked prefill).
+
+        tokens: (G, C) — row j carries a span of slot ``slot_ids[j]``'s
+        history starting at absolute position ``start[j]`` with
+        ``length[j]`` real tokens (the rest right-padding).  The rows'
+        cache state is gathered, advanced through every block (attention
+        attends prior-cache + chunk; recurrent state continues), and
+        scattered back.  Returns (last-real-token logits (G, Vp) — the
+        sample source when a span completes a prompt — and the updated
+        cache).  Out-of-range slot ids are dummy rows (computed, dropped).
+        """
+        cfg = self.cfg
+        g, c = tokens.shape
+        positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+        valid = jnp.arange(c, dtype=jnp.int32)[None, :] < length[:, None]
+        sub = self.cache_gather(cache, slot_ids)
+        h, positions = self._embed(params, tokens, positions, None)
+
+        def unit_fn(h, xs):
+            unit_params, unit_cache = xs
+            new_cache = []
+            for j, bt in enumerate(self.pattern):
+                h, cj = block_prefill_chunk(cfg, bt, unit_params[j], h,
+                                            positions, unit_cache[j], start,
+                                            valid=valid)
+                new_cache.append(cj)
+            return h, tuple(new_cache)
+
+        h, new_units = jax.lax.scan(unit_fn, h, (params["units"], sub["units"]))
+        rem = []
+        for j in range(self.n_rem):
+            h, cj = block_prefill_chunk(cfg, self.pattern[j], params["rem"][j],
+                                        h, positions, sub["rem"][j], start,
+                                        valid=valid)
+            rem.append(cj)
+        h = layers.norm_apply(cfg, params["final_norm"], h)
+        idx = jnp.clip(length - 1, 0, c - 1)
+        h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
+        logits = self.logits(params, h_last)
+        new_sub = {"units": new_units, "rem": tuple(rem), "t": start + length}
+        return logits, self.cache_insert(cache, new_sub, slot_ids)
+
+    def prefill_chunk_paged(self, params, tokens, cache, tables, dest_blocks,
+                            slot_ids, start, length):
+        """Paged counterpart of ``prefill_chunk``: attention blocks
+        scatter the chunk K/V into the global pool at ``dest_blocks``
+        (G, C) and attend through the rows' block ``tables`` (G, E);
+        recurrent state rows are gathered/advanced/scattered exactly as
+        in the ring path."""
+        cfg = self.cfg
+        g, c = tokens.shape
+        positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+        valid = jnp.arange(c, dtype=jnp.int32)[None, :] < length[:, None]
+        sub = self.cache_gather(cache, slot_ids, pooled_attn=True)
+        h, positions = self._embed(params, tokens, positions, None)
+
+        def unit_fn(h, xs):
+            unit_params, unit_cache = xs
+            new_cache = []
+            for j, bt in enumerate(self.pattern):
+                h, cj = block_prefill_chunk_paged(cfg, bt, unit_params[j], h,
+                                                  positions, unit_cache[j],
+                                                  dest_blocks, tables,
+                                                  valid=valid)
+                new_cache.append(cj)
+            return h, tuple(new_cache)
+
+        h, new_units = jax.lax.scan(unit_fn, h, (params["units"], sub["units"]))
+        rem = []
+        for j in range(self.n_rem):
+            h, cj = block_prefill_chunk_paged(cfg, self.pattern[j],
+                                              params["rem"][j], h, positions,
+                                              sub["rem"][j], dest_blocks,
+                                              tables, valid=valid)
+            rem.append(cj)
+        h = layers.norm_apply(cfg, params["final_norm"], h)
+        idx = jnp.clip(length - 1, 0, c - 1)
+        h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
+        logits = self.logits(params, h_last)
+        new_sub = {"units": new_units, "rem": tuple(rem), "t": start + length}
+        return logits, self.cache_insert(cache, new_sub, slot_ids,
+                                         pooled_attn=True)
 
     # ---- paged serving (DESIGN.md §Paged KV-cache pool) ------------------
     def init_paged_cache(self, batch: int, n_blocks: int, block_size: int,
@@ -477,8 +721,10 @@ class LM:
         t = cache["t"].at[slot_ids].set(length, mode="drop")
         return logits, {"units": new_caches, "rem": tuple(rem_caches), "t": t}
 
-    def decode_step_paged(self, params, token, cache, tables):
+    def decode_step_paged(self, params, token, cache, tables, active=None):
         """token: (B,) int32; tables: (B, E) int32 slot block tables.
+        active: optional (B,) bool — non-decoding rows (mid-ingest
+        chunked slots) keep their state and position untouched.
         Returns (logits (B, Vp), new cache)."""
         cfg = self.cfg
         t = cache["t"]
@@ -494,7 +740,7 @@ class LM:
             new_cache = []
             for j, bt in enumerate(self.pattern):
                 h, c = block_decode_paged(cfg, bt, unit_params[j], h, t,
-                                          unit_cache[j], tables)
+                                          unit_cache[j], tables, active=active)
                 new_cache.append(c)
             return h, tuple(new_cache)
 
@@ -502,15 +748,19 @@ class LM:
         rem_caches = []
         for j in range(self.n_rem):
             h, c = block_decode_paged(cfg, self.pattern[j], params["rem"][j],
-                                      h, t, cache["rem"][j], tables)
+                                      h, t, cache["rem"][j], tables,
+                                      active=active)
             rem_caches.append(c)
         h = layers.norm_apply(cfg, params["final_norm"], h)
         logits = self.logits(params, h)
+        t_new = t + 1 if active is None else jnp.where(active, t + 1, t)
         return logits, {"units": new_caches, "rem": tuple(rem_caches),
-                        "t": t + 1}
+                        "t": t_new}
 
-    def decode_step(self, params, token, cache):
-        """token: (B,) int32.  Returns (logits (B, Vp), new cache)."""
+    def decode_step(self, params, token, cache, active=None):
+        """token: (B,) int32.  active: optional (B,) bool — non-decoding
+        rows (mid-ingest chunked slots) keep their state and position
+        untouched.  Returns (logits (B, Vp), new cache)."""
         cfg = self.cfg
         b = token.shape[0]
         t = cache["t"]                                    # (B,) position to write
@@ -523,7 +773,8 @@ class LM:
             unit_params, unit_cache = xs
             new_cache = []
             for j, bt in enumerate(self.pattern):
-                h, c = block_decode(cfg, bt, unit_params[j], h, t, unit_cache[j])
+                h, c = block_decode(cfg, bt, unit_params[j], h, t,
+                                    unit_cache[j], active=active)
                 new_cache.append(c)
             return h, tuple(new_cache)
 
@@ -531,9 +782,10 @@ class LM:
         rem_caches = []
         for j in range(self.n_rem):
             h, c = block_decode(cfg, self.pattern[j], params["rem"][j], h, t,
-                                cache["rem"][j])
+                                cache["rem"][j], active=active)
             rem_caches.append(c)
         h = layers.norm_apply(cfg, params["final_norm"], h)
         logits = self.logits(params, h)
-        new_cache = {"units": new_caches, "rem": tuple(rem_caches), "t": t + 1}
+        t_new = t + 1 if active is None else jnp.where(active, t + 1, t)
+        new_cache = {"units": new_caches, "rem": tuple(rem_caches), "t": t_new}
         return logits, new_cache

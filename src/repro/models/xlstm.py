@@ -42,14 +42,15 @@ def mlstm_init(key, cfg: ModelConfig, dtype=jnp.float32):
     }
 
 
-def _mlstm_qkv_gates(cfg: ModelConfig, p, x, segment_ids=None):
+def _mlstm_qkv_gates(cfg: ModelConfig, p, x, segment_ids=None, conv_hist=None):
     b, s, d = x.shape
     h = cfg.n_heads
     inner = 2 * d
     hd = inner // h
     x_up = layers.matmul(x, p["w_x"])                     # (B,S,inner)
     z = layers.matmul(x, p["w_z"])
-    xc = layers.causal_conv1d_apply(p["conv"], x_up, segment_ids)
+    xc = layers.causal_conv1d_apply(p["conv"], x_up, segment_ids,
+                                    history=conv_hist)
     xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
     q = layers.matmul(xc, p["wq"]).reshape(b, s, h, hd)
     k = layers.matmul(xc, p["wk"]).reshape(b, s, h, hd) / jnp.sqrt(hd).astype(x.dtype)
@@ -105,19 +106,27 @@ BOUNDARY_LOG_F = -30.0     # "forget gate ~ 0" at packed-segment boundaries;
 
 
 def mlstm_forward_chunked(cfg: ModelConfig, p, x, valid=None, segment_ids=None,
-                          chunk: int = 256, return_state: bool = False):
+                          chunk: int = 256, return_state: bool = False,
+                          state=None):
     """Chunkwise-parallel mLSTM: O(S*chunk) memory instead of O(S^2).
 
     Within each chunk the stabilized parallel form runs as in
     ``mlstm_forward``; across chunks a recurrent state (C, n, m) carries —
     identical math to the O(1) decode recurrence, so chunked == quadratic
     == stepwise (tested).  The chunk body is rematerialized on backward.
+
+    ``state`` (the {C, n, m, conv} dict of ``mlstm_init_state``) makes the
+    span CONTINUE a previous one: the carry starts from it and the conv
+    taps see its history — the chunked-prefill path (DESIGN.md §Chunked
+    prefill); mutually exclusive with segment_ids.
     """
     b, s, d = x.shape
     nh = cfg.n_heads
     inner = 2 * d
     hd = inner // nh
-    x_up, z, q, k, v, log_i, log_f = _mlstm_qkv_gates(cfg, p, x, segment_ids)
+    x_up, z, q, k, v, log_i, log_f = _mlstm_qkv_gates(
+        cfg, p, x, segment_ids,
+        conv_hist=None if state is None else state["conv"])
     if valid is not None:
         log_f = jnp.where(valid[..., None], log_f, 0.0)
         log_i = jnp.where(valid[..., None], log_i, NEG_INF)
@@ -145,9 +154,12 @@ def mlstm_forward_chunked(cfg: ModelConfig, p, x, valid=None, segment_ids=None,
         to_chunks(v.astype(jnp.float32))
     lis, lfs = to_chunks(log_i), to_chunks(log_f)
 
-    c0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
-    n0 = jnp.zeros((b, nh, hd), jnp.float32)
-    m0 = jnp.full((b, nh), NEG_INF, jnp.float32)
+    if state is None:
+        c0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, nh, hd), jnp.float32)
+        m0 = jnp.full((b, nh), NEG_INF, jnp.float32)
+    else:
+        c0, n0, m0 = state["C"], state["n"], state["m"]
     tril = jnp.tril(jnp.ones((chunk, chunk), bool))[None, :, :, None]
 
     def body(carry, xs):
@@ -187,7 +199,11 @@ def mlstm_forward_chunked(cfg: ModelConfig, p, x, valid=None, segment_ids=None,
     out = _mlstm_out(cfg, p, h_tilde.astype(x.dtype), z, x.shape)
     if not return_state:
         return out
-    if valid is not None:
+    if state is not None:
+        length = (jnp.sum(valid.astype(jnp.int32), axis=1) if valid is not None
+                  else jnp.full((b,), s, jnp.int32))
+        conv_hist = layers.conv_history_update(state["conv"], x_up, length)
+    elif valid is not None:
         w = cfg.conv1d_width - 1
         length = jnp.sum(valid.astype(jnp.int32), axis=1)
         idx = length[:, None] - w + jnp.arange(w)[None, :]

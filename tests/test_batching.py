@@ -97,6 +97,42 @@ def test_pack_rejects_oversize():
 
 
 # ---------------------------------------------------------------------------
+# Chunked-prefill planner (DESIGN.md §Chunked prefill)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 500), st.integers(1, 64), st.integers(1, 32),
+       st.integers(0, 100))
+def test_plan_prefill_chunks_invariants(total, budget, align, start):
+    start = min(start, total)
+    spans = batching.plan_prefill_chunks(total, budget, align=align,
+                                         start=start)
+    # spans cover [start, total) exactly once, in order
+    covered = [p for b, e in spans for p in range(b, e)]
+    assert covered == list(range(start, total))
+    for b, e in spans:
+        assert 0 < e - b <= budget           # budget respected, no empties
+    # every span end except the last is block-aligned when the budget
+    # allows it (budget >= align guarantees an aligned end exists)
+    for b, e in spans[:-1]:
+        if budget >= align:
+            assert e % align == 0, (spans, budget, align)
+
+
+def test_plan_prefill_chunks_alignment_and_resume():
+    spans = batching.plan_prefill_chunks(22, 10, align=4)
+    assert spans == [(0, 8), (8, 16), (16, 22)]
+    # resuming from a mid-history watermark continues the same plan
+    assert batching.plan_prefill_chunks(22, 10, align=4, start=8) == \
+        [(8, 16), (16, 22)]
+    # budget smaller than a block: sub-block spans (safe under the
+    # engine's FIFO-by-slot ingestion; see the planner docstring)
+    assert batching.plan_prefill_chunks(7, 2, align=4) == \
+        [(0, 2), (2, 4), (4, 6), (6, 7)]
+    assert batching.plan_prefill_chunks(0, 8) == []
+
+
+# ---------------------------------------------------------------------------
 # Paged KV block allocator (DESIGN.md §Paged KV-cache pool)
 # ---------------------------------------------------------------------------
 

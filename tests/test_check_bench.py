@@ -1,0 +1,83 @@
+"""Benchmark-regression gate (tools/check_bench.py): the committed
+baselines pass their own bands, and a synthetic regression demonstrably
+fails the gate (the acceptance criterion for the CI bench lane)."""
+import json
+import shutil
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_bench  # noqa: E402
+
+
+def _copy_baselines(dst: Path):
+    for name in check_bench.SPECS:
+        shutil.copy(ROOT / name, dst / name)
+
+
+def test_committed_baselines_pass_their_own_bands(tmp_path):
+    """The committed full-run numbers satisfy every band (if this fails,
+    either a benchmark regressed or a band is mis-set)."""
+    _copy_baselines(tmp_path)
+    assert check_bench.run(tmp_path, ROOT) == []
+
+
+def test_synthetic_regression_fails(tmp_path):
+    """Degrading the chunked-prefill stall metric below its floor makes
+    the gate exit nonzero — the gate demonstrably catches regressions."""
+    _copy_baselines(tmp_path)
+    name = "BENCH_chunked_prefill.json"
+    rec = json.loads((tmp_path / name).read_text())
+    rec["stall_reduction_x"] = 1.0          # chunking stopped helping
+    (tmp_path / name).write_text(json.dumps(rec))
+    errors = check_bench.run(tmp_path, ROOT)
+    assert any("stall_reduction_x" in e for e in errors)
+    assert check_bench.main(["--candidate", str(tmp_path),
+                             "--baseline", str(ROOT)]) == 1
+
+
+def test_identity_violation_fails(tmp_path):
+    """The chunked-vs-monolithic trajectory identity is a gated metric
+    (full-sequence flag AND token counts)."""
+    _copy_baselines(tmp_path)
+    name = "BENCH_chunked_prefill.json"
+    rec = json.loads((tmp_path / name).read_text())
+    rec["trajectories_identical"] = False
+    rec["chunked"]["tokens"] = rec["monolithic"]["tokens"] + 5
+    (tmp_path / name).write_text(json.dumps(rec))
+    errors = check_bench.run(tmp_path, ROOT)
+    assert any("trajectories_identical" in e for e in errors)
+    assert any("chunked.tokens" in e for e in errors)
+
+
+def test_missing_candidate_file_fails(tmp_path):
+    """A smoke lane that silently skipped a benchmark cannot pass."""
+    _copy_baselines(tmp_path)
+    (tmp_path / "BENCH_paged_cache.json").unlink()
+    errors = check_bench.run(tmp_path, ROOT)
+    assert any("candidate missing" in e for e in errors)
+
+
+def test_missing_metric_fails(tmp_path):
+    """A benchmark that dropped a gated metric cannot pass."""
+    _copy_baselines(tmp_path)
+    name = "BENCH_async_overlap.json"
+    rec = json.loads((tmp_path / name).read_text())
+    del rec["throughput_ratio"]
+    (tmp_path / name).write_text(json.dumps(rec))
+    errors = check_bench.run(tmp_path, ROOT)
+    assert any("throughput_ratio" in e and "missing" in e for e in errors)
+
+
+def test_deterministic_drift_fails(tmp_path):
+    """Allocator-curve metrics are baseline-relative with zero band:
+    any drift in the deterministic admission math is flagged."""
+    _copy_baselines(tmp_path)
+    name = "BENCH_paged_cache.json"
+    rec = json.loads((tmp_path / name).read_text())
+    rec["curve"][0]["paged_slots"] += 1
+    (tmp_path / name).write_text(json.dumps(rec))
+    errors = check_bench.run(tmp_path, ROOT)
+    assert any("drifted" in e for e in errors)

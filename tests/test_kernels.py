@@ -192,6 +192,92 @@ def test_paged_decode_partial_block_masks_future():
                                atol=2e-5, rtol=2e-5)
 
 
+# ---------------------------------------------------------------------------
+# Prefill continuation (chunked prefill, DESIGN.md §Chunked prefill)
+# ---------------------------------------------------------------------------
+
+def test_chunked_prefill_attention_c1_equals_decode():
+    """With a single query at position t, the continuation oracle IS the
+    decode oracle (same positional masking rule)."""
+    b, h, hkv, hd, w = 2, 4, 2, 32, 24
+    q = _mk((b, 1, h, hd))
+    kc, vc = _mk((b, w, hkv, hd)), _mk((b, w, hkv, hd))
+    pos = jnp.tile(jnp.arange(w)[None], (b, 1))
+    t = jnp.asarray([w - 1, w // 2], jnp.int32)
+    o_dec = ref.decode_attention(q[:, 0], kc, vc, pos, t)
+    o_ch = ref.chunked_prefill_attention(q, kc, vc, pos, t[:, None])
+    np.testing.assert_allclose(np.asarray(o_ch[:, 0]), np.asarray(o_dec),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [0, 6])
+def test_chunked_prefill_attention_matches_flash(window):
+    """Splitting a causal prefill into spans and attending each span
+    against (prior keys + itself) with positions reproduces full flash
+    attention — the exactness claim behind chunked prefill."""
+    b, s, h, hkv, hd, chunk = 2, 24, 4, 2, 32, 7
+    q = _mk((b, s, h, hd))
+    k = _mk((b, s, hkv, hd))
+    v = _mk((b, s, hkv, hd))
+    full = ref.flash_attention(q, k, v, causal=True, window=window)
+    pos = jnp.tile(jnp.arange(s, dtype=jnp.int32)[None], (b, 1))
+    outs = []
+    for b0 in range(0, s, chunk):
+        e = min(s, b0 + chunk)
+        # keys: everything ingested so far (positions < b0) + the span
+        key_pos = jnp.where(pos < e, pos, -1)
+        outs.append(ref.chunked_prefill_attention(
+            q[:, b0:e], k, v, key_pos, pos[:, b0:e], window=window))
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, axis=1)),
+                               np.asarray(full), atol=2e-5, rtol=2e-5)
+
+
+PP_CASES = [
+    # b, c, h, hkv, hd, bs, entries, window
+    (1, 8, 4, 4, 32, 8, 4, 0),
+    (2, 5, 8, 2, 64, 16, 6, 0),
+    (3, 16, 8, 1, 80, 8, 5, 16),       # MQA + window + non-128 hd
+    (2, 3, 4, 2, 128, 32, 3, 48),
+]
+
+
+@pytest.mark.parametrize("b,c,h,hkv,hd,bs,entries,window", PP_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_prefill_attention_pallas_vs_ref(b, c, h, hkv, hd, bs, entries,
+                                               window, dtype):
+    kp, vp, tables, t = _paged_case(b, hkv, hd, bs, entries)
+    kp, vp = kp.astype(dtype), vp.astype(dtype)
+    q = _mk((b, c, h, hd), dtype)
+    # span of queries ending at the slot's current position, with padded
+    # (-1) rows where the span would start before position 0
+    q_pos = np.asarray(t)[:, None] - np.arange(c)[::-1][None, :]
+    q_pos = jnp.asarray(np.where(q_pos >= 0, q_pos, -1), jnp.int32)
+    o_ref = ops.paged_prefill_attention(q, kp, vp, tables, q_pos,
+                                        window=window, backend="jnp")
+    o_pl = ops.paged_prefill_attention(q, kp, vp, tables, q_pos,
+                                       window=window,
+                                       backend="pallas_interpret")
+    valid = (np.asarray(q_pos) >= 0) & \
+        (np.asarray(tables.max(axis=1) >= 0))[:, None]
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o_pl, np.float32)[valid],
+                               np.asarray(o_ref, np.float32)[valid],
+                               atol=tol, rtol=tol)
+
+
+def test_paged_prefill_c1_matches_paged_decode():
+    """A one-token span is exactly the paged decode problem."""
+    b, h, hkv, hd, bs, entries = 2, 4, 2, 32, 8, 4
+    kp, vp, tables, t = _paged_case(b, hkv, hd, bs, entries)
+    q = _mk((b, 1, h, hd))
+    o_dec = ref.paged_decode_attention(q[:, 0], kp, vp, tables, t)
+    o_ch = ref.paged_prefill_attention(q, kp, vp, tables, t[:, None])
+    active = np.asarray(tables.max(axis=1) >= 0)
+    np.testing.assert_allclose(np.asarray(o_ch[:, 0])[active],
+                               np.asarray(o_dec)[active],
+                               atol=2e-5, rtol=2e-5)
+
+
 LS_CASES = [(1, 32, 16), (2, 64, 64), (1, 100, 200), (3, 256, 128)]
 
 

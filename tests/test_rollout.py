@@ -298,6 +298,209 @@ def test_paged_blocks_scale_with_history_not_max_len():
     assert e.blocks_in_use() < 4 * (-(-e.max_len // 4))
 
 
+# ---------------------------------------------------------------------------
+# Chunked prefill (DESIGN.md §Chunked prefill)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cache", ["ring", "paged"])
+@pytest.mark.parametrize("family,extra", [
+    ("dense", {}),
+    ("dense", {"sliding_window": 4}),
+    ("hybrid", {"block_pattern": ("rec", "local"), "d_ff": 64,
+                "local_window": 4}),
+    ("ssm", {"block_pattern": ("mlstm", "slstm"), "d_ff": 0,
+             "n_kv_heads": 4}),
+])
+def test_chunked_engine_matches_monolithic(family, extra, cache):
+    """Chunk size 3 (NOT a divisor of prompt or block size) vs the
+    monolithic engine under per-request RNG streams: identical
+    trajectories per architecture family — including with same-weights
+    interrupts landing MID-CHUNK (step 0: admission ingest is in flight)."""
+    if cache == "paged" and family == "ssm":
+        pytest.skip("paged cache needs an attention layer")
+    cfg = _tiny(family, **extra)
+    kw = {"cache": cache, "block_size": 4} if cache == "paged" else {}
+    _, _, e_mono = _engine(cfg, seed=3, rng="request", **kw)
+    _, _, e_chunk = _engine(cfg, seed=3, prefill_chunk=3, **kw)
+    d1 = _run_to_completion(e_mono, _reqs(4))
+    d2 = _run_to_completion(e_chunk, _reqs(4))
+    for rid in d1:
+        assert d1[rid].response == d2[rid].response, family
+        np.testing.assert_allclose(d1[rid].logprobs, d2[rid].logprobs,
+                                   atol=1e-4)
+    # Prop. 1 under chunking: interrupts at steps 0 and 2 land while the
+    # ingest queue is non-empty, forcing mid-chunk re-ingestion
+    _, _, e_int = _engine(cfg, seed=3, prefill_chunk=3, **kw)
+    d3 = _run_to_completion(e_int, _reqs(4), interrupt_at=(0, 2))
+    assert e_int.interruptions == 2
+    for rid in d1:
+        assert d1[rid].response == d3[rid].response, (family, "interrupt")
+        np.testing.assert_allclose(d1[rid].logprobs, d3[rid].logprobs,
+                                   atol=1e-4)
+
+
+def test_chunked_changed_weights_interrupt_ring_matches_paged():
+    """A CHANGED-weights interrupt landing mid-ingest: ring-chunked and
+    paged-chunked engines see the identical schedule (chunk == block
+    size, so span plans agree) and must produce identical trajectories,
+    with version tags spanning the interrupt."""
+    cfg = _tiny()
+    model, params, e_ring = _engine(cfg, seed=5, prefill_chunk=4)
+    _, _, e_paged = _engine(cfg, seed=5, prefill_chunk=4, cache="paged",
+                            block_size=4)
+    new_params = jax.tree.map(lambda x: x * 1.01, params)
+    reqs = _reqs(4)
+
+    def run(e):
+        done, pending, step = {}, list(reqs), 0
+        while len(done) < len(reqs):
+            k = e.admit(pending)
+            pending = pending[k:]
+            if step == 1:                  # admission ingest still queued
+                e.update_weights(new_params, version=1)
+            for f in e.step():
+                done[f.rid] = f
+            step += 1
+            assert step < 300
+        return done
+
+    d1, d2 = run(e_ring), run(e_paged)
+    for rid in d1:
+        assert d1[rid].response == d2[rid].response
+        np.testing.assert_allclose(d1[rid].logprobs, d2[rid].logprobs,
+                                   atol=1e-4)
+        assert set(d1[rid].versions) <= {0, 1}
+        assert d1[rid].versions == sorted(d1[rid].versions)
+
+
+def test_chunked_decode_runs_between_ingest_spans():
+    """The point of chunking: once slot 0's prompt is in, it decodes
+    while slot 1 is still ingesting (stat: decode_steps_during_prefill),
+    and admission itself never runs a prefill."""
+    cfg = _tiny()
+    _, _, e = _engine(cfg, seed=1, n_slots=2, prefill_chunk=2)
+    assert e.admit(_reqs(2)) == 2
+    assert e.prefill_tokens == 0           # admission did not prefill
+    assert e.n_active == 2
+    sampled_during_backlog = False
+    steps = 0
+    while e._ingest_queue and steps < 50:
+        e.step()
+        if e.tokens_generated > 0 and e._ingest_queue:
+            sampled_during_backlog = True
+        steps += 1
+    assert sampled_during_backlog
+    assert e.stats()["decode_steps_during_prefill"] > 0
+    # and the backlog metric drains to zero
+    assert e.ingest_backlog_tokens() == 0
+
+
+def test_chunked_engine_progresses_under_per_step_weight_refresh():
+    """Forward-progress guarantee: weight publications arriving faster
+    than the re-ingest backlog drains (one per engine step — the
+    --refresh-every 1 regime) must not livelock the chunked engine.
+    When no slot can decode there is nothing to overlap with, so step()
+    keeps ingesting until the head slot's history is back (regression
+    test for the one-span-per-step livelock)."""
+    cfg = _tiny()
+    _, _, e = _engine(cfg, seed=2, n_slots=2, prefill_chunk=2)
+    pending = _reqs(4)
+    done, steps = {}, 0
+    while len(done) < 4:
+        n = e.admit(pending)
+        pending = pending[n:]
+        e.update_weights(e.params, e.version + 1)   # every single step
+        for f in e.step():
+            done[f.rid] = f
+        steps += 1
+        assert steps < 300, "chunked engine livelocked under per-step refresh"
+    assert all(len(f.response) >= 1 for f in done.values())
+    # accounting: redone spans of interrupted admissions count as
+    # reprefill work, never as additional prompt prefill (fresh prefill
+    # is bounded by the total prompt tokens admitted)
+    assert e.prefill_tokens <= sum(max(len(r["prompt"]), 1) for r in _reqs(4))
+    assert e.reprefill_tokens > 0
+
+
+def test_chunked_rng_scheme_is_enforced():
+    cfg = _tiny()
+    with pytest.raises(ValueError, match="rng='request'"):
+        _engine(cfg, prefill_chunk=2, rng="step")
+
+
+def test_chunked_paged_pool_exhaustion_defers_and_counts():
+    """Chunked admission reserves blocks exactly like monolithic
+    admission: a pool too small defers the remainder AND surfaces the
+    deferral in stats() so the scheduler can react without re-probing
+    free_slots() (which cannot see block headroom)."""
+    cfg = _tiny()
+    _, _, e = _engine(cfg, n_slots=4, cache="paged", block_size=4,
+                      n_blocks=7, prefill_chunk=4)
+    reqs = _reqs(3)
+    n = e.admit(reqs)
+    assert n == 2 and e.deferred_last == 1 and e.deferred == 1
+    done, pending, steps = {}, reqs[n:], 0
+    while len(done) < 3 and steps < 300:
+        k = e.admit(pending)
+        pending = pending[k:]
+        for f in e.step():
+            done[f.rid] = f
+        steps += 1
+    assert len(done) == 3
+    assert e.allocator.n_live == 0
+
+
+def test_scheduler_starves_stream_pulls_on_engine_deferral():
+    """AsyncScheduler.admitted(deferred=k > 0) stops fresh stream pulls:
+    only the deferred backlog is re-offered until the engine reports it
+    can take work again (the chunked-admission satellite fix)."""
+    from repro.configs.base import RLConfig
+    from repro.core import AsyncScheduler
+    from repro.core.simulator import SimPromptStream
+
+    rl = RLConfig(batch_size=8, max_staleness=4)
+    sched = AsyncScheduler(prompt_stream=SimPromptStream(64), rl=rl)
+    reqs = sched.plan_admission(4)
+    assert len(reqs) == 4
+    # engine took 1, deferred 2 on pool pressure (1 had no free slot)
+    sched.admitted(reqs, 1, deferred=2)
+    again = sched.plan_admission(4)
+    # only the requeued backlog — no fresh stream pulls while starved
+    assert [r["rid"] for r in again] == [1, 2, 3]
+    sched.admitted(again, 3, deferred=0)   # engine recovered
+    fresh = sched.plan_admission(2)
+    assert [r["rid"] for r in fresh] == [4, 5]
+
+
+def test_threaded_runtime_with_chunked_engine():
+    """The threaded runtime over a REAL chunked engine: the run
+    completes, and decode steps demonstrably occur while the ingest
+    queue is non-empty (generation never waits for a whole prefill)."""
+    from repro.configs.base import RLConfig
+    from repro.core import AsyncScheduler, PPOTrainer, ThreadedRuntime
+    from repro.data.dataset import PromptStream
+    from repro.models.model import build_model
+
+    cfg = _tiny()
+    rl = RLConfig(batch_size=4, answers_per_prompt=2, max_staleness=2,
+                  interruptible=True, ppo_minibatches=1,
+                  microbatch_token_budget=64, lr=1e-3,
+                  max_prompt_len=8, max_gen_len=6)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.key(2))
+    engine = RolloutEngine(model, params, n_slots=4, prompt_len=8,
+                           max_gen_len=6, seed=2, prefill_chunk=2)
+    trainer = PPOTrainer(model, rl, params)
+    sched = AsyncScheduler(
+        prompt_stream=PromptStream(seed=2, answers_per_prompt=2,
+                                   max_operand=9), rl=rl)
+    rt = ThreadedRuntime(engine=engine, trainer=trainer, scheduler=sched)
+    hist = rt.run(2, timeout=300)
+    assert [h.version for h in hist] == [1, 2]
+    assert engine.tokens_generated > 0
+    assert engine.stats()["decode_steps_during_prefill"] > 0
+
+
 def test_single_driver_contract_enforced():
     """The engine is single-driver (DESIGN.md §Async runtime): once a
     thread drives it, a second thread fails loudly instead of silently

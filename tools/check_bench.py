@@ -1,0 +1,157 @@
+"""Benchmark-regression gate (the CI bench lane's last step).
+
+Compares candidate BENCH_*.json files — produced by
+``python -m benchmarks.run --smoke`` with ``REPRO_BENCH_OUT`` pointing at
+a scratch dir (see ``benchmarks/common.bench_path``) — against the
+committed baselines in the repo root, with a per-metric tolerance band.
+
+Two kinds of checks, chosen per metric:
+
+* **absolute floors/ceilings** (``min``/``max``/``equals``) for metrics
+  that are structural claims of the system — the paged engine's
+  slots-at-fixed-HBM ratio, the chunked engine's stall reduction, the
+  threaded runtime demonstrating true overlap.  These hold in smoke mode
+  and on noisy 2-core CI runners, so the bands are deliberately looser
+  than the committed full-run numbers (a smoke run must not fail the
+  gate for being small, only for REGRESSING).
+* **baseline-relative bands** (``rel``) for metrics that are
+  deterministic functions of the workload (allocator math), where smoke
+  equals the full run and any drift is a real behavior change.
+
+A missing candidate file, a missing metric, or a band violation fails
+the gate (exit 1, one line per violation).  Stdlib only.
+
+    python tools/check_bench.py --candidate /tmp/repro-bench [--baseline .]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Any, Dict, List
+
+
+def get_path(obj: Any, path: str) -> Any:
+    """Resolve 'a.b[2].c' style metric paths."""
+    cur = obj
+    for part in path.replace("]", "").replace("[", ".").split("."):
+        if part == "":
+            continue
+        if isinstance(cur, list):
+            cur = cur[int(part)]
+        else:
+            cur = cur[part]
+    return cur
+
+
+# file -> list of metric specs.  Keys per spec:
+#   path            dotted path into the candidate JSON
+#   min / max       absolute band (structural floor/ceiling)
+#   equals          exact expected value
+#   rel             allowed |candidate - baseline| / |baseline| (compared
+#                   against the committed baseline's value at `path`)
+SPECS: Dict[str, List[Dict[str, Any]]] = {
+    "BENCH_paged_cache.json": [
+        # PR 2 acceptance: >= 2x concurrent slots at fixed HBM.
+        {"path": "min_slots_ratio", "min": 2.0},
+        # allocator math is deterministic and step-count independent:
+        # smoke must reproduce the committed curve exactly (small float
+        # slack for the ratio rounding).
+        {"path": "curve[0].paged_slots", "rel": 0.0},
+        {"path": "curve[5].paged_slots", "rel": 0.0},
+    ],
+    "BENCH_chunked_prefill.json": [
+        # This PR's acceptance: >= 2x smaller max decode-stall...
+        {"path": "stall_reduction_x", "min": 2.0},
+        # ... at (loosely) equal throughput; chunked is usually FASTER
+        # (it skips the padded full-width re-prefill) so only a floor.
+        {"path": "throughput_ratio", "min": 0.7},
+        # identity property: both modes sampled the SAME token sequences
+        # (the benchmark compares full per-request responses, not counts)
+        {"path": "trajectories_identical", "equals": True},
+        {"path": "chunked.tokens", "rel": 0.0,
+         "baseline_path": "monolithic.tokens", "same_file": "candidate"},
+    ],
+    "BENCH_async_overlap.json": [
+        # threaded must not be SLOWER than forced-serial, even on noisy
+        # 2-core runners (committed full-run number is ~1.66x).
+        {"path": "throughput_ratio", "min": 1.0},
+        {"path": "overlap_demonstrated", "equals": True},
+    ],
+}
+
+
+def check_file(name: str, specs: List[Dict[str, Any]], candidate_dir: Path,
+               baseline_dir: Path, errors: List[str]) -> None:
+    cpath = candidate_dir / name
+    bpath = baseline_dir / name
+    if not cpath.exists():
+        errors.append(f"{name}: candidate missing ({cpath})")
+        return
+    if not bpath.exists():
+        errors.append(f"{name}: committed baseline missing ({bpath})")
+        return
+    cand = json.loads(cpath.read_text())
+    base = json.loads(bpath.read_text())
+    for spec in specs:
+        path = spec["path"]
+        try:
+            val = get_path(cand, path)
+        except (KeyError, IndexError, TypeError):
+            errors.append(f"{name}: metric '{path}' missing from candidate")
+            continue
+        if "equals" in spec and val != spec["equals"]:
+            errors.append(f"{name}: {path} = {val!r}, expected "
+                          f"{spec['equals']!r}")
+        if "min" in spec and not (isinstance(val, (int, float))
+                                  and val >= spec["min"]):
+            errors.append(f"{name}: {path} = {val!r} below floor "
+                          f"{spec['min']}")
+        if "max" in spec and not (isinstance(val, (int, float))
+                                  and val <= spec["max"]):
+            errors.append(f"{name}: {path} = {val!r} above ceiling "
+                          f"{spec['max']}")
+        if "rel" in spec:
+            ref_obj = cand if spec.get("same_file") == "candidate" else base
+            ref_path = spec.get("baseline_path", path)
+            try:
+                ref = get_path(ref_obj, ref_path)
+            except (KeyError, IndexError, TypeError):
+                errors.append(f"{name}: reference metric '{ref_path}' missing")
+                continue
+            denom = max(abs(float(ref)), 1e-12)
+            drift = abs(float(val) - float(ref)) / denom
+            if drift > spec["rel"] + 1e-12:
+                errors.append(
+                    f"{name}: {path} = {val!r} drifted {drift:.3%} from "
+                    f"{ref!r} (allowed {spec['rel']:.3%})")
+
+
+def run(candidate_dir: Path, baseline_dir: Path,
+        specs: Dict[str, List[Dict[str, Any]]] = SPECS) -> List[str]:
+    errors: List[str] = []
+    for name, file_specs in specs.items():
+        check_file(name, file_specs, candidate_dir, baseline_dir, errors)
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--candidate", required=True,
+                    help="dir holding the smoke run's BENCH_*.json "
+                         "(the REPRO_BENCH_OUT scratch dir)")
+    ap.add_argument("--baseline", default=".",
+                    help="dir holding the committed baselines (repo root)")
+    args = ap.parse_args(argv)
+    errors = run(Path(args.candidate), Path(args.baseline))
+    for e in errors:
+        print(f"BENCH REGRESSION: {e}", file=sys.stderr)
+    if not errors:
+        n = sum(len(v) for v in SPECS.values())
+        print(f"check_bench: {n} metric bands over {len(SPECS)} files OK")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
