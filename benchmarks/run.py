@@ -15,6 +15,7 @@ keeps the perf scripts from rotting); with ``name`` only that module.
   paged_cache            Paged vs ring KV cache: slots at fixed HBM
   chunked_prefill        Chunked vs monolithic prefill: decode-stall
   async_overlap          Threaded runtime: real gen/train wall-clock overlap
+  reward_overlap         Async reward service vs synchronous verification
   roofline_report        Roofline terms from the dry-run artifacts
 
 Prints ``name,us_per_call,derived`` CSV.
@@ -27,8 +28,8 @@ import traceback
 from benchmarks import (async_overlap, chunked_prefill, fig1_timeline,
                         fig4_scaling, fig5c_throughput,
                         fig6a_dynamic_batching, fig6b_interruptible,
-                        paged_cache, roofline_report, table1_end_to_end,
-                        table2_staleness, table8_rloo)
+                        paged_cache, reward_overlap, roofline_report,
+                        table1_end_to_end, table2_staleness, table8_rloo)
 from benchmarks.common import emit
 
 MODULES = [
@@ -43,6 +44,7 @@ MODULES = [
     ("paged", paged_cache),
     ("chunked", chunked_prefill),
     ("overlap", async_overlap),
+    ("reward", reward_overlap),
     ("roofline", roofline_report),
 ]
 
@@ -54,8 +56,10 @@ MODULES = [
 # chunked keeps the chunked-prefill engine + stall metric from rotting;
 # overlap keeps the threaded disaggregated runtime from rotting (a
 # subprocess on 4 fake devices with a hard timeout, so a deadlock fails
-# fast instead of hanging the lane).
-SMOKE_MODULES = ("fig1", "fig6a", "paged", "chunked", "overlap", "roofline")
+# fast instead of hanging the lane); reward keeps the async reward
+# service honest AND runs the --env code sandbox subprocess in CI.
+SMOKE_MODULES = ("fig1", "fig6a", "paged", "chunked", "overlap", "reward",
+                 "roofline")
 
 
 def main() -> None:

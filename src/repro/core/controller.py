@@ -80,10 +80,22 @@ class AsyncRLController(SchedulerExecutorMixin):
             self.rl = rl
             self.sched = AsyncScheduler(prompt_stream=prompt_stream, rl=rl,
                                         reward=reward, on_step=on_step)
+        if getattr(self.sched, "reward_service", None) is not None:
+            raise ValueError(
+                "the virtual-clock executor cannot drive a real "
+                "AsyncRewardService (its worker threads are wall-clock); "
+                "model pipelined verification with "
+                "TimingModel.reward_latency instead, or use "
+                "ThreadedRuntime (DESIGN.md §Environments and reward service)")
         self.timing = timing or TimingModel()
         self.clock = 0.0
         self._train_batch = None
         self._train_done_at = 0.0
+        # pipelined reward stage (mirrors AsyncRewardService under the
+        # virtual clock): finished generations become visible to batch
+        # formation only reward_latency later — (ready_time, finished)
+        # pairs drained at the top of every loop iteration
+        self._pending_scored: List = []
         # chunked engines (DESIGN.md §Chunked prefill) do prefill work
         # inside step(), not at admission/interrupt: bill it there
         self._chunked = getattr(engine, "prefill_chunk", 0) > 0
@@ -109,8 +121,31 @@ class AsyncRLController(SchedulerExecutorMixin):
                     sum(len(r["prompt"]) for r in reqs[:n]))
 
     def _collect(self, finished) -> None:
-        self.sched.collect(finished,
-                           finish_time=self.clock + self.timing.reward_latency)
+        """Queue finished generations behind the (virtual) verification
+        pipeline: they deposit into the buffer when the clock reaches
+        ``clock + reward_latency`` — with zero latency this reduces
+        exactly to the old immediate-deposit behavior (drained at the
+        next loop top, before any batch can form), which is what keeps
+        the pre-env StepLog goldens bit-for-bit."""
+        if not finished:
+            return
+        self._pending_scored.append(
+            (self.clock + self.timing.reward_latency, list(finished)))
+
+    def _drain_scored(self, force: bool = False) -> None:
+        remaining = []
+        for ready, fins in self._pending_scored:
+            if force or ready <= self.clock:
+                self.sched.collect(fins, finish_time=ready)
+            else:
+                remaining.append((ready, fins))
+        self._pending_scored = remaining
+
+    def pending_rewards(self) -> int:
+        """Finished-but-unscored trajectories inside the virtual reward
+        pipeline (the executor-side mirror of
+        ``AsyncScheduler.pending_rewards``)."""
+        return sum(len(f) for _, f in self._pending_scored)
 
     def _maybe_start_training(self) -> None:
         if self._train_batch is not None:
@@ -154,6 +189,7 @@ class AsyncRLController(SchedulerExecutorMixin):
         target = self.trainer.version + n_steps
         stall_guard = 0
         while self.trainer.version < target and self.clock < max_wallclock:
+            self._drain_scored()
             self._maybe_finish_training()
             self.engine.maybe_apply_pending()
             self._admit()
@@ -161,22 +197,33 @@ class AsyncRLController(SchedulerExecutorMixin):
             if self.engine.n_active > 0:
                 if self._chunked:
                     ing0 = (self.engine.prefill_tokens
-                            + self.engine.reprefill_tokens)
+                            + self.engine.reprefill_tokens
+                            + getattr(self.engine, "continuation_tokens", 0))
                 finished = self.engine.step()
                 self.clock += self.timing.decode_step(self.engine.n_active)
                 if self._chunked:
                     # bill the span(s) this step actually ingested (the
-                    # engine's counters are span-length for admission and
-                    # deduped writes for re-ingest — the cost the chunked
+                    # engine's counters are span-length for admission,
+                    # deduped writes for re-ingest and appended tokens
+                    # for multi-turn continuation — the cost the chunked
                     # engine actually pays)
                     ing = (self.engine.prefill_tokens
-                           + self.engine.reprefill_tokens) - ing0
+                           + self.engine.reprefill_tokens
+                           + getattr(self.engine, "continuation_tokens", 0)
+                           ) - ing0
                     if ing:
                         self.clock += self.timing.prefill(ing)
                 self._collect(finished)
                 stall_guard = 0
             elif self._train_batch is not None:
                 self.clock = max(self.clock, self._train_done_at)
+                stall_guard = 0
+            elif self._pending_scored:
+                # everything is waiting on the verification pipeline:
+                # jump to the earliest reward completion (pipelined
+                # latency, Section 4.1)
+                self.clock = max(self.clock,
+                                 min(r for r, _ in self._pending_scored))
                 stall_guard = 0
             else:
                 stall_guard += 1
@@ -185,6 +232,7 @@ class AsyncRLController(SchedulerExecutorMixin):
                         "controller stalled: no active slots, no training, "
                         "no admissible requests (check eta/batch/slots)")
                 self.clock += 1e-6
+        self._drain_scored(force=True)     # post-run buffer state matches
         return self.history
 
     # ---- derived metrics ----------------------------------------------------

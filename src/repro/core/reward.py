@@ -9,8 +9,9 @@ accuracy statistics used by the benchmarks.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Optional
 
 from repro.data import tasks, tokenizer
 
@@ -21,8 +22,27 @@ class RewardService:
     reward_incorrect: float = -5.0
     n_evaluated: int = 0
     n_correct: int = 0
-    recent: List[float] = field(default_factory=list)
+    recent: Optional[Deque[float]] = None      # built in __post_init__
     recent_window: int = 512
+
+    def __post_init__(self):
+        # a deque(maxlen) keeps the recent-accuracy window O(1) per score
+        # (the old list re-slice copied the whole window per trajectory)
+        if self.recent is None:
+            self.recent = deque(maxlen=self.recent_window)
+        elif not isinstance(self.recent, deque):
+            self.recent = deque(self.recent, maxlen=self.recent_window)
+
+    def record(self, ok: bool) -> float:
+        """Fold one already-verified outcome into the accuracy stats and
+        return its reward.  This is the stats half of ``score``; the
+        environment subsystem (repro/env/, DESIGN.md §Environments and
+        reward service) verifies responses itself — possibly on a reward
+        worker thread — and deposits only the verdict here."""
+        self.n_evaluated += 1
+        self.n_correct += int(ok)
+        self.recent.append(1.0 if ok else 0.0)
+        return self.reward_correct if ok else self.reward_incorrect
 
     def score(self, response_tokens, answer) -> float:
         """Reward at the final token: +5 correct / -5 incorrect (App. B.1)."""
@@ -31,13 +51,7 @@ class RewardService:
         else:
             text = tokenizer.decode(response_tokens)
             ok = tasks.verify(text, str(answer))
-        self.n_evaluated += 1
-        self.n_correct += int(ok)
-        r = self.reward_correct if ok else self.reward_incorrect
-        self.recent.append(1.0 if ok else 0.0)
-        if len(self.recent) > self.recent_window:
-            self.recent = self.recent[-self.recent_window:]
-        return r
+        return self.record(ok)
 
     @property
     def accuracy(self) -> float:

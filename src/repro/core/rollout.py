@@ -88,6 +88,12 @@ class Slot:
     chunk_plan: List[Tuple[int, int]] = field(default_factory=list)
     written_blocks: Set[int] = field(default_factory=set)
     reingest: bool = False             # redo after an interrupt, not fresh
+    cont: bool = False                 # multi-turn continuation ingest
+    # multi-turn bookkeeping (DESIGN.md §Environments and reward service):
+    # completed environment turns, and the [start, end) spans of
+    # env-injected tokens inside ``response`` (loss-masked in training)
+    turns: int = 0
+    env_spans: List[Tuple[int, int]] = field(default_factory=list)
 
     @property
     def history_len(self) -> int:
@@ -113,6 +119,11 @@ class Finished:
     answer: object
     submit_time: float
     truncated: bool
+    # multi-turn episodes: per-response-token loss mask (0.0 on
+    # env-injected tokens, None for plain single-turn trajectories) and
+    # the number of model turns taken
+    loss_mask: Optional[List[float]] = None
+    turns: int = 1
 
 
 class RolloutEngine:
@@ -132,7 +143,8 @@ class RolloutEngine:
                  version: int = 0, dtype=jnp.float32,
                  cache: str = "ring", block_size: int = 16,
                  n_blocks: Optional[int] = None,
-                 prefill_chunk: int = 0, rng: str = "auto"):
+                 prefill_chunk: int = 0, rng: str = "auto",
+                 continuation=None):
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.params = params
@@ -161,6 +173,21 @@ class RolloutEngine:
         self.deferred = 0                  # requests bounced on pool pressure
         self.deferred_last = 0             # ... by the most recent admit()
         self.decode_steps_during_prefill = 0
+        self.continuations = 0             # multi-turn episode extensions
+        self.continuation_tokens = 0       # appended-span tokens ingested
+
+        # multi-turn hook (DESIGN.md §Environments and reward service):
+        # fn(finished, turn, budget) -> env tokens to
+        # append (the trajectory continues in place, reusing its cache
+        # and pool blocks) or None to finish.  Appending re-enters the
+        # FIFO ingest queue, so it requires the chunked-prefill engine.
+        self.continuation = continuation
+        if continuation is not None and not prefill_chunk:
+            raise ValueError(
+                "continuation (multi-turn environments) requires "
+                "prefill_chunk > 0: appended env tokens are ingested "
+                "through the FIFO span queue "
+                "(DESIGN.md §Environments and reward service)")
 
         # RNG discipline: "step" folds a global step counter into one key
         # per jit call (the legacy scheme — trajectories depend on batch
@@ -383,6 +410,8 @@ class RolloutEngine:
             "deferred_last": self.deferred_last,
             "decode_steps_during_prefill": self.decode_steps_during_prefill,
             "ingest_backlog_tokens": self.ingest_backlog_tokens(),
+            "continuations": self.continuations,
+            "continuation_tokens": self.continuation_tokens,
         }
 
     def admit(self, requests: Sequence[Dict], clock: float = 0.0) -> int:
@@ -578,6 +607,7 @@ class RolloutEngine:
         s.ingested = 0
         s.written_blocks = set()
         s.reingest = reingest
+        s.cont = False                     # full (re-)ingest, not a turn
         align = self.block_size if self.cache_mode == "paged" else 1
         s.chunk_plan = plan_prefill_chunks(len(history), self.prefill_chunk,
                                            align=align)
@@ -650,17 +680,22 @@ class RolloutEngine:
                     self.params, jnp.asarray(toks), self.cache,
                     sids, start, length)
         s.ingested = end
-        # accounting keys on REDO-vs-fresh, not on response presence: a
+        # accounting keys on the ingest kind, not on response presence: a
         # slot interrupted mid-admission re-ingests with no token sampled
         # yet, and those redone spans are reprefill work (deduped writes
-        # in paged mode), not additional prompt prefill
-        if s.reingest:
+        # in paged mode), not additional prompt prefill; multi-turn
+        # continuation spans are their own class (appended tokens only —
+        # the acceptance check that shared history is never re-written)
+        if s.cont:
+            self.continuation_tokens += written
+        elif s.reingest:
             self.reprefill_tokens += written
         else:
             self.prefill_tokens += len(span)
         if not s.ingesting:                # span completed the history
             self._ingest_queue.pop(0)
             s.written_blocks = set()
+            s.cont = False
             if self.cache_mode == "paged":
                 # (re-)publish the prompt's full blocks under the current
                 # version so later admissions share them
@@ -732,16 +767,79 @@ class RolloutEngine:
             done = t_new == self.eos_id
             trunc = len(s.response) >= self.max_gen_len
             if done or trunc:
-                finished.append(Finished(
-                    rid=s.rid, prompt_id=s.prompt_id, prompt=s.prompt,
-                    response=list(s.response), logprobs=list(s.logprobs),
-                    versions=list(s.versions),
-                    behavior_version=s.behavior_version, answer=s.answer,
-                    submit_time=s.submit_time, truncated=trunc and not done))
+                fin = self._make_finished(s, truncated=trunc and not done)
+                extra = None
+                if self.continuation is not None and not trunc:
+                    # multi-turn: the environment may answer back; the
+                    # budget is the response headroom left after its
+                    # message plus at least one sampled token
+                    budget = self.max_gen_len - len(s.response) - 1
+                    if budget > 0:
+                        extra = self.continuation(fin, s.turns, budget)
+                    if extra is not None and not 0 < len(extra) <= budget:
+                        extra = None
+                if extra is not None:
+                    self._continue_slot(i, [int(t) for t in extra])
+                    continue               # slot stays active, turn k+1
+                finished.append(fin)
                 if self.cache_mode == "paged":
                     self._release_slot_blocks(i)
                 self.slots[i] = Slot()
         return finished
+
+    def _make_finished(self, s: Slot, truncated: bool) -> Finished:
+        mask = None
+        if s.env_spans:
+            mask = [1.0] * len(s.response)
+            for lo, hi in s.env_spans:
+                for k in range(lo, hi):
+                    mask[k] = 0.0
+        return Finished(
+            rid=s.rid, prompt_id=s.prompt_id, prompt=s.prompt,
+            response=list(s.response), logprobs=list(s.logprobs),
+            versions=list(s.versions), behavior_version=s.behavior_version,
+            answer=s.answer, submit_time=s.submit_time, truncated=truncated,
+            loss_mask=mask, turns=s.turns + 1)
+
+    def _continue_slot(self, i: int, extra: List[int]) -> None:
+        """Multi-turn continuation (DESIGN.md §Environments and reward
+        service): append the environment's tokens to the slot's context
+        and re-enter the FIFO ingest queue at the slot's existing
+        watermark — the cache rows / pool blocks holding the shared
+        history are REUSED, only the appended span is ingested.
+
+        The appended tokens ride in ``response`` with logprob 0.0 and a
+        loss-masking env span, so every existing invariant (history =
+        prompt + response[:-1], interrupt re-ingest, staleness tags)
+        holds unchanged; the last env token becomes the pending token the
+        next decode step feeds."""
+        s = self.slots[i]
+        w = len((s.prompt or [0])) + len(s.response) - 1   # ingested history
+        lo = len(s.response)
+        for t in extra:
+            s.response.append(t)
+            s.logprobs.append(0.0)
+            s.versions.append(self.version)
+        s.env_spans.append((lo, len(s.response)))
+        s.pending = int(s.response[-1])
+        s.turns += 1
+        hist = ((s.prompt or [0]) + s.response[:-1])[: self.max_len]
+        s.ingest_tokens = hist
+        s.ingested = w
+        s.written_blocks = set()
+        s.reingest = False
+        s.cont = True
+        align = self.block_size if self.cache_mode == "paged" else 1
+        s.chunk_plan = plan_prefill_chunks(len(hist), self.prefill_chunk,
+                                           align=align, start=w)
+        if self.cache_mode == "paged" and w % self.block_size:
+            # the boundary block is only partially filled (its tag may
+            # already read "current" from the admission ingest): mark it
+            # writable so the dest rule fills the appended positions —
+            # full shared-history blocks stay skipped (never rewritten)
+            s.written_blocks.add(int(self.tables[i, w // self.block_size]))
+        self._ingest_queue.append(i)
+        self.continuations += 1
 
     # ---- update_weights (the interruption path) ---------------------------
     def update_weights(self, params, version: int, *,

@@ -33,6 +33,12 @@ Generation never blocks on training and training never blocks on
 generation beyond data availability — the paper's full asynchrony, with
 the staleness controller (Eq. 3) as the only coupling.
 
+When the scheduler carries an ``AsyncRewardService`` the runtime also
+starts its reward-worker threads (DESIGN.md §Environments and reward
+service): finished generations are verified off BOTH loops — the
+rollout thread only enqueues, the trainer thread only ever sees scored
+trajectories arriving in the buffer.
+
 ``run_serial`` drives the SAME components on one thread in strict
 generate-then-train alternation: the forced-serial baseline that
 ``benchmarks/async_overlap.py`` measures real wall-clock overlap
@@ -194,6 +200,14 @@ class ThreadedRuntime(SchedulerExecutorMixin):
         target = self.trainer.version + n_steps
         self._stop.clear()
         self._errors.clear()
+        # reward workers (DESIGN.md §Environments and reward service):
+        # when the scheduler carries an AsyncRewardService,
+        # its pool scores finished generations off both loops — the
+        # rollout thread only enqueues, the trainer thread only sees
+        # scored trajectories arriving in the buffer
+        svc = getattr(self.sched, "reward_service", None)
+        if svc is not None:
+            svc.start()
         self._t0 = time.perf_counter()
         rollout = threading.Thread(target=self._rollout_loop,
                                    name="areal-rollout", daemon=True)
@@ -214,7 +228,8 @@ class ThreadedRuntime(SchedulerExecutorMixin):
                 f"threaded runtime exceeded {timeout}s at version "
                 f"{self.trainer.version}/{target} "
                 f"(buffered={len(self.sched.buffer)}, "
-                f"active={self.engine.n_active})")
+                f"active={self.engine.n_active}, "
+                f"unscored={self.sched.pending_rewards()})")
         rollout.join(30.0)
         self.clock = time.perf_counter() - self._t0
         if rollout.is_alive():

@@ -8,8 +8,12 @@ training step publishes — is independent of *how* the pipeline executes.
   * staleness-gated admission (Eq. 3): requests are pulled from the
     prompt stream only while the trajectories they would produce can
     still land within ``max_staleness`` of the trainer's version;
-  * reward collection: finished generations are scored and appended to
-    the oldest-first, use-once replay buffer;
+  * reward collection: finished generations are scored — inline, or on
+    the async reward-service worker pool (repro/env/, DESIGN.md
+    §Environments and reward service) — and appended to the
+    oldest-first, use-once replay buffer only once scored; the
+    pending-reward stage stays inside Eq. 3's in-flight count and
+    backpressures admission when the scoring backlog hits its bound;
   * batch formation: delegated to ``ReplayBuffer`` (oldest behavior
     version first, every sample consumed exactly once);
   * weight-publication accounting: each completed train step advances
@@ -66,12 +70,26 @@ class AsyncScheduler:
     def __init__(self, *, prompt_stream, rl: RLConfig,
                  reward: Optional[RewardService] = None,
                  buffer: Optional[ReplayBuffer] = None,
-                 on_step: Optional[Callable] = None):
+                 on_step: Optional[Callable] = None,
+                 env=None, reward_service=None):
         self.stream = prompt_stream
         self.rl = rl
         self.reward = reward or RewardService(rl.reward_correct,
                                               rl.reward_incorrect)
         self.buffer = buffer or ReplayBuffer()
+        # env wiring (DESIGN.md §Environments and reward service).
+        # env=None keeps the legacy synchronous
+        # math scoring path bit-for-bit; env set routes verification
+        # through Environment.verify — inline when reward_service is
+        # None, on the service's worker pool otherwise (trajectories
+        # enter the buffer only once scored).
+        self.env = env
+        self.reward_service = reward_service
+        self._pending_unscored = 0         # finished, not yet deposited
+        if reward_service is not None:
+            if self.env is None:
+                self.env = reward_service.env
+            reward_service.bind(self)
         self.stal = StalenessController(batch_size=rl.batch_size,
                                         max_staleness=(math.inf
                                                        if rl.max_staleness < 0
@@ -97,13 +115,25 @@ class AsyncScheduler:
         got ``deferred > 0``: pool pressure despite free slots), only the
         deferred backlog is re-offered — free-slot count alone overstates
         a paged engine's capacity, and pulling fresh stream work it
-        cannot take would just grow the backlog."""
+        cannot take would just grow the backlog.
+
+        Pending-reward stage: trajectories finished but not yet scored
+        by the async reward service remain part of Eq. 3's N_r —
+        ``n_submitted`` counts at submission and never decrements, so
+        async scoring cannot silently loosen the staleness bound.  On
+        top of that, while the service backlog is at its bound
+        (``saturated()``) fresh stream pulls stop entirely: a slow
+        verifier throttles admission instead of growing an unbounded
+        unscored queue (DESIGN.md §Environments and reward service)."""
+        backpressure = (self.reward_service is not None
+                        and self.reward_service.saturated())
         with self._lock:
             reqs: List[Dict] = []
             while (self._deferred and n_free > len(reqs)
                    and self.stal.can_submit(len(reqs) + 1)):
                 reqs.append(self._deferred.pop(0))
-            while (not self._starved and n_free > len(reqs)
+            while (not self._starved and not backpressure
+                   and n_free > len(reqs)
                    and self.stal.can_submit(len(reqs) + 1)):
                 prob, gid = self.stream.next_request()
                 reqs.append({"rid": self._next_rid, "prompt_id": gid,
@@ -129,10 +159,35 @@ class AsyncScheduler:
 
     # ---- reward collection (rollout side) ---------------------------------
     def collect(self, finished, finish_time: float) -> None:
-        """Score finished generations and buffer them oldest-first.
-        Runs under the scheduler lock: RewardService keeps unsynchronized
-        accuracy stats that ``log_step`` reads from the trainer side."""
+        """Route finished generations to scoring and, once scored, into
+        the oldest-first buffer (DESIGN.md §Environments and reward
+        service):
+
+          * async reward service configured — enqueue and return (O(1));
+            worker threads verify and call ``deposit_scored`` later.
+            Trajectories are buffered ONLY once scored;
+          * environment configured, no service — verify inline on the
+            calling (rollout) thread, outside the scheduler lock: the
+            synchronous-scoring baseline whose stall
+            ``benchmarks/reward_overlap.py`` measures;
+          * neither — the legacy math string-match via
+            ``RewardService.score`` (bit-for-bit the pre-env behavior).
+        """
         if not finished:
+            return
+        if self.reward_service is not None:
+            with self._lock:
+                self._pending_unscored += len(finished)
+            self.reward_service.submit(finished, finish_time)
+            return
+        if self.env is not None:
+            # verification (possibly slow: sandbox subprocess) runs
+            # outside the lock so the trainer side never blocks on it
+            verdicts = [self.env.verify(f) for f in finished]
+            with self._lock:
+                for f, v in zip(finished, verdicts):
+                    self._deposit_locked(f, v.ok, finish_time,
+                                         info=v.info)
             return
         with self._lock:
             self._collect_locked(finished, finish_time)
@@ -140,13 +195,43 @@ class AsyncScheduler:
     def _collect_locked(self, finished, finish_time: float) -> None:
         for f in finished:
             r = self.reward.score(f.response, f.answer)
-            self.buffer.add(Trajectory(
-                rid=f.rid, prompt_id=f.prompt_id,
-                prompt_tokens=f.prompt, response_tokens=f.response,
-                behav_logprobs=f.logprobs, versions=f.versions,
-                behavior_version=f.behavior_version, reward=r,
-                answer=f.answer, submit_time=f.submit_time,
-                finish_time=finish_time))
+            self._buffer_locked(f, r, finish_time)
+
+    def _buffer_locked(self, f, reward: float, finish_time: float,
+                       info: Optional[Dict] = None) -> None:
+        meta = {}
+        lm = getattr(f, "loss_mask", None)
+        if lm is not None:
+            meta["loss_mask"] = lm         # env tokens carry no loss
+        if info:
+            meta["env"] = info
+        self.buffer.add(Trajectory(
+            rid=f.rid, prompt_id=f.prompt_id,
+            prompt_tokens=f.prompt, response_tokens=f.response,
+            behav_logprobs=f.logprobs, versions=f.versions,
+            behavior_version=f.behavior_version, reward=reward,
+            answer=f.answer, submit_time=f.submit_time,
+            finish_time=finish_time, meta=meta))
+
+    def _deposit_locked(self, f, ok: bool, finish_time: float,
+                        info: Optional[Dict] = None) -> None:
+        self._buffer_locked(f, self.reward.record(ok), finish_time, info)
+
+    def deposit_scored(self, f, verdict, finish_time: float) -> None:
+        """Reward-worker sink: fold one verified trajectory into the
+        accuracy stats and release it into the replay buffer.  Called
+        from ``AsyncRewardService`` worker threads; the scheduler lock
+        serializes it against the rollout/trainer sides."""
+        with self._lock:
+            self._pending_unscored -= 1
+            self._deposit_locked(f, verdict.ok, finish_time,
+                                 info=verdict.info)
+
+    def pending_rewards(self) -> int:
+        """Trajectories handed to the reward service and not yet
+        deposited (finished-but-unscored: still in-flight for Eq. 3)."""
+        with self._lock:
+            return self._pending_unscored
 
     # ---- training accounting (trainer side) -------------------------------
     def record_consumed(self, batch: List[Trajectory]) -> None:
@@ -220,6 +305,10 @@ class SchedulerExecutorMixin:
     @property
     def stream(self):
         return self.sched.stream
+
+    @property
+    def reward_service(self):
+        return self.sched.reward_service
 
     @property
     def on_step(self):

@@ -97,7 +97,14 @@ class PPOTrainer:
         for t, a in zip(batch, adv):
             toks = list(t.prompt_tokens) + list(t.response_tokens)
             np_ = len(t.prompt_tokens)
-            lm = [0.0] * np_ + [1.0] * len(t.response_tokens)
+            # multi-turn episodes carry a per-response-token mask
+            # (DESIGN.md §Environments and reward service): tokens the
+            # ENVIRONMENT injected were never sampled by the policy and
+            # take no loss, exactly like prompt tokens
+            resp_mask = t.meta.get("loss_mask") if t.meta else None
+            if resp_mask is None:
+                resp_mask = [1.0] * len(t.response_tokens)
+            lm = [0.0] * np_ + [float(x) for x in resp_mask]
             blp = [0.0] * np_ + list(t.behav_logprobs)
             seqs.append({"tokens": toks[: self.pack_len],
                          "loss_mask": lm[: self.pack_len],

@@ -33,7 +33,17 @@ _INT_RE = re.compile(r"-?\d+")
 
 
 def extract_answer(response_text: str) -> Optional[str]:
-    """Rule-based extraction: first integer in the response."""
+    """Rule-based extraction of the model's claimed answer.
+
+    When the response contains an ``=`` the answer is the first integer
+    AFTER the last one — a model that merely echoes the prompt's
+    operands ("3 + 4 = ?") or restates the equation ("3 + 4 = 7") is
+    scored on what it puts right of the ``=``, not credited for the
+    echoed left-hand side.  Without an ``=`` the first integer anywhere
+    is used (the original rule)."""
+    if "=" in response_text:
+        m = _INT_RE.search(response_text.rsplit("=", 1)[1])
+        return m.group(0) if m else None
     m = _INT_RE.search(response_text)
     return m.group(0) if m else None
 
@@ -41,6 +51,17 @@ def extract_answer(response_text: str) -> Optional[str]:
 def verify(response_text: str, answer: str) -> bool:
     got = extract_answer(response_text)
     return got is not None and int(got) == int(answer)
+
+
+def _eval2(a: int, op: str, b: int, op2: str, c: int) -> int:
+    """Evaluate ``a op b op2 c`` with standard operator precedence
+    (``*`` binds tighter than ``+``/``-``), matching how the prompt text
+    reads as arithmetic."""
+    if op2 == "*" and op != "*":
+        bc = b * c
+        return a + bc if op == "+" else a - bc
+    ab = {"+": a + b, "-": a - b, "*": a * b}[op]
+    return {"+": ab + c, "-": ab - c, "*": ab * c}[op2]
 
 
 class MathTaskGenerator:
@@ -65,9 +86,10 @@ class MathTaskGenerator:
             val = a * b
         text = f"<q> {a} {op} {b} = ?"
         if self.n_ops == 2:
+            op2 = str(rng.choice(["+", "-", "*"]))
             c = int(rng.integers(1, self.max_operand))
-            text = f"<q> {a} {op} {b} + {c} = ?"
-            val = val + c
+            text = f"<q> {a} {op} {b} {op2} {c} = ?"
+            val = _eval2(a, op, b, op2, c)
         pid = self._next_pid
         self._next_pid += 1
         return Problem(pid=pid, prompt_text=text, answer=str(val))

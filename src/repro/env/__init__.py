@@ -1,0 +1,36 @@
+"""repro.env — verifiable environments + the asynchronous reward
+service (DESIGN.md §Environments and reward service).
+
+  base       Environment protocol, Verdict, EnvPromptStream, DelayEnv
+  math_env   MathEnv — the synthetic arithmetic task (single turn)
+  code_env   CodeEnv — sandboxed code execution against unit tests
+  multiturn  MultiTurnEnv — the environment answers back (K turns)
+  service    AsyncRewardService — worker pool scoring off the hot path
+
+``make_env(name)`` is the launcher-facing factory behind
+``--env {math,code,multiturn}``.
+"""
+from repro.env.base import DelayEnv, Environment, EnvPromptStream, Verdict
+from repro.env.code_env import CodeEnv, CodeTaskGenerator, run_snippet
+from repro.env.math_env import MathEnv
+from repro.env.multiturn import MultiTurnEnv
+from repro.env.service import AsyncRewardService
+
+ENVS = {"math": MathEnv, "code": CodeEnv, "multiturn": MultiTurnEnv}
+
+
+def make_env(name: str, **kwargs) -> Environment:
+    """Build one of the named environments (``--env`` flag values)."""
+    try:
+        cls = ENVS[name]
+    except KeyError:
+        raise ValueError(f"unknown environment {name!r}; "
+                         f"choose from {sorted(ENVS)}") from None
+    return cls(**kwargs)
+
+
+__all__ = [
+    "AsyncRewardService", "CodeEnv", "CodeTaskGenerator", "DelayEnv",
+    "ENVS", "Environment", "EnvPromptStream", "MathEnv", "MultiTurnEnv",
+    "Verdict", "make_env", "run_snippet",
+]

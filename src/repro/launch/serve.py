@@ -19,14 +19,37 @@ from repro import checkpoint
 from repro.configs import get_model_config, reduced
 from repro.core import RolloutEngine
 from repro.data import tokenizer
-from repro.data.tasks import MathTaskGenerator
+from repro.env import AsyncRewardService, make_env
 from repro.models.model import build_model
+
+
+class _ServeSink:
+    """Deposit target for served-request scoring (no replay buffer):
+    counts verdicts for the summary line."""
+
+    def __init__(self):
+        self.n = 0
+        self.n_ok = 0
+
+    def deposit_scored(self, fin, verdict, finish_time):
+        self.n += 1
+        self.n_ok += int(verdict.ok)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="areal-qwen-1.5b")
     ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--env", default="math",
+                    choices=["math", "code", "multiturn"],
+                    help="workload to serve + verify (repro/env/, "
+                         "DESIGN.md §Environments and reward service); "
+                         "multiturn installs the continuation hook and "
+                         "auto-enables chunked prefill")
+    ap.add_argument("--reward-workers", type=int, default=0,
+                    help="score finished generations on an async reward "
+                         "worker pool instead of inline after the serve "
+                         "loop (0 = inline)")
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--max-gen", type=int, default=16)
@@ -59,32 +82,52 @@ def main():
     if args.ckpt:
         params, _, meta = checkpoint.load(args.ckpt, params)
         print(f"loaded checkpoint {args.ckpt} (version {meta.get('version')})")
+    env = make_env(args.env, seed=args.seed)
+    continuation = env.continuation_hook()
+    prefill_chunk = args.prefill_chunk
+    if continuation is not None and prefill_chunk <= 0:
+        prefill_chunk = args.prompt_len    # turns need the span queue
     engine = RolloutEngine(model, params, n_slots=args.slots,
                            prompt_len=args.prompt_len,
                            max_gen_len=args.max_gen, seed=args.seed,
                            cache=args.cache, block_size=args.block_size,
                            n_blocks=args.pool_blocks or None,
-                           prefill_chunk=args.prefill_chunk)
+                           prefill_chunk=prefill_chunk,
+                           continuation=continuation)
 
-    gen = MathTaskGenerator(seed=args.seed)
     pending = []
     for i in range(args.requests):
-        p = gen.sample()
+        p = env.sample()
         pending.append({"rid": i, "prompt_id": p.pid,
                         "prompt": p.prompt_tokens, "answer": p.answer})
+
+    sink = _ServeSink()
+    service = None
+    if args.reward_workers > 0:
+        service = AsyncRewardService(env, n_workers=args.reward_workers)
+        service.bind(sink)
 
     t0 = time.time()
     done, steps, version = [], 0, 0
     while len(done) < args.requests:
         n = engine.admit(pending)
         pending = pending[n:]
-        done += engine.step()
+        finished = engine.step()
+        done += finished
+        if service is not None and finished:
+            # scoring overlaps the remaining decode steps (Section 4.1)
+            service.submit(finished, time.time() - t0)
         steps += 1
         if args.refresh_every and steps % args.refresh_every == 0:
             version += 1              # stand-in for a parameter-store pull
             engine.update_weights(engine.params, version)
         if steps > 100_000:
             raise RuntimeError("serve loop did not converge")
+    if service is not None:
+        assert service.close(), "reward workers failed to drain"
+    else:
+        for f in done:
+            sink.deposit_scored(f, env.verify(f), 0.0)
     dt = time.time() - t0
     toks = sum(len(f.response) for f in done)
     out = {
@@ -92,7 +135,13 @@ def main():
         "generated_tokens": toks, "tokens_per_s": round(toks / dt, 1),
         "interruptions": engine.interruptions,
         "mean_len": round(toks / len(done), 2),
+        "env": args.env, "verified_ok": sink.n_ok, "verified": sink.n,
     }
+    if engine.continuations:
+        out["continuations"] = engine.continuations
+        out["continuation_tokens"] = engine.continuation_tokens
+    if service is not None:
+        out["reward_service"] = service.stats()
     if args.cache == "paged":
         out["prefix_reused_blocks"] = engine.prefix_reused_blocks
         out["reprefill_tokens"] = engine.reprefill_tokens

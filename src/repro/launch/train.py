@@ -63,6 +63,16 @@ def _place_disaggregated(engine, trainer, train_fraction: float):
     return roll_mesh, train_mesh
 
 
+def _make_env(env: str, *, seed: int, max_operand: int, sandbox_timeout: float):
+    from repro.env import make_env
+    kwargs = {"seed": seed}
+    if env == "code":
+        kwargs["timeout_s"] = sandbox_timeout
+    else:                                  # math / multiturn
+        kwargs["max_operand"] = max_operand
+    return make_env(env, **kwargs)
+
+
 def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
                  scale: str = "laptop", eta: int = 4, decoupled: bool = True,
                  interruptible: bool = True, batch_size: int = 32,
@@ -73,13 +83,25 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
                  colocated_sync: bool = False, on_step=None,
                  runtime: str = "virtual", train_fraction: float = 0.25,
                  run_timeout: float = 0.0, final_eval: bool = True,
-                 prefill_chunk: int = 0):
-    """End-to-end AReaL training on the synthetic math task.
+                 prefill_chunk: int = 0, env: str = "",
+                 reward_workers: int = 0, reward_latency: float = 0.0,
+                 reward_backlog: int = 64, sandbox_timeout: float = 2.0):
+    """End-to-end AReaL training on a verifiable environment.
+
+    ``env`` selects the workload (DESIGN.md §Environments and reward
+    service): "" = the legacy synchronous math path (bit-for-bit the
+    pre-env behavior), "math"/"code"/"multiturn" route scoring through
+    the Environment protocol.  ``reward_workers > 0`` (threaded runtime)
+    scores on an ``AsyncRewardService`` pool off the rollout thread;
+    with the virtual runtime, ``reward_latency`` models the pipelined
+    verification delay instead.  "multiturn" installs the engine
+    continuation hook (requires chunked prefill; enabled automatically).
 
     Returns (executor, trainer, reward_service); the executor is the
     virtual-clock controller or the threaded runtime depending on
     ``runtime`` — both expose .history/.clock/.effective_throughput()."""
     assert runtime in ("virtual", "threaded"), runtime
+    assert env in ("", "math", "code", "multiturn"), env
     full_cfg = get_model_config(arch)
     cfg = full_cfg
     if scale == "laptop":
@@ -94,16 +116,43 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
                   adv_estimator=adv_estimator,
                   max_prompt_len=prompt_len, max_gen_len=max_gen_len)
 
+    if reward_workers > 0 and not env:
+        env = "math"                       # async scoring needs an Environment
+    environment = continuation = None
+    if env:
+        environment = _make_env(env, seed=seed, max_operand=max_operand,
+                                sandbox_timeout=sandbox_timeout)
+        continuation = environment.continuation_hook()
+        if continuation is not None and prefill_chunk <= 0:
+            # multi-turn continuation re-enters the FIFO ingest queue,
+            # which only the chunked engine has
+            prefill_chunk = prompt_len
+
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.key(seed))
     engine = RolloutEngine(model, params, n_slots=n_slots,
                            prompt_len=prompt_len, max_gen_len=max_gen_len,
-                           seed=seed, prefill_chunk=prefill_chunk)
+                           seed=seed, prefill_chunk=prefill_chunk,
+                           continuation=continuation)
     trainer = PPOTrainer(model, rl, params)
     store = ParameterStore(ckpt_dir=ckpt_dir or None,
                            ckpt_every=10 if ckpt_dir else 0)
-    stream = PromptStream(seed=seed, answers_per_prompt=answers_per_prompt,
-                          max_operand=max_operand)
+    if environment is None:
+        stream = PromptStream(seed=seed, answers_per_prompt=answers_per_prompt,
+                              max_operand=max_operand)
+    else:
+        from repro.env import EnvPromptStream
+        stream = EnvPromptStream(environment, answers_per_prompt)
+    service = None
+    if reward_workers > 0:
+        if runtime != "threaded":
+            raise ValueError(
+                "--reward-workers needs --runtime threaded (the virtual "
+                "executor models pipelined verification with "
+                "reward_latency instead)")
+        from repro.env import AsyncRewardService
+        service = AsyncRewardService(environment, n_workers=reward_workers,
+                                     max_backlog=reward_backlog)
 
     logs = []
 
@@ -122,7 +171,8 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
                   f"loss={log.loss:+.4f} interrupts={log.interruptions}",
                   flush=True)
 
-    sched = AsyncScheduler(prompt_stream=stream, rl=rl, on_step=_on_step)
+    sched = AsyncScheduler(prompt_stream=stream, rl=rl, on_step=_on_step,
+                           env=environment, reward_service=service)
 
     if runtime == "threaded":
         roll_mesh = None
@@ -143,10 +193,13 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
                                  n_gen_devices=96 if not colocated_sync else 128,
                                  n_train_devices=32 if not colocated_sync else 128,
                                  colocated=colocated_sync)
+        # pipelined verification latency under the virtual clock — the
+        # sim-side mirror of the threaded runtime's reward workers
+        timing.reward_latency = reward_latency
         ctl = AsyncRLController(engine=engine, trainer=trainer,
                                 scheduler=sched, rl=rl, timing=timing)
         ctl.run(steps)
-    if scale == "laptop" and final_eval:
+    if scale == "laptop" and final_eval and env in ("", "math"):
         # paper protocol: evaluate the FINAL checkpoint on held-out problems
         from repro.core.evaluate import evaluate
         res = evaluate(model, trainer.params, n_problems=64,
@@ -179,6 +232,30 @@ def main():
                          "engine to per-request RNG streams — trajectories "
                          "differ from the default scheme at equal seed; "
                          "DESIGN.md §Chunked prefill)")
+    ap.add_argument("--env", default="",
+                    choices=["", "math", "code", "multiturn"],
+                    help="verifiable environment (repro/env/, DESIGN.md "
+                         "§Environments and reward service): math = "
+                         "arithmetic string-match, code = sandboxed "
+                         "snippet vs unit tests, multiturn = the "
+                         "environment answers back (auto-enables chunked "
+                         "prefill).  Default '' keeps the legacy "
+                         "synchronous math path bit-for-bit")
+    ap.add_argument("--reward-workers", type=int, default=0,
+                    help="async reward service worker threads (threaded "
+                         "runtime): finished generations are scored off "
+                         "the rollout thread and buffered only once "
+                         "scored; 0 = synchronous scoring")
+    ap.add_argument("--reward-latency", type=float, default=0.0,
+                    help="virtual runtime only: modeled pipelined "
+                         "verification latency (seconds) per trajectory")
+    ap.add_argument("--reward-backlog", type=int, default=64,
+                    help="async reward backlog bound: fresh admission "
+                         "pauses while this many trajectories await "
+                         "scoring")
+    ap.add_argument("--sandbox-timeout", type=float, default=2.0,
+                    help="--env code: wall-clock kill deadline (s) for "
+                         "the verification sandbox subprocess")
     ap.add_argument("--eta", type=int, default=4,
                     help="max staleness (-1 = unbounded, 0 = synchronous)")
     ap.add_argument("--naive-ppo", action="store_true",
@@ -202,7 +279,11 @@ def main():
         adv_estimator=args.adv, seed=args.seed, ckpt_dir=args.ckpt_dir,
         colocated_sync=args.sync_colocated, runtime=args.runtime,
         train_fraction=args.train_fraction, run_timeout=args.run_timeout,
-        final_eval=not args.no_final_eval, prefill_chunk=args.prefill_chunk)
+        final_eval=not args.no_final_eval, prefill_chunk=args.prefill_chunk,
+        env=args.env, reward_workers=args.reward_workers,
+        reward_latency=args.reward_latency,
+        reward_backlog=args.reward_backlog,
+        sandbox_timeout=args.sandbox_timeout)
     out = {
         "arch": args.arch, "runtime": args.runtime, "steps": trainer.version,
         "wall_s": round(time.time() - t0, 1),
@@ -210,6 +291,16 @@ def main():
         "effective_throughput_tok_s": ctl.effective_throughput(),
         "staleness_hist": ctl.stal_stats.histogram(),
     }
+    if args.env:
+        out["env"] = args.env
+        eng_stats = getattr(ctl, "engine", None)
+        if eng_stats is not None and hasattr(eng_stats, "stats"):
+            s = eng_stats.stats()
+            out["continuations"] = s.get("continuations", 0)
+    svc = getattr(ctl, "reward_service", None)
+    if svc is not None:
+        out["reward_service"] = svc.stats()
+        svc.close()
     if args.runtime == "virtual":
         out["virtual_hours"] = ctl.clock / 3600
     else:

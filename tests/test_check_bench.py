@@ -81,3 +81,17 @@ def test_deterministic_drift_fails(tmp_path):
     (tmp_path / name).write_text(json.dumps(rec))
     errors = check_bench.run(tmp_path, ROOT)
     assert any("drifted" in e for e in errors)
+
+
+def test_reward_overlap_regression_fails(tmp_path):
+    """The async-reward floor (>=1.5x over synchronous scoring) and the
+    backlog bound are gated metrics."""
+    _copy_baselines(tmp_path)
+    name = "BENCH_reward_overlap.json"
+    rec = json.loads((tmp_path / name).read_text())
+    rec["throughput_ratio"] = 1.2          # async stopped paying off
+    rec["async"]["backlog_bounded"] = False
+    (tmp_path / name).write_text(json.dumps(rec))
+    errors = check_bench.run(tmp_path, ROOT)
+    assert any(name in e and "throughput_ratio" in e for e in errors)
+    assert any("backlog_bounded" in e for e in errors)

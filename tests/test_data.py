@@ -40,6 +40,47 @@ def test_prompt_stream_groups():
     assert gids == [0] * 4 + [1] * 4 + [2] * 4
 
 
+def test_extract_answer_scores_after_last_equals():
+    """Echo-bug regression: a model that restates the equation (or the
+    prompt) is scored on what follows the last '=', never on the echoed
+    operands."""
+    assert tasks.extract_answer("3 + 4 = 7") == "7"
+    assert tasks.verify("3 + 4 = 7", "7")
+    assert not tasks.verify("3 + 4 = 7", "3")       # echoed operand
+    # full prompt echo: "= ?" has no integer after it -> no answer
+    assert tasks.extract_answer("<q> 3 + 4 = ?") is None
+    assert not tasks.verify("<q> 3 + 4 = ?", "3")
+    # several '=' signs: only the last one counts
+    assert tasks.extract_answer("3 + 4 = x = -12") == "-12"
+    # no '=' at all: original first-integer rule still applies
+    assert tasks.extract_answer("the answer is 42") == "42"
+    assert tasks.verify(" 42 ", "42")
+    assert tasks.extract_answer("") is None
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 40),
+       st.sampled_from([1, 2]))
+def test_generator_answer_always_verifies(seed, max_operand, n_ops):
+    """Property (hypothesis): for every generated problem — both
+    operator slots sampled when n_ops=2 — the stated answer verifies
+    against its own prompt read as Python arithmetic."""
+    gen = tasks.MathTaskGenerator(seed=seed, max_operand=max_operand,
+                                  n_ops=n_ops)
+    for _ in range(5):
+        p = gen.sample()
+        expr = p.prompt_text.removeprefix("<q> ").split("=")[0].strip()
+        assert int(p.answer) == eval(expr)          # noqa: S307 — own text
+        assert tasks.verify(f"{expr} = {p.answer}", p.answer)
+        assert tasks.verify(p.answer, p.answer)
+
+
+def test_generator_two_op_samples_both_operators():
+    gen = tasks.MathTaskGenerator(seed=0, n_ops=2)
+    ops2 = {gen.sample().prompt_text.split()[4] for _ in range(60)}
+    assert ops2 == {"+", "-", "*"}
+
+
 def test_generator_deterministic():
     a = [tasks.MathTaskGenerator(seed=9).sample().prompt_text for _ in range(1)]
     b = [tasks.MathTaskGenerator(seed=9).sample().prompt_text for _ in range(1)]

@@ -1,0 +1,400 @@
+"""Environment & async reward-service subsystem (repro/env/, DESIGN.md
+§Environments and reward service): protocol conformance, worker-pool
+scoring off the rollout path, bounded backlog, Eq.-3 accounting with
+in-flight-unscored trajectories, deadlock-free shutdown, and the
+sandboxed code verifier (slow lane: real subprocesses with hard
+timeouts)."""
+import time
+
+import pytest
+
+from repro.configs.base import RLConfig
+from repro.core import AsyncRLController, AsyncScheduler, ThreadedRuntime
+from repro.core.controller import TimingModel
+from repro.core.reward import RewardService
+from repro.core.rollout import Finished
+from repro.core.simulator import SimEngine, SimPromptStream, SimTrainer
+from repro.data import tokenizer
+from repro.env import (AsyncRewardService, CodeEnv, DelayEnv, Environment,
+                       EnvPromptStream, MathEnv, MultiTurnEnv, Verdict,
+                       make_env, run_snippet)
+
+
+def _fin(rid, response_text, answer, prompt_text="<q> 1 + 1 = ?"):
+    return Finished(rid=rid, prompt_id=rid,
+                    prompt=tokenizer.encode(prompt_text, bos=True),
+                    response=tokenizer.encode(response_text),
+                    logprobs=[0.0], versions=[0], behavior_version=0,
+                    answer=answer, submit_time=0.0, truncated=False)
+
+
+# ---------------------------------------------------------------------------
+# RewardService window (satellite: deque, no O(n) re-slice)
+# ---------------------------------------------------------------------------
+
+def test_reward_service_recent_window_semantics():
+    rs = RewardService(recent_window=4)
+    for ok in (True, True, False, False):
+        rs.record(ok)
+    assert rs.recent_accuracy == 0.5
+    # window slides: the two early Trues fall out, accuracy follows
+    rs.record(False)
+    rs.record(False)
+    assert rs.recent_accuracy == 0.0
+    assert len(rs.recent) == 4                 # maxlen enforced, no copy
+    assert rs.recent.maxlen == 4
+    assert rs.n_evaluated == 6 and rs.n_correct == 2
+    assert rs.accuracy == pytest.approx(2 / 6)
+
+
+def test_reward_service_record_matches_score():
+    """record(ok) is exactly the stats half of score(): same rewards,
+    same counters — the async deposit path is numerically identical to
+    the synchronous one."""
+    a, b = RewardService(), RewardService()
+    toks = tokenizer.encode("= 42")
+    r1 = a.score(toks, "42")
+    r2 = b.record(True)
+    assert r1 == r2 == a.reward_correct
+    assert (a.n_evaluated, a.n_correct, list(a.recent)) == \
+           (b.n_evaluated, b.n_correct, list(b.recent))
+
+
+# ---------------------------------------------------------------------------
+# Environments
+# ---------------------------------------------------------------------------
+
+def test_math_env_verifies_like_legacy_path():
+    env = MathEnv(seed=3)
+    p = env.sample()
+    assert env.verify(_fin(0, f"= {p.answer}", p.answer)).ok
+    assert not env.verify(_fin(0, "= 99999", p.answer)).ok
+    assert not env.verify(_fin(0, "", None)).ok   # simulator fast-path
+
+
+def test_env_prompt_stream_groups():
+    s = EnvPromptStream(MathEnv(seed=1), answers_per_prompt=3)
+    gids = [s.next_request()[1] for _ in range(9)]
+    assert gids == [0] * 3 + [1] * 3 + [2] * 3
+    prob, gid = s.next_request()
+    assert prob.prompt_tokens and prob.answer is not None
+
+
+def test_make_env_factory():
+    assert isinstance(make_env("math"), MathEnv)
+    assert isinstance(make_env("code"), CodeEnv)
+    assert isinstance(make_env("multiturn"), MultiTurnEnv)
+    with pytest.raises(ValueError):
+        make_env("nope")
+
+
+def test_multiturn_follow_up_and_final_turn_scoring():
+    env = MultiTurnEnv(seed=2, max_turns=2)
+    p = env.sample()
+    f = _fin(0, "thinking", p.answer, prompt_text=p.prompt_text)
+    fu = env.follow_up(f, 0, budget=64)
+    assert fu is not None and len(fu) >= 3
+    assert "hint" in tokenizer.decode(fu)
+    # over-budget follow-up is withheld
+    assert env.follow_up(f, 0, budget=2) is None
+    # the hook stops at max_turns
+    hook = env.continuation_hook()
+    assert hook(f, 0, 64) is not None and hook(f, 1, 64) is None
+    # scoring uses only the text after the LAST env marker: the echoed
+    # hint value cannot be credited, the final answer is
+    ok = env.verify(_fin(0, f"x | hint 7 | = {p.answer}", p.answer,
+                         prompt_text=p.prompt_text))
+    assert ok.ok
+    wrong = env.verify(_fin(0, f"= {p.answer} | hint 7 | junk", p.answer,
+                            prompt_text=p.prompt_text))
+    assert not wrong.ok
+
+
+def test_single_turn_envs_have_no_continuation_hook():
+    assert MathEnv().continuation_hook() is None
+    assert CodeEnv().continuation_hook() is None
+    assert MultiTurnEnv().continuation_hook() is not None
+
+
+# ---------------------------------------------------------------------------
+# AsyncRewardService
+# ---------------------------------------------------------------------------
+
+class _Sink:
+    def __init__(self):
+        self.got = []
+
+    def deposit_scored(self, fin, verdict, finish_time):
+        self.got.append((fin.rid, verdict.ok, finish_time))
+
+
+def _wait(cond, timeout=30.0):
+    deadline = time.monotonic() + timeout
+    while not cond():
+        assert time.monotonic() < deadline, "condition not reached in time"
+        time.sleep(0.005)
+
+
+def test_service_scores_off_caller_thread_and_close_drains():
+    env = MathEnv(seed=5)
+    svc = AsyncRewardService(DelayEnv(env, 0.2), n_workers=3, max_backlog=8)
+    sink = _Sink()
+    svc.bind(sink)
+    fins = []
+    for i in range(9):
+        p = env.sample()
+        fins.append(_fin(i, f"= {p.answer}", p.answer))
+    t0 = time.perf_counter()
+    svc.submit(fins, finish_time=1.5)
+    # submit is enqueue-only: far faster than even ONE 0.2 s verify
+    assert time.perf_counter() - t0 < 0.15
+    # close() drains EVERYTHING before stopping the workers
+    assert svc.close()
+    assert sorted(r for r, _, _ in sink.got) == list(range(9))
+    assert all(ok for _, ok, _ in sink.got)
+    assert all(ft == 1.5 for _, _, ft in sink.got)
+    st = svc.stats()
+    assert st["n_scored"] == 9 and st["backlog"] == 0
+    lat = st["per_env"]["delay(math)"]
+    assert lat["n"] == 9 and lat["mean_s"] >= 0.2
+    assert svc.errors == []
+
+
+def test_service_verify_exception_scores_as_miss():
+    class Boom(Environment):
+        name = "boom"
+
+        def verify(self, fin):
+            raise RuntimeError("verifier crashed")
+
+    svc = AsyncRewardService(Boom(), n_workers=1)
+    sink = _Sink()
+    svc.bind(sink)
+    svc.submit([_fin(0, "x", "1")], 0.0)
+    assert svc.close()
+    assert sink.got == [(0, False, 0.0)]
+    assert svc.errors == []                    # deposit succeeded
+
+
+# ---------------------------------------------------------------------------
+# Scheduler integration: pending-reward stage, backpressure, Eq. 3
+# ---------------------------------------------------------------------------
+
+def _sched(env=None, service=None, eta=1, batch=8):
+    rl = RLConfig(batch_size=batch, max_staleness=eta, interruptible=True)
+    return AsyncScheduler(prompt_stream=SimPromptStream(16), rl=rl,
+                          env=env, reward_service=service), rl
+
+
+def test_sync_env_scoring_path_buffers_inline():
+    env = MathEnv(seed=5)
+    sched, _ = _sched(env=env)
+    p = env.sample()
+    sched.collect([_fin(0, f"= {p.answer}", p.answer)], finish_time=2.0)
+    assert len(sched.buffer) == 1
+    t = sched.buffer.pop_batch(1)[0]
+    assert t.reward == sched.reward.reward_correct
+    assert sched.reward.n_evaluated == 1 and sched.reward.n_correct == 1
+
+
+def test_async_scoring_buffers_only_once_scored():
+    env = MathEnv(seed=5)
+    svc = AsyncRewardService(DelayEnv(env, 0.1), n_workers=1, max_backlog=32)
+    sched, _ = _sched(service=svc)
+    assert sched.env is svc.env                # service provides the env
+    p = env.sample()
+    sched.collect([_fin(0, f"= {p.answer}", p.answer)], finish_time=0.5)
+    # not yet scored: the trajectory must NOT be poppable
+    assert sched.pending_rewards() == 1
+    assert sched.buffer.pop_batch(1) is None
+    _wait(lambda: sched.pending_rewards() == 0)
+    assert len(sched.buffer) == 1
+    assert sched.buffer.pop_batch(1)[0].reward == sched.reward.reward_correct
+    svc.close()
+
+
+def test_backlog_bound_backpressures_admission():
+    """While the unscored backlog sits at max_backlog, plan_admission
+    stops pulling fresh prompts; deposits reopen it (bounded backlog)."""
+    env = MathEnv(seed=5)
+    svc = AsyncRewardService(DelayEnv(env, 30.0), n_workers=1, max_backlog=2)
+    sched, _ = _sched(service=svc, eta=100, batch=4)
+    assert len(sched.plan_admission(4)) == 4   # plenty of Eq. 3 budget
+    fins = [_fin(i, "x", "1") for i in range(2)]
+    # stall the worker on a 30 s verify, then saturate the queue
+    sched.collect(fins[:1], 0.0)
+    _wait(lambda: svc._in_progress == 1)
+    sched.collect(fins[1:], 0.0)
+    assert svc.saturated()
+    assert sched.plan_admission(4) == []       # backpressured
+    assert not svc.close(timeout=0.2)          # worker mid-verify: no hang
+    assert sched.pending_rewards() == 2
+
+
+def test_async_scoring_does_not_loosen_staleness_bound():
+    """Eq. 3's N_r counts finished-but-unscored trajectories: with the
+    scorer fully stalled and the version frozen, total admission stops
+    at B*(eta+1) no matter how often the scheduler re-plans."""
+    class Never(Environment):
+        name = "never"
+
+        def verify(self, fin):
+            time.sleep(60)
+            return Verdict(False)
+
+    svc = AsyncRewardService(Never(), n_workers=1, max_backlog=10**6)
+    sched, rl = _sched(service=svc, eta=1, batch=4)
+    submitted = 0
+    for _ in range(10):
+        reqs = sched.plan_admission(64)
+        sched.admitted(reqs, len(reqs))
+        # everything admitted finishes and enters the (stalled) scorer
+        sched.collect([_fin(r["rid"], "x", "1") for r in reqs], 0.0)
+        submitted += len(reqs)
+    assert submitted == rl.batch_size * (1 + 1)   # B * (eta + 1)
+    assert sched.pending_rewards() >= submitted - 1
+    assert not svc.close(timeout=0.1)          # stalled worker, no hang
+
+
+# ---------------------------------------------------------------------------
+# Threaded runtime with reward workers (liveness)
+# ---------------------------------------------------------------------------
+
+def _threaded(env, *, workers, backlog=32, eta=4, batch=16, n_slots=16):
+    rl = RLConfig(batch_size=batch, max_staleness=eta, interruptible=True)
+    eng = SimEngine(n_slots=n_slots, mean_len=30, max_len=2048,
+                    prompt_len=64, seed=7)
+    svc = AsyncRewardService(env, n_workers=workers, max_backlog=backlog)
+    sched = AsyncScheduler(prompt_stream=SimPromptStream(64), rl=rl,
+                           reward_service=svc)
+    return ThreadedRuntime(engine=eng, trainer=SimTrainer(),
+                           scheduler=sched), svc
+
+
+def test_threaded_runtime_with_slow_verifier_stays_live():
+    """A 20 ms verifier on 4 workers: the run completes within its
+    deadline, every trained trajectory went through the service, and
+    shutdown drains cleanly."""
+    rt, svc = _threaded(DelayEnv(MathEnv(seed=1), 0.02), workers=4)
+    hist = rt.run(3, timeout=120)
+    assert [h.version for h in hist] == [1, 2, 3]
+    assert rt.buffer.total_consumed == 3 * 16
+    st = svc.stats()
+    assert st["n_scored"] >= rt.buffer.total_consumed
+    assert st["backlog_peak"] <= st["max_backlog"] + 16   # slots in flight
+    assert svc.close()
+    assert svc.backlog() == 0
+
+
+def test_threaded_runtime_hanging_verifier_fails_fast_not_deadlocks():
+    """A verifier that never returns cannot hang run(): the deadline
+    fires with the unscored count in the message, and the buffer stays
+    open for a retry."""
+    rt, svc = _threaded(DelayEnv(MathEnv(seed=1), 3600.0), workers=1,
+                        backlog=4)
+    with pytest.raises(TimeoutError) as ei:
+        rt.run(1, timeout=1.5)
+    assert "unscored=" in str(ei.value)
+    assert not rt.buffer.closed
+    assert not svc.close(timeout=0.2)          # worker stuck, close no-hangs
+
+
+# ---------------------------------------------------------------------------
+# Virtual executor: pipelined reward latency
+# ---------------------------------------------------------------------------
+
+def test_controller_rejects_real_reward_service():
+    env = MathEnv(seed=1)
+    svc = AsyncRewardService(env, n_workers=1)
+    sched, rl = _sched(service=svc)
+    with pytest.raises(ValueError, match="reward_latency"):
+        AsyncRLController(engine=SimEngine(n_slots=8, mean_len=20,
+                                           max_len=256, prompt_len=16),
+                          trainer=SimTrainer(), scheduler=sched, rl=rl)
+    svc.close()
+
+
+def test_virtual_clock_pipelines_reward_latency():
+    """With TimingModel.reward_latency > 0 trajectories only become
+    batchable reward_latency virtual seconds after finishing — and the
+    pipeline still completes (pipelined, not serialized)."""
+    def run(latency):
+        rl = RLConfig(batch_size=16, max_staleness=4, interruptible=True)
+        sched = AsyncScheduler(prompt_stream=SimPromptStream(64), rl=rl)
+        ctl = AsyncRLController(
+            engine=SimEngine(n_slots=16, mean_len=30, max_len=2048,
+                             prompt_len=64, seed=7),
+            trainer=SimTrainer(), scheduler=sched, rl=rl,
+            timing=TimingModel(decode_step=lambda n: 1.0,
+                               train_step=lambda t: 10.0,
+                               reward_latency=latency))
+        ctl.run(3)
+        return ctl
+
+    base, piped = run(0.0), run(50.0)
+    assert [h.version for h in piped.history] == [1, 2, 3]
+    assert piped.pending_rewards() == 0        # force-drained at exit
+    for t in piped.buffer._items:
+        assert t.finish_time - t.submit_time >= 50.0
+    # latency is pipelined behind generation: the virtual wall clock
+    # grows by far less than (trajectories x latency)
+    n = base.buffer.total_added + base.buffer.total_consumed
+    serialized = piped.history[-1].clock + n * 50.0
+    assert piped.history[-1].clock < serialized / 2
+
+
+# ---------------------------------------------------------------------------
+# Code environment & sandbox (slow lane: real subprocesses)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sandbox_pass_fail_and_restrictions():
+    assert run_snippet("x * 3 + 2", [(1, 5), (2, 8)], timeout_s=5.0).ok
+    assert not run_snippet("x * 3 + 1", [(1, 5)], timeout_s=5.0).ok
+    assert not run_snippet("", [(1, 5)], timeout_s=5.0).ok
+    assert not run_snippet("x +", [(1, 5)], timeout_s=5.0).ok   # syntax
+    # builtins are stripped inside the sandbox: no escape hatches
+    assert not run_snippet("__import__('os').getpid()", [(1, 5)],
+                           timeout_s=5.0).ok
+    assert not run_snippet("open('/etc/passwd')", [(1, 5)], timeout_s=5.0).ok
+
+
+@pytest.mark.slow
+def test_sandbox_kills_hung_snippet_at_wall_deadline():
+    t0 = time.perf_counter()
+    v = run_snippet("10**10**8", [(1, 5)], timeout_s=1.0)
+    dt = time.perf_counter() - t0
+    assert not v.ok and v.info["reason"] == "timeout"
+    assert dt < 10.0                            # killed, not run to term
+
+
+@pytest.mark.slow
+def test_code_env_round_trip_and_hung_model_output():
+    env = CodeEnv(seed=4, timeout_s=1.0)
+    p = env.sample()
+    assert p.answer in p.prompt_text            # copy-extraction learnable
+    assert env.verify(_fin(0, p.answer, p.answer)).ok
+    assert not env.verify(_fin(0, "x + 1", p.answer)).ok
+    # a pathological generation cannot wedge a reward worker
+    t0 = time.perf_counter()
+    assert not env.verify(_fin(0, "10**10**8", p.answer)).ok
+    assert time.perf_counter() - t0 < 10.0
+
+
+@pytest.mark.slow
+def test_async_service_with_code_env_survives_hanging_snippets():
+    """Reward workers scoring hostile snippets: the sandbox deadline
+    bounds each verify, so the pool drains and close() succeeds."""
+    env = CodeEnv(seed=4, timeout_s=0.8)
+    p = env.sample()
+    svc = AsyncRewardService(env, n_workers=2, max_backlog=8)
+    sink = _Sink()
+    svc.bind(sink)
+    fins = [_fin(0, p.answer, p.answer),
+            _fin(1, "10**10**8", p.answer),     # hangs -> killed
+            _fin(2, "x * 9999 + 1", p.answer)]
+    svc.submit(fins, 0.0)
+    assert svc.close(timeout=60.0)
+    assert sorted(r for r, _, _ in sink.got) == [0, 1, 2]
+    by_rid = {r: ok for r, ok, _ in sink.got}
+    assert by_rid[0] and not by_rid[1] and not by_rid[2]

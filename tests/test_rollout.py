@@ -568,3 +568,122 @@ def test_controller_requeues_paged_pool_exhaustion():
     assert [h.version for h in hist] == [1, 2]
     # the loop may have pre-popped the next batch into its train slot
     assert ctl.buffer.total_consumed == 2 * 4 + len(ctl._train_batch or [])
+
+
+# ---------------------------------------------------------------------------
+# Multi-turn continuation (DESIGN.md §Environments and reward service)
+# ---------------------------------------------------------------------------
+
+def _mt_run(model, params, continuation, *, cache="ring", eos=tokenizer.EOS,
+            interrupt_at=(), n_reqs=3, group=False, seed=0):
+    eng = RolloutEngine(model, params, n_slots=4, prompt_len=8,
+                        max_gen_len=20, seed=seed, cache=cache, block_size=4,
+                        prefill_chunk=4, continuation=continuation,
+                        eos_id=eos)
+    reqs = [{"rid": i, "prompt_id": 0 if group else i,
+             "prompt": [1, 4, 5, 6] if group else [1, 4 + i, 5, 6],
+             "answer": None} for i in range(n_reqs)]
+    done, pending, step = {}, list(reqs), 0
+    while len(done) < len(reqs):
+        n = eng.admit(pending)
+        pending = pending[n:]
+        if step in interrupt_at:
+            eng.update_weights(eng.params, eng.version)   # same weights
+        for f in eng.step():
+            done[f.rid] = f
+        step += 1
+        assert step < 3000, eng.stats()
+    return eng, done
+
+
+def _probe_eos(model, params, cache="ring"):
+    """A token the seed-0 run actually samples early: using it as eos_id
+    makes episodes end (and continuations fire) deterministically."""
+    _, done = _mt_run(model, params, None, cache=cache)
+    return done[0].response[3]
+
+
+def test_continuation_requires_chunked_engine():
+    cfg = _tiny()
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.key(7))
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        RolloutEngine(model, params, n_slots=2, prompt_len=8, max_gen_len=6,
+                      continuation=lambda f, t, b: None)
+
+
+@pytest.mark.parametrize("cache", ["ring", "paged"])
+def test_multiturn_continuation_appends_and_masks(cache):
+    """An episode whose environment answers back continues in the SAME
+    slot: env tokens land in the response with loss_mask 0, the turn
+    count grows, and only the appended span is ever ingested
+    (continuation_tokens == appended tokens — shared history is reused,
+    not re-written)."""
+    cfg = _tiny()
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.key(7))
+    eos = _probe_eos(model, params, cache=cache)
+    EXTRA = [9, 10, 11]
+
+    def hook(fin, turn, budget):
+        assert fin.response[-1] == eos          # hook sees the full turn
+        return list(EXTRA) if turn == 0 and budget > len(EXTRA) else None
+
+    eng, done = _mt_run(model, params, hook, cache=cache, eos=eos,
+                        group=True)
+    st = eng.stats()
+    assert st["continuations"] >= 1
+    # THE pool-stats acceptance check: ingested continuation work is
+    # exactly the appended spans — prompt/history blocks (shared by the
+    # GRPO group in paged mode) are never re-written
+    assert st["continuation_tokens"] == st["continuations"] * len(EXTRA)
+    assert st["reprefill_tokens"] == 0
+    assert st["prefill_tokens"] == 3 * 4        # admission prompts only
+    if cache == "paged":
+        assert st["prefix_reused_blocks"] > 0   # group sharing survived
+    multi = [f for f in done.values() if f.turns > 1]
+    assert multi
+    for f in multi:
+        # the env span sits in the response, loss-masked, logprob 0
+        idx = next(i for i in range(len(f.response))
+                   if f.response[i:i + len(EXTRA)] == EXTRA
+                   and f.loss_mask[i] == 0.0)
+        assert f.loss_mask[idx:idx + 3] == [0.0] * 3
+        assert f.logprobs[idx:idx + 3] == [0.0] * 3
+        assert sum(m == 0.0 for m in f.loss_mask) == 3
+        assert len(f.loss_mask) == len(f.response)
+    single = [f for f in done.values() if f.turns == 1]
+    for f in single:
+        assert f.loss_mask is None              # legacy shape untouched
+
+
+@pytest.mark.parametrize("cache", ["ring", "paged"])
+@pytest.mark.parametrize("family,extra", [
+    ("dense", {}),
+    ("hybrid", {"block_pattern": ("rec", "local"), "d_ff": 64,
+                "local_window": 4}),
+])
+def test_multiturn_interrupt_identity(family, extra, cache):
+    """Proposition-1 extension: a same-weights interrupt landing DURING
+    a multi-turn episode (forcing a full re-ingest of the grown context)
+    reproduces the uninterrupted trajectories bit-for-bit — the
+    incremental continuation ingest wrote exactly the right cache/pool
+    state."""
+    if family != "dense" and cache == "paged":
+        pytest.skip("paged needs attention KV (dense only here)")
+    cfg = _tiny(family, **extra)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.key(7))
+    eos = _probe_eos(model, params, cache=cache)
+
+    def hook(fin, turn, budget):
+        return [9, 10, 11] if turn == 0 and budget > 3 else None
+
+    ea, a = _mt_run(model, params, hook, cache=cache, eos=eos)
+    eb, b = _mt_run(model, params, hook, cache=cache, eos=eos,
+                    interrupt_at=(6, 9))
+    assert ea.continuations >= 1 and eb.interruptions == 2
+    for rid in a:
+        assert a[rid].response == b[rid].response, rid
+        assert a[rid].turns == b[rid].turns
+        assert a[rid].loss_mask == b[rid].loss_mask

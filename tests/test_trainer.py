@@ -108,3 +108,26 @@ def test_learning_signal_increases_good_token_prob():
     tr.train_step(batch)
     assert logprob_of(tr.params, good) > lp_good_before
     assert logprob_of(tr.params, bad) < lp_bad_before
+
+
+def test_env_token_loss_mask_zeroes_injected_tokens():
+    """Multi-turn trajectories carry meta["loss_mask"] (0.0 on
+    environment-injected tokens): _prepare must zero exactly those
+    response positions while plain trajectories keep the all-ones mask
+    (DESIGN.md §Environments and reward service)."""
+    tr = _trainer()
+    batch = _batch(n=4, seed=3)
+    mask = [1.0] * len(batch[0].response_tokens)
+    mask[1] = mask[2] = 0.0
+    batch[0].meta["loss_mask"] = mask
+    seqs = tr._prepare(batch)
+    np_ = len(batch[0].prompt_tokens)
+    assert seqs[0]["loss_mask"][np_ + 1] == 0.0
+    assert seqs[0]["loss_mask"][np_ + 2] == 0.0
+    assert seqs[0]["loss_mask"][np_] == 1.0
+    # untouched trajectories: prompt masked, every response token live
+    assert seqs[1]["loss_mask"] == [0.0] * len(batch[1].prompt_tokens) \
+        + [1.0] * len(batch[1].response_tokens)
+    # and the step still runs end-to-end with the mask in place
+    m = tr.train_step(batch)
+    assert np.isfinite(m.loss)

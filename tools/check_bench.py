@@ -79,6 +79,19 @@ SPECS: Dict[str, List[Dict[str, Any]]] = {
         {"path": "throughput_ratio", "min": 1.0},
         {"path": "overlap_demonstrated", "equals": True},
     ],
+    "BENCH_reward_overlap.json": [
+        # PR 5 acceptance: at the injected verifier latency, async
+        # scoring (reward workers) sustains >= 1.5x the synchronous
+        # inline-verification throughput — verification is pipelined
+        # behind generation, not serialized into it.
+        {"path": "throughput_ratio", "min": 1.5},
+        # admission backpressure keeps the unscored backlog bounded
+        {"path": "async.backlog_bounded", "equals": True},
+        # the code-environment sandbox actually ran (CI smoke exercises
+        # subprocess verification end-to-end)
+        {"path": "code_env.completed", "equals": True},
+        {"path": "code_env.sandbox_verifications", "min": 1},
+    ],
 }
 
 
