@@ -16,6 +16,7 @@ keeps the perf scripts from rotting); with ``name`` only that module.
   chunked_prefill        Chunked vs monolithic prefill: decode-stall
   async_overlap          Threaded runtime: real gen/train wall-clock overlap
   reward_overlap         Async reward service vs synchronous verification
+  fleet_overlap          Process fleet: equivalence, crash recovery, speed
   roofline_report        Roofline terms from the dry-run artifacts
 
 Prints ``name,us_per_call,derived`` CSV.
@@ -28,8 +29,9 @@ import traceback
 from benchmarks import (async_overlap, chunked_prefill, fig1_timeline,
                         fig4_scaling, fig5c_throughput,
                         fig6a_dynamic_batching, fig6b_interruptible,
-                        paged_cache, reward_overlap, roofline_report,
-                        table1_end_to_end, table2_staleness, table8_rloo)
+                        fleet_overlap, paged_cache, reward_overlap,
+                        roofline_report, table1_end_to_end, table2_staleness,
+                        table8_rloo)
 from benchmarks.common import emit
 
 MODULES = [
@@ -45,6 +47,7 @@ MODULES = [
     ("chunked", chunked_prefill),
     ("overlap", async_overlap),
     ("reward", reward_overlap),
+    ("fleet", fleet_overlap),
     ("roofline", roofline_report),
 ]
 
@@ -57,9 +60,11 @@ MODULES = [
 # overlap keeps the threaded disaggregated runtime from rotting (a
 # subprocess on 4 fake devices with a hard timeout, so a deadlock fails
 # fast instead of hanging the lane); reward keeps the async reward
-# service honest AND runs the --env code sandbox subprocess in CI.
+# service honest AND runs the --env code sandbox subprocess in CI; fleet
+# spawns the multi-process executor, kills a worker and checks recovery
+# (also a hard-timeout subprocess — supervision bugs fail fast).
 SMOKE_MODULES = ("fig1", "fig6a", "paged", "chunked", "overlap", "reward",
-                 "roofline")
+                 "fleet", "roofline")
 
 
 def main() -> None:

@@ -1,4 +1,6 @@
-"""AReaL core: the paper's contribution as composable modules.
+"""AReaL core: the paper's contribution as composable modules
+(DESIGN.md §System overview maps these onto the paper's four system
+components).
 
   ppo          standard (Eq. 2) + decoupled (Eq. 5) PPO objectives
   advantages   critic-free GRPO / RLOO / MC estimators (App. B.1, C.4)
@@ -10,12 +12,14 @@
   scheduler    transport-agnostic scheduling core (policy only)
   controller   virtual-clock executor (Fig. 2/3 data flow, deterministic)
   runtime      threaded disaggregated executor (real concurrency)
+  fleet        multi-process elastic executor (workers + supervision)
   simulator    cluster-scale discrete-event model (same scheduler)
   reward       rule-based reward service
   weights      versioned parameter store (trainer -> rollout publication)
 """
 from repro.core.buffer import ReplayBuffer, Trajectory
 from repro.core.controller import AsyncRLController, TimingModel
+from repro.core.fleet import FleetRuntime
 from repro.core.reward import RewardService
 from repro.core.rollout import Finished, RolloutEngine
 from repro.core.runtime import ThreadedRuntime
@@ -25,10 +29,10 @@ from repro.core.trainer import PPOTrainer, TrainMetrics
 from repro.core.weights import ParameterStore
 
 __all__ = [
-    "AsyncRLController", "AsyncScheduler", "Finished", "ParameterStore",
-    "PPOTrainer", "ReplayBuffer", "RewardService", "RolloutEngine",
-    "StalenessController", "StalenessStats", "StepLog", "ThreadedRuntime",
-    "TimingModel", "TrainMetrics", "Trajectory",
+    "AsyncRLController", "AsyncScheduler", "Finished", "FleetRuntime",
+    "ParameterStore", "PPOTrainer", "ReplayBuffer", "RewardService",
+    "RolloutEngine", "StalenessController", "StalenessStats", "StepLog",
+    "ThreadedRuntime", "TimingModel", "TrainMetrics", "Trajectory",
 ]
 from repro.core.evaluate import EvalResult, evaluate  # noqa: E402
 

@@ -1,0 +1,985 @@
+"""Multi-process elastic rollout fleet (DESIGN.md §Fleet runtime).
+
+``ThreadedRuntime`` proves the async pipeline on two threads in one
+process; this module is the step to the paper's actual deployment
+shape — MANY rollout workers and trainer replicas as separate OS
+processes that can crash, stall, join and leave independently, with the
+transport-agnostic ``AsyncScheduler`` still the single policy core.
+
+Process ownership (DESIGN.md §Process ownership):
+
+    supervisor process (this module, main process)
+    ├─ AsyncScheduler + ReplayBuffer + ParameterStore  (policy state)
+    ├─ supervisor thread: transport receive, dispatch, liveness,
+    │                     admission planning, elastic policy
+    ├─ trainer-pump thread: pop_batch -> ship to a trainer replica ->
+    │                       publish weights -> StepLog
+    ├─ reward-service worker threads (when configured)
+    │
+    ├─ rollout worker process x N  (one RolloutEngine each,
+    │       single-driver contract held by the worker's main loop;
+    │       a daemon heartbeat thread only READS engine counters)
+    └─ trainer replica process x M (one PPOTrainer each, stateless
+            executors: params/opt-state ship with every batch, so M
+            replicas reproduce single-trainer sequential semantics)
+
+Transport (DESIGN.md §Fleet runtime): workers talk to the supervisor
+over a ``Transport`` — a 3-method interface (send / recv(timeout) /
+close) carrying picklable tuples.  The in-tree implementation is
+``PipeTransport`` over ``multiprocessing.Pipe``; an RPC or socket
+backend slots in by implementing the same interface, nothing else in
+this module changes.  Messages per direction:
+
+    worker -> supervisor: register, heartbeat, admitted, finished,
+                          drained, stopped, error
+    supervisor -> worker:  admit, weights, drain, stop
+    supervisor -> trainer: train, stop;  trainer -> supervisor: trained
+
+Heartbeats + supervision (DESIGN.md §Supervision state machine): every
+worker runs a daemon thread beating ``heartbeat_s`` with progress
+counters; the beat starts BEFORE the engine builds, so compile time
+never reads as death.  The supervisor declares a worker failed when its
+process exits, when it reports an error, or when beats stop for
+``heartbeat_timeout`` (a SIGSTOP-frozen process is alive but silent —
+it is terminated and treated as crashed; a merely SLOW worker keeps
+beating and is never respawned).  Failure handling: salvage whatever
+the dead worker already delivered on its transport, requeue its
+remaining in-flight requests through ``AsyncScheduler.requeue_worker``
+(DESIGN.md §Requeue semantics — already-counted for Eq. 3, re-admitted
+by ordinary ``plan_admission``, regenerated from the prompt by the
+interrupt/re-prefill machinery on whichever worker picks them up), and
+respawn a replacement up to ``max_respawns``.
+
+Elastic mode (DESIGN.md §Elastic policy): the fleet grows while
+admission is capacity-starved and shrinks while the reward service's
+scoring backlog saturates (``AsyncScheduler.saturated()``).  A shrink
+is a graceful drain — the victim stops taking admissions, finishes its
+in-flight slots and delivers them before stopping — so an unscored
+trajectory is never dropped.
+
+Trajectory equivalence: with per-request RNG streams
+(``RolloutEngine(rng="request")``) every token depends only on
+(seed, rid, draw index) and the params — not on which worker, admission
+timing or batch layout — so the fleet reproduces ``ThreadedRuntime``'s
+per-request trajectories exactly (benchmarks/fleet_overlap.py and
+tests/test_fleet.py assert this).
+"""
+from __future__ import annotations
+
+import collections
+import os
+import threading
+import time
+import traceback
+from dataclasses import dataclass, field
+from queue import Empty, Queue
+from typing import Any, Callable, Dict, List, Optional
+
+import multiprocessing as mp
+from multiprocessing import connection as mpc
+
+from repro.core.runtime import RoleLiveness, format_liveness
+from repro.core.scheduler import (AsyncScheduler, SchedulerExecutorMixin,
+                                  StepLog)
+from repro.core.weights import ParameterStore
+
+
+# ---- transport --------------------------------------------------------------
+class Transport:
+    """Message transport interface between the supervisor and one worker
+    (DESIGN.md §Fleet runtime).  Implementations carry small picklable
+    tuples, preserve per-connection FIFO order (the supervisor relies on
+    'admitted' acks preceding 'finished' for the same requests), and
+    must tolerate concurrent ``send`` from two threads (a worker's main
+    loop and its heartbeat thread share one transport)."""
+
+    def send(self, msg: tuple) -> None:
+        raise NotImplementedError
+
+    def recv(self, timeout: float = 0.0):
+        """Next message, or None if none arrived within ``timeout``.
+        Raises EOFError once the peer is gone and the buffer is dry."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        raise NotImplementedError
+
+
+class PipeTransport(Transport):
+    """``multiprocessing.Pipe`` transport — the in-tree backend."""
+
+    def __init__(self, conn):
+        self.raw = conn                   # exposed for connection.wait()
+        self._send_lock = threading.Lock()
+
+    def send(self, msg: tuple) -> None:
+        with self._send_lock:
+            self.raw.send(msg)
+
+    def recv(self, timeout: float = 0.0):
+        if not self.raw.poll(timeout):
+            return None
+        return self.raw.recv()
+
+    def close(self) -> None:
+        try:
+            self.raw.close()
+        except OSError:
+            pass
+
+
+# ---- worker process mains ---------------------------------------------------
+# Top-level functions (spawn start method pickles them by reference).
+# Factories are likewise module-level callables: the child re-imports
+# the factory's module, so tests/benchmarks define their own builders.
+
+def _to_device(tree):
+    if tree is None:
+        return None
+    import jax
+    import jax.numpy as jnp
+    return jax.tree.map(jnp.asarray, tree)
+
+
+def _engine_stats(engine, progress: Dict) -> Dict:
+    """Heartbeat payload: read-only engine counters + loop progress.
+    Runs on the worker's heartbeat thread — reads, never drives, the
+    engine (the main loop holds the single-driver contract)."""
+    st = dict(progress)
+    if engine is None:
+        st["phase"] = "building"
+        return st
+    st.update(n_active=engine.n_active, n_free=len(engine.free_slots()),
+              version=engine.version,
+              tokens_generated=engine.tokens_generated,
+              interruptions=engine.interruptions)
+    ingest = getattr(engine, "ingest_backlog_tokens", None)
+    if callable(ingest):
+        st["ingest_backlog_tokens"] = ingest()
+    return st
+
+
+def _start_heartbeat(transport: Transport, worker_id: str, stats_fn,
+                     heartbeat_s: float, stop: threading.Event):
+    def beat():
+        seq = 0
+        while not stop.is_set():
+            try:
+                transport.send(("heartbeat", worker_id, seq, stats_fn()))
+            except (OSError, ValueError):
+                return                    # supervisor is gone
+            seq += 1
+            stop.wait(heartbeat_s)
+
+    t = threading.Thread(target=beat, name=f"beat-{worker_id}", daemon=True)
+    t.start()
+    return t
+
+
+def _rollout_worker_main(worker_id: str, conn, factory: Callable,
+                         factory_kwargs: Dict, cfg: Dict) -> None:
+    """Rollout worker process: build the engine, then loop
+    receive-apply-step — the process analogue of ``ThreadedRuntime``'s
+    rollout thread (DESIGN.md §Fleet runtime).  Registers and starts
+    heartbeating BEFORE the (slow, compiling) engine build."""
+    transport = PipeTransport(conn)
+    stop = threading.Event()
+    progress = {"steps": 0, "loops": 0}
+    holder: List[Any] = [None]            # engine, visible to the beat thread
+    transport.send(("register", worker_id, "rollout", os.getpid()))
+    _start_heartbeat(transport, worker_id,
+                     lambda: _engine_stats(holder[0], progress),
+                     cfg["heartbeat_s"], stop)
+    try:
+        engine = holder[0] = factory(**factory_kwargs)
+    except BaseException:                 # noqa: BLE001 — shipped upstream
+        transport.send(("error", worker_id, traceback.format_exc()))
+        return
+    pending_weights: Optional[tuple] = None
+    admit_q: collections.deque = collections.deque()
+    draining = drained_sent = False
+    try:
+        while True:
+            progress["loops"] += 1
+            idle = engine.n_active == 0 and not admit_q
+            msg = transport.recv(cfg["idle_sleep"] if idle else 0.0)
+            while msg is not None:
+                kind = msg[0]
+                if kind == "admit":
+                    admit_q.append((msg[1], msg[2]))
+                elif kind == "weights":   # keep only the newest version
+                    pending_weights = (msg[1], msg[2])
+                elif kind == "drain":
+                    draining = True
+                elif kind == "stop":
+                    stop.set()
+                    transport.send(("stopped", worker_id))
+                    return
+                msg = transport.recv(0.0)
+            if (pending_weights is not None
+                    and pending_weights[0] > engine.version):
+                version, params = pending_weights
+                engine.update_weights(_to_device(params), version,
+                                      interruptible=cfg["interruptible"])
+            pending_weights = None
+            engine.maybe_apply_pending()
+            while admit_q and not engine.has_pending_weights:
+                reqs, clock = admit_q.popleft()
+                n = 0 if draining else engine.admit(reqs, clock=clock)
+                transport.send(("admitted", worker_id, reqs_key(reqs), n,
+                                getattr(engine, "deferred_last", 0)))
+            if engine.n_active:
+                finished = engine.step()
+                progress["steps"] += 1
+                if finished:
+                    transport.send(("finished", worker_id, finished))
+                drained_sent = False
+            elif draining and not drained_sent and not admit_q:
+                transport.send(("drained", worker_id))
+                drained_sent = True
+    except (EOFError, BrokenPipeError, OSError):
+        return                            # supervisor is gone: just exit
+    except BaseException:                 # noqa: BLE001 — shipped upstream
+        try:
+            transport.send(("error", worker_id, traceback.format_exc()))
+        except (OSError, ValueError):
+            pass
+    finally:
+        stop.set()
+
+
+def _trainer_worker_main(worker_id: str, conn, factory: Callable,
+                         factory_kwargs: Dict, cfg: Dict) -> None:
+    """Trainer replica process: a stateless train-step executor.  Every
+    'train' message carries the batch AND the canonical (params,
+    opt_state, version) host state; the reply carries the updated state
+    back — so any replica can run any step and a replica crash loses
+    nothing but the in-progress step, which the pump resends
+    (DESIGN.md §Fleet runtime)."""
+    transport = PipeTransport(conn)
+    stop = threading.Event()
+    progress = {"steps": 0}
+    transport.send(("register", worker_id, "trainer", os.getpid()))
+    _start_heartbeat(transport, worker_id, lambda: dict(progress),
+                     cfg["heartbeat_s"], stop)
+    try:
+        trainer = factory(**factory_kwargs)
+    except BaseException:                 # noqa: BLE001 — shipped upstream
+        transport.send(("error", worker_id, traceback.format_exc()))
+        return
+    from repro.launch.disaggregated import host_weights
+    try:
+        while True:
+            msg = transport.recv(0.5)
+            if msg is None:
+                continue
+            if msg[0] == "stop":
+                stop.set()
+                transport.send(("stopped", worker_id))
+                return
+            if msg[0] == "train":
+                _, batch, params, opt_state, version = msg
+                if params is not None:
+                    trainer.params = _to_device(params)
+                if opt_state is not None:
+                    trainer.opt_state = _to_device(opt_state)
+                trainer.version = version
+                metrics = trainer.train_step(batch)
+                progress["steps"] += 1
+                transport.send((
+                    "trained", worker_id, trainer.version, metrics,
+                    host_weights(trainer.params),
+                    host_weights(getattr(trainer, "opt_state", None))))
+    except (EOFError, BrokenPipeError, OSError):
+        return
+    except BaseException:                 # noqa: BLE001 — shipped upstream
+        try:
+            transport.send(("error", worker_id, traceback.format_exc()))
+        except (OSError, ValueError):
+            pass
+    finally:
+        stop.set()
+
+
+def reqs_key(reqs: List[Dict]) -> List[int]:
+    return [r["rid"] for r in reqs]
+
+
+# ---- default factories (spawn-picklable builders for real models) ----------
+def build_engine(*, model_cfg, seed: int, engine_kwargs: Dict):
+    """Default rollout-engine factory: tiny-to-real models built from a
+    picklable ``ModelConfig``.  ``model.init`` is deterministic in
+    (seed), so every worker and the trainer replicas start from
+    identical weights without any initial broadcast."""
+    import jax
+
+    from repro.core.rollout import RolloutEngine
+    from repro.models.model import build_model
+
+    model = build_model(model_cfg, remat=False)
+    params = model.init(jax.random.key(seed))
+    return RolloutEngine(model, params, seed=seed, **engine_kwargs)
+
+
+def build_trainer(*, model_cfg, rl, seed: int, pack_rows: int = 1):
+    """Default trainer-replica factory (see ``build_engine``)."""
+    import jax
+
+    from repro.core.trainer import PPOTrainer
+    from repro.models.model import build_model
+
+    model = build_model(model_cfg, remat=False)
+    params = model.init(jax.random.key(seed))
+    return PPOTrainer(model, rl, params, pack_rows=pack_rows)
+
+
+# ---- supervisor-side worker handle + registry -------------------------------
+@dataclass
+class WorkerHandle:
+    """Supervisor-side record of one worker process (DESIGN.md
+    §Supervision state machine).  ``state`` walks
+    starting -> ready -> (draining -> drained ->) stopping -> stopped,
+    with dead reachable from any live state."""
+    worker_id: str
+    role: str                             # "rollout" | "trainer"
+    proc: Any
+    transport: PipeTransport
+    state: str = "starting"
+    spawned: float = field(default_factory=time.monotonic)
+    last_beat: Optional[float] = None     # None until the first message
+    beats: int = 0
+    stats: Dict = field(default_factory=dict)
+    sent_admits: collections.deque = field(default_factory=collections.deque)
+
+    @property
+    def live(self) -> bool:
+        return self.state in ("starting", "ready", "draining", "drained",
+                              "stopping")
+
+
+class FleetRegistry:
+    """Service discovery for the fleet: who exists, in which role and
+    state, when it last beat — plus the supervision event log the tests
+    and diagnostics read (DESIGN.md §Supervision state machine)."""
+
+    def __init__(self):
+        self._workers: Dict[str, WorkerHandle] = {}
+        self._lock = threading.RLock()
+        self.events: List[Dict] = []
+        # counters folded in from dead/stopped workers so fleet totals
+        # survive respawns
+        self.retired: Dict[str, int] = {"tokens_generated": 0,
+                                        "interruptions": 0}
+
+    def add(self, h: WorkerHandle) -> None:
+        with self._lock:
+            self._workers[h.worker_id] = h
+
+    def get(self, worker_id: str) -> Optional[WorkerHandle]:
+        with self._lock:
+            return self._workers.get(worker_id)
+
+    def workers(self, role: Optional[str] = None) -> List[WorkerHandle]:
+        with self._lock:
+            return [h for h in self._workers.values()
+                    if role is None or h.role == role]
+
+    def live(self, role: Optional[str] = None) -> List[WorkerHandle]:
+        return [h for h in self.workers(role) if h.live]
+
+    def ready(self, role: Optional[str] = None) -> List[WorkerHandle]:
+        return [h for h in self.workers(role) if h.state == "ready"]
+
+    def retire(self, h: WorkerHandle, state: str) -> None:
+        with self._lock:
+            h.state = state
+            for k in self.retired:
+                self.retired[k] += int(h.stats.get(k, 0))
+            h.stats = {}
+
+    def total(self, key: str) -> int:
+        with self._lock:
+            return (self.retired.get(key, 0)
+                    + sum(int(h.stats.get(key, 0))
+                          for h in self._workers.values() if h.live))
+
+    def note(self, kind: str, **info) -> None:
+        with self._lock:
+            self.events.append({"kind": kind, "t": time.monotonic(), **info})
+
+    def events_of(self, kind: str) -> List[Dict]:
+        with self._lock:
+            return [e for e in self.events if e["kind"] == kind]
+
+
+# ---- the fleet runtime ------------------------------------------------------
+class FleetRuntime(SchedulerExecutorMixin):
+    """Process-backed executor for ``AsyncScheduler`` (DESIGN.md §Fleet
+    runtime): N rollout worker processes + M trainer replicas under a
+    supervising main process.  Implements the shared executor protocol
+    (``core/runtime.py``): ``run(n_steps, timeout)`` -> StepLog history,
+    plus the ``SchedulerExecutorMixin`` surface.
+
+    Parameters
+    ----------
+    scheduler : the shared policy core.  Admission planning, Eq. 3
+        accounting and requeue all happen HERE, in the supervisor.
+    engine_factory / engine_factory_kwargs : module-level callable (and
+        picklable kwargs) each rollout worker invokes to build its
+        engine.  For trajectory equivalence with ``ThreadedRuntime``
+        build the engine with ``rng="request"``.
+    trainer_factory / trainer_factory_kwargs : same for trainer replicas.
+    rollout_workers / trainer_procs : initial fleet size (N >= 1, M >= 1).
+    elastic : enable grow/shrink between ``min_workers`` and
+        ``max_workers`` driven by capacity starvation vs
+        ``scheduler.saturated()`` (DESIGN.md §Elastic policy).
+    heartbeat_s / heartbeat_timeout / startup_timeout : supervision
+        cadence (DESIGN.md §Supervision state machine).
+    max_respawns : unexpected worker failures tolerated before the run
+        aborts (crash-loop guard).
+    worker_env : extra environment variables for worker processes (e.g.
+        pinning each worker to one fake XLA device).
+    """
+
+    def __init__(self, *, scheduler: AsyncScheduler,
+                 engine_factory: Callable, engine_factory_kwargs: Dict,
+                 trainer_factory: Callable, trainer_factory_kwargs: Dict,
+                 n_slots: int, rollout_workers: int = 2,
+                 trainer_procs: int = 1,
+                 store: Optional[ParameterStore] = None,
+                 elastic: bool = False, min_workers: int = 1,
+                 max_workers: Optional[int] = None,
+                 elastic_interval: float = 0.25,
+                 heartbeat_s: float = 0.05, heartbeat_timeout: float = 2.0,
+                 startup_timeout: float = 120.0, max_respawns: int = 3,
+                 worker_env: Optional[Dict[str, str]] = None,
+                 idle_sleep: float = 1e-3):
+        assert rollout_workers >= 1 and trainer_procs >= 1
+        self.sched = scheduler
+        self.rl = scheduler.rl
+        self.engine_factory = engine_factory
+        self.engine_factory_kwargs = engine_factory_kwargs
+        self.trainer_factory = trainer_factory
+        self.trainer_factory_kwargs = trainer_factory_kwargs
+        self.n_slots = n_slots
+        self.trainer_procs = trainer_procs
+        self.store = store or ParameterStore()
+        self.store.subscribe(self._broadcast_weights)
+        self.elastic = elastic
+        self.min_workers = min_workers
+        self.max_workers = max_workers or max(rollout_workers * 2,
+                                              rollout_workers + 1)
+        self.elastic_interval = elastic_interval
+        self.heartbeat_s = heartbeat_s
+        self.heartbeat_timeout = heartbeat_timeout
+        self.startup_timeout = startup_timeout
+        self.max_respawns = max_respawns
+        self.worker_env = worker_env
+        self.idle_sleep = idle_sleep
+
+        self.registry = FleetRegistry()
+        self._ctx = mp.get_context("spawn")   # never fork a jax process
+        self._target_workers = rollout_workers
+        self._next_idx: Dict[str, int] = {"rollout": 0, "trainer": 0}
+        self._failures = 0
+        self.respawns = 0
+        self.duplicates_dropped = 0
+        self._done_rids: set = set()
+
+        self._version = 0                 # canonical policy version
+        self._params_np = None            # canonical host-side state
+        self._opt_np = None
+        self._trained_q: Queue = Queue()
+        self._stop = threading.Event()
+        self._errors: List[BaseException] = []
+        self._last_elastic = 0.0
+        self._last_pump_beat: Optional[float] = None
+        self._pump_thread: Optional[threading.Thread] = None
+        self._sup_thread: Optional[threading.Thread] = None
+
+        self.clock = 0.0
+        self._t0 = 0.0
+        # overlap accounting, name-compatible with ThreadedRuntime
+        self.trainer_busy_s = 0.0
+        self.tokens_during_train = 0
+        self._train_busy = False
+
+    # ---- executor protocol surface ----------------------------------------
+    @property
+    def requeued(self) -> int:
+        return self.sched.requeued_total
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    @property
+    def trainer(self):
+        """Duck-typed `.version`/`.params` view of the canonical trainer
+        state, so launch/benchmark code written against
+        ``ThreadedRuntime.trainer`` works unchanged."""
+        return _TrainerView(self)
+
+    def effective_throughput(self) -> float:
+        return self.sched.tokens_consumed() / max(self.clock, 1e-9)
+
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    # ---- spawning ----------------------------------------------------------
+    def _spawn(self, role: str) -> WorkerHandle:
+        idx = self._next_idx[role]
+        self._next_idx[role] = idx + 1
+        worker_id = f"{role}-{idx}"
+        parent_conn, child_conn = self._ctx.Pipe(duplex=True)
+        if role == "rollout":
+            target, factory, kwargs = (_rollout_worker_main,
+                                       self.engine_factory,
+                                       self.engine_factory_kwargs)
+        else:
+            target, factory, kwargs = (_trainer_worker_main,
+                                       self.trainer_factory,
+                                       self.trainer_factory_kwargs)
+        cfg = {"heartbeat_s": self.heartbeat_s,
+               "idle_sleep": self.idle_sleep,
+               "interruptible": self.rl.interruptible}
+        proc = self._ctx.Process(
+            target=target, name=f"areal-{worker_id}",
+            args=(worker_id, child_conn, factory, kwargs, cfg), daemon=True)
+        saved = {}
+        if self.worker_env:               # spawn inherits os.environ: set
+            for k, v in self.worker_env.items():    # around start, restore
+                saved[k] = os.environ.get(k)        # for the supervisor
+                os.environ[k] = v
+        try:
+            proc.start()
+        finally:
+            for k, v in saved.items():
+                if v is None:
+                    os.environ.pop(k, None)
+                else:
+                    os.environ[k] = v
+        child_conn.close()                # supervisor keeps only its end
+        h = WorkerHandle(worker_id=worker_id, role=role, proc=proc,
+                         transport=PipeTransport(parent_conn))
+        self.registry.add(h)
+        self.registry.note("spawn", worker=worker_id, role=role,
+                           pid=proc.pid)
+        return h
+
+    # ---- supervisor loop ----------------------------------------------------
+    def _supervise_loop(self) -> None:
+        try:
+            while not self._stop.is_set():
+                conns = {h.transport.raw: h
+                         for h in self.registry.workers() if h.live}
+                if conns:
+                    for c in mpc.wait(list(conns), timeout=0.05):
+                        self._drain_transport(conns[c])
+                else:
+                    time.sleep(0.05)
+                self._check_liveness()
+                self._plan_admissions()
+                if self.elastic:
+                    self._elastic_tick()
+        except BaseException as e:        # noqa: BLE001 — surfaced in run()
+            self._errors.append(e)
+            self._stop.set()
+
+    def _drain_transport(self, h: WorkerHandle) -> None:
+        """Dispatch every message the worker has delivered.  EOF is not
+        an error here: a crashed worker's already-delivered messages
+        (e.g. a 'finished' sent just before dying) are salvaged so its
+        trajectories are not regenerated (DESIGN.md §Requeue
+        semantics)."""
+        while True:
+            try:
+                msg = h.transport.recv(0.0)
+            except (EOFError, OSError):
+                return                    # peer gone; liveness check acts
+            if msg is None:
+                return
+            self._dispatch(h, msg)
+
+    def _dispatch(self, h: WorkerHandle, msg: tuple) -> None:
+        kind = msg[0]
+        now = time.monotonic()
+        h.last_beat = now                 # any message proves liveness
+        if kind == "heartbeat":
+            h.beats += 1
+            h.stats.update(msg[3])
+        elif kind == "register":
+            if h.state == "starting":
+                h.state = "ready"
+            self.registry.note("register", worker=h.worker_id, role=h.role)
+            if h.role == "rollout" and self._params_np is not None:
+                try:
+                    h.transport.send(("weights", self._version,
+                                      self._params_np))
+                except (OSError, ValueError):
+                    pass
+        elif kind == "admitted":
+            _, _, rids, n, deferred = msg
+            if h.sent_admits:
+                reqs = h.sent_admits.popleft()
+                self.sched.acked(h.worker_id, reqs, n, deferred=deferred)
+        elif kind == "finished":
+            kept = []
+            for f in msg[2]:
+                if f.rid in self._done_rids:
+                    self.duplicates_dropped += 1
+                    continue
+                self._done_rids.add(f.rid)
+                self.sched.finished_inflight(f.rid)
+                kept.append(f)
+            if kept:
+                if self._train_busy:
+                    self.tokens_during_train += sum(len(f.response)
+                                                    for f in kept)
+                self.sched.collect(kept, finish_time=self._now())
+        elif kind == "drained":
+            if h.state == "draining":
+                self.registry.note("drained", worker=h.worker_id)
+                h.state = "stopping"
+                try:
+                    h.transport.send(("stop",))
+                except (OSError, ValueError):
+                    pass
+        elif kind == "stopped":
+            self.registry.retire(h, "stopped")
+        elif kind == "trained":
+            self._trained_q.put(msg)
+        elif kind == "error":
+            self.registry.note("worker-error", worker=h.worker_id,
+                               traceback=msg[2])
+            self._fail_worker(h, reason="error")
+
+    # ---- supervision: liveness, failure, requeue, respawn -------------------
+    def _check_liveness(self) -> None:
+        now = time.monotonic()
+        for h in self.registry.workers():
+            if not h.live:
+                continue
+            if h.state == "stopping":
+                if not h.proc.is_alive():
+                    self.registry.retire(h, "stopped")
+                continue
+            dead = not h.proc.is_alive()
+            if h.last_beat is None:
+                silent = now - h.spawned > self.startup_timeout
+            else:
+                silent = now - h.last_beat > self.heartbeat_timeout
+            if dead or silent:
+                self._fail_worker(h, reason="crashed" if dead else "hung")
+
+    def _fail_worker(self, h: WorkerHandle, reason: str) -> None:
+        """The supervision failure path (DESIGN.md §Supervision state
+        machine): salvage delivered messages, kill what still runs,
+        requeue what the worker owed, respawn a replacement.
+        Idempotent per worker — a second diagnosis (e.g. an 'error'
+        message salvaged while already handling the crash) is a no-op,
+        which is what makes double-requeue impossible."""
+        if h.state in ("dead", "stopped"):
+            return
+        h.state = "dead"                  # re-entrancy guard (see above)
+        self._drain_transport(h)
+        if h.proc.is_alive():             # hung (e.g. SIGSTOP): force out
+            h.proc.terminate()
+            h.proc.join(2.0)
+            if h.proc.is_alive():
+                h.proc.kill()
+                h.proc.join(2.0)
+        hung = reason == "hung"
+        self.registry.note("worker-dead", worker=h.worker_id, role=h.role,
+                           reason=reason, hung=hung)
+        self.registry.retire(h, "dead")
+        h.transport.close()
+        h.sent_admits.clear()
+        if h.role == "rollout":
+            requeued = self.sched.requeue_worker(h.worker_id)
+            if requeued:
+                self.registry.note("requeue", worker=h.worker_id,
+                                   rids=reqs_key(requeued))
+        self._failures += 1
+        if self._failures > self.max_respawns:
+            self._errors.append(RuntimeError(
+                f"fleet exceeded max_respawns={self.max_respawns}: "
+                f"last failure {h.worker_id} ({reason})"))
+            self._stop.set()
+            return
+        if self._stop.is_set():
+            return
+        if h.role == "rollout":
+            alive = len(self.registry.live("rollout"))
+            if alive < self._target_workers:
+                self._spawn("rollout")
+                self.respawns += 1
+        else:
+            alive = len(self.registry.live("trainer"))
+            if alive < self.trainer_procs:
+                self._spawn("trainer")
+                self.respawns += 1
+
+    # ---- admission planning -------------------------------------------------
+    def _plan_admissions(self) -> None:
+        for h in self.registry.ready("rollout"):
+            cap = self.n_slots - len(self.sched.inflight_of(h.worker_id))
+            if cap <= 0:
+                continue
+            reqs = self.sched.plan_admission(cap)
+            if not reqs:
+                return                    # nothing admissible fleet-wide
+            self.sched.assign(h.worker_id, reqs)
+            h.sent_admits.append(reqs)
+            try:
+                h.transport.send(("admit", reqs, self._now()))
+            except (OSError, ValueError):
+                pass                      # liveness check will requeue
+
+    # ---- elastic policy -----------------------------------------------------
+    def _elastic_tick(self) -> None:
+        now = time.monotonic()
+        if now - self._last_elastic < self.elastic_interval:
+            return
+        self._last_elastic = now
+        ready = self.registry.ready("rollout")
+        live = self.registry.live("rollout")
+        draining = [h for h in live if h.state in ("draining", "drained",
+                                                   "stopping")]
+        if self.sched.saturated():
+            # scoring is the bottleneck: shrink (graceful drain — the
+            # victim delivers every in-flight trajectory before stopping,
+            # so nothing unscored is dropped)
+            if len(ready) > self.min_workers and not draining:
+                victim = min(ready, key=lambda h: len(
+                    self.sched.inflight_of(h.worker_id)))
+                victim.state = "draining"
+                self._target_workers = max(self.min_workers,
+                                           self._target_workers - 1)
+                self.registry.note("shrink", worker=victim.worker_id)
+                try:
+                    victim.transport.send(("drain",))
+                except (OSError, ValueError):
+                    pass
+        else:
+            # generation is the bottleneck: grow while every ready
+            # worker is full and Eq. 3 still allows submissions
+            active = [h for h in ready if h.state == "ready"]
+            full = active and all(
+                len(self.sched.inflight_of(h.worker_id)) >= self.n_slots
+                for h in active)
+            growing = any(h.state == "starting" for h in live)
+            if (full and not growing and self.sched.stal.can_submit(1)
+                    and len(live) - len(draining) < self.max_workers):
+                self._target_workers = min(self.max_workers,
+                                           self._target_workers + 1)
+                self._spawn("rollout")
+                self.registry.note("grow", fleet=len(live) + 1)
+
+    # ---- trainer pump -------------------------------------------------------
+    def _pick_trainer(self) -> Optional[WorkerHandle]:
+        while not self._stop.is_set():
+            ready = self.registry.ready("trainer")
+            if ready:
+                return ready[self._version % len(ready)]
+            time.sleep(0.02)
+        return None
+
+    def _train_remote(self, batch) -> Optional[tuple]:
+        """Ship one batch to a trainer replica and wait for the reply.
+        The batch stays owned by the pump until a reply lands, so a
+        replica crash mid-step costs a resend, never a lost batch."""
+        msg_out = ("train", batch, self._params_np, self._opt_np,
+                   self._version)
+        while not self._stop.is_set():
+            replica = self._pick_trainer()
+            if replica is None:
+                return None
+            self._train_busy = True
+            t0 = time.perf_counter()
+            try:
+                replica.transport.send(msg_out)
+            except (OSError, ValueError):
+                self._train_busy = False
+                continue
+            reply = None
+            while reply is None:
+                try:
+                    reply = self._trained_q.get(timeout=0.2)
+                except Empty:
+                    if self._stop.is_set() or not replica.live:
+                        break
+            self._train_busy = False
+            self.trainer_busy_s += time.perf_counter() - t0
+            if reply is None:
+                self.registry.note("train-resend", worker=replica.worker_id)
+                continue                  # replica died mid-step: resend
+            return reply
+        return None
+
+    def _pump_loop(self, target: int) -> None:
+        try:
+            while self._version < target and not self._stop.is_set():
+                self._last_pump_beat = time.monotonic()
+                batch = self.sched.buffer.pop_batch(self.rl.batch_size,
+                                                    timeout=0.2)
+                if batch is None:
+                    if self.sched.buffer.closed:
+                        break
+                    continue
+                self.sched.record_consumed(batch)
+                reply = self._train_remote(batch)
+                if reply is None:
+                    break
+                _, _, new_version, metrics, params_np, opt_np = reply
+                self._params_np, self._opt_np = params_np, opt_np
+                self._version = new_version
+                self.store.publish(new_version, params_np)
+                self.sched.note_policy_update(new_version)
+                self.sched.log_step(
+                    metrics, version=new_version, clock=self._now(),
+                    gen_tokens_total=self.registry.total("tokens_generated"),
+                    interruptions=self.registry.total("interruptions"))
+        except BaseException as e:        # noqa: BLE001 — surfaced in run()
+            self._errors.append(e)
+        finally:
+            self._stop.set()
+
+    # ---- weight publication -------------------------------------------------
+    def _broadcast_weights(self, version: int, params) -> None:
+        """ParameterStore subscriber: fan one publication out to every
+        live rollout worker (DESIGN.md §Weight-publication path; the
+        multi-subscriber form of the threaded runtime's store poll)."""
+        for h in self.registry.workers("rollout"):
+            if h.state not in ("ready", "draining"):
+                continue
+            try:
+                h.transport.send(("weights", version, params))
+            except (OSError, ValueError):
+                pass                      # liveness check handles the rest
+
+    # ---- diagnostics --------------------------------------------------------
+    def liveness(self) -> List[RoleLiveness]:
+        """Per-role liveness snapshot (shared diagnostic format with
+        ``ThreadedRuntime.run``'s TimeoutError — DESIGN.md §Supervision
+        state machine)."""
+        now = time.monotonic()
+        roles = []
+        for h in self.registry.workers():
+            if h.state in ("stopped",):
+                continue
+            age = None if h.last_beat is None else now - h.last_beat
+            st = h.stats
+            detail = f"state={h.state}"
+            if h.role == "rollout" and st:
+                detail += (f" active={st.get('n_active', '?')}"
+                           f" v={st.get('version', '?')}")
+            roles.append(RoleLiveness(f"{h.role}:{h.worker_id}",
+                                      h.proc.is_alive(), age, detail))
+        pump = self._pump_thread
+        pump_age = (None if self._last_pump_beat is None
+                    else now - self._last_pump_beat)
+        roles.append(RoleLiveness(
+            "trainer-pump", bool(pump and pump.is_alive()), pump_age,
+            f"version={self._version}"))
+        return roles
+
+    # ---- entry point --------------------------------------------------------
+    def run(self, n_steps: int,
+            timeout: Optional[float] = None) -> List[StepLog]:
+        """Run until the canonical trainer state advances ``n_steps``
+        versions.  The fleet stays up between runs (workers keep their
+        in-flight slots, exactly like ``ThreadedRuntime``'s engine) —
+        call ``close()`` when done.  On ``timeout`` the whole fleet is
+        torn down and TimeoutError carries the per-role liveness
+        diagnostics (shared format with ``ThreadedRuntime.run``)."""
+        target = self._version + n_steps
+        self._stop.clear()
+        self._errors.clear()
+        svc = getattr(self.sched, "reward_service", None)
+        if svc is not None:
+            svc.start()
+        self._t0 = time.perf_counter()
+        for _ in range(self.trainer_procs
+                       - len(self.registry.live("trainer"))):
+            self._spawn("trainer")
+        for _ in range(self._target_workers
+                       - len(self.registry.live("rollout"))):
+            self._spawn("rollout")
+        self._sup_thread = threading.Thread(
+            target=self._supervise_loop, name="areal-fleet-supervisor",
+            daemon=True)
+        self._pump_thread = threading.Thread(
+            target=self._pump_loop, args=(target,),
+            name="areal-fleet-pump", daemon=True)
+        self._sup_thread.start()
+        self._pump_thread.start()
+        self._pump_thread.join(timeout)
+        if self._pump_thread.is_alive():
+            liveness = format_liveness(self.liveness())
+            self._stop.set()
+            self._pump_thread.join(10.0)
+            self.close()
+            self.clock = time.perf_counter() - self._t0
+            raise TimeoutError(
+                f"fleet runtime exceeded {timeout}s at version "
+                f"{self._version}/{target} "
+                f"(buffered={len(self.sched.buffer)}, "
+                f"unscored={self.sched.pending_rewards()}, "
+                f"requeued={self.requeued}, respawns={self.respawns}): "
+                + liveness)
+        self._sup_thread.join(10.0)
+        self.clock = time.perf_counter() - self._t0
+        if self._errors:
+            self.close()
+            raise self._errors[0]
+        return self.sched.history
+
+    def close(self) -> None:
+        """Tear the fleet down (idempotent): stop every worker process,
+        then the supervisor thread."""
+        self._shutdown()
+
+    def _shutdown(self) -> None:
+        """Stop every worker process, then the supervisor thread.  A
+        worker wedged mid-send on a full pipe cannot see 'stop'; the
+        escalation terminate -> kill bounds shutdown regardless."""
+        self._stop.set()
+        for h in self.registry.workers():
+            if h.live:
+                h.state = "stopping"
+                try:
+                    h.transport.send(("stop",))
+                except (OSError, ValueError):
+                    pass
+        deadline = time.monotonic() + 5.0
+        for h in self.registry.workers():
+            h.proc.join(max(0.0, deadline - time.monotonic()))
+            if h.proc.is_alive():
+                h.proc.terminate()
+                h.proc.join(1.0)
+            if h.proc.is_alive():
+                h.proc.kill()
+                h.proc.join(1.0)
+            if h.state != "stopped":
+                self.registry.retire(h, "stopped")
+        if self._sup_thread is not None:
+            self._sup_thread.join(5.0)
+        for h in self.registry.workers():
+            h.transport.close()
+
+
+class _TrainerView:
+    """``.version``/``.params`` proxy over the fleet's canonical trainer
+    state (see ``FleetRuntime.trainer``)."""
+
+    def __init__(self, rt: FleetRuntime):
+        self._rt = rt
+
+    @property
+    def version(self) -> int:
+        return self._rt._version
+
+    @property
+    def params(self):
+        return _to_device(self._rt._params_np)

@@ -1,4 +1,5 @@
-"""Interruptible rollout worker (Section 4.1).
+"""Interruptible rollout worker (Section 4.1; DESIGN.md
+§Interruptible generation).
 
 A continuous-batching generation engine over ``n_slots`` concurrent
 requests with two request types, mirroring the paper:
@@ -176,7 +177,7 @@ class RolloutEngine:
         self.continuations = 0             # multi-turn episode extensions
         self.continuation_tokens = 0       # appended-span tokens ingested
 
-        # multi-turn hook (DESIGN.md §Environments and reward service):
+        # multi-turn hook (DESIGN.md §Multi-turn continuation in the engine):
         # fn(finished, turn, budget) -> env tokens to
         # append (the trajectory continues in place, reusing its cache
         # and pool blocks) or None to finish.  Appending re-enters the

@@ -1,8 +1,9 @@
 """Threaded disaggregated runtime (DESIGN.md §Async runtime): REAL
 concurrency for the AReaL pipeline.
 
-Two threads drive the shared scheduling core (core/scheduler.py) on
-disjoint device submeshes (launch/disaggregated.py):
+Thread ownership (DESIGN.md §Thread ownership) — two threads drive the
+shared scheduling core (core/scheduler.py) on disjoint device submeshes
+(launch/disaggregated.py):
 
   * the **rollout thread** owns the ``RolloutEngine`` (single-driver
     contract) on the rollout submesh: it admits staleness-admissible
@@ -18,7 +19,7 @@ disjoint device submeshes (launch/disaggregated.py):
     trainer thread, off the generation critical path — into the
     ``ParameterStore``.
 
-Weight-publication path:
+Weight-publication path (DESIGN.md §Weight-publication path):
 
     trainer thread                       rollout thread
     ──────────────                       ──────────────
@@ -48,11 +49,68 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import List, Optional
+from dataclasses import dataclass
+from typing import List, Optional, Protocol, runtime_checkable
 
 from repro.core.scheduler import (AsyncScheduler, SchedulerExecutorMixin,
                                   StepLog)
 from repro.core.weights import ParameterStore
+
+
+@runtime_checkable
+class Executor(Protocol):
+    """The executor protocol every runtime implements (DESIGN.md §Async
+    runtime; the fleet executor in DESIGN.md §Fleet runtime): drive the
+    shared ``AsyncScheduler`` policy core until the trainer has produced
+    ``n_steps`` more policy versions, bounded by a wall-clock
+    ``timeout``.  Implementations also expose the
+    ``SchedulerExecutorMixin`` attribute surface (buffer/stal/history/
+    reward_service/...) plus ``clock`` (wall or virtual seconds of the
+    last run) and ``effective_throughput()``.
+
+    Implementations: ``core/controller.py::AsyncRLController``
+    (virtual clock), ``core/runtime.py::ThreadedRuntime`` (two
+    threads), ``core/fleet.py::FleetRuntime`` (worker processes)."""
+
+    sched: AsyncScheduler
+    clock: float
+
+    def run(self, n_steps: int,
+            timeout: Optional[float] = None) -> List[StepLog]: ...
+
+    def effective_throughput(self) -> float: ...
+
+
+@dataclass
+class RoleLiveness:
+    """Per-role liveness snapshot for stall diagnostics (DESIGN.md
+    §Supervision state machine): which thread/process a timed-out run
+    should blame.  ``beat_age_s`` is seconds since the role's last
+    heartbeat — the loop-top touch for threads, the heartbeat message
+    for fleet workers; None means it never beat."""
+    role: str
+    alive: bool
+    beat_age_s: Optional[float]
+    detail: str = ""
+
+
+def format_liveness(roles: List[RoleLiveness]) -> str:
+    """Render per-role liveness into the single diagnostic line shared
+    by ``ThreadedRuntime.run``'s TimeoutError and the fleet
+    supervisor's: 'role=trainer DEAD last-beat 12.3s ago (version=4)'.
+    The stalest role sorts first so the culprit leads the message."""
+    def order(r: RoleLiveness):
+        age = r.beat_age_s if r.beat_age_s is not None else float("inf")
+        return (r.alive, -age)
+
+    parts = []
+    for r in sorted(roles, key=order):
+        beat = ("never beat" if r.beat_age_s is None
+                else f"last-beat {r.beat_age_s:.1f}s ago")
+        state = "alive" if r.alive else "DEAD"
+        detail = f" ({r.detail})" if r.detail else ""
+        parts.append(f"role={r.role} {state} {beat}{detail}")
+    return "; ".join(parts) if parts else "no roles running"
 
 
 class ThreadedRuntime(SchedulerExecutorMixin):
@@ -87,6 +145,9 @@ class ThreadedRuntime(SchedulerExecutorMixin):
         self._t0 = 0.0
         self._stop = threading.Event()
         self._errors: List[BaseException] = []
+        # per-role loop-top heartbeats: rollout/trainer touch these every
+        # iteration so a timed-out run can say WHICH side stalled
+        self._last_beat = {}
 
         # overlap accounting (read by benchmarks/async_overlap.py):
         # trainer_busy_s is wall time inside train_step; tokens_during_train
@@ -140,6 +201,7 @@ class ThreadedRuntime(SchedulerExecutorMixin):
     def _rollout_loop(self) -> None:
         try:
             while not self._stop.is_set():
+                self._last_beat["rollout"] = time.monotonic()
                 if not self._rollout_tick():
                     time.sleep(self.idle_sleep)
         except BaseException as e:       # noqa: BLE001 — surfaced in run()
@@ -177,6 +239,7 @@ class ThreadedRuntime(SchedulerExecutorMixin):
     def _trainer_loop(self, target: int) -> None:
         try:
             while self.trainer.version < target and not self._stop.is_set():
+                self._last_beat["trainer"] = time.monotonic()
                 batch = self.sched.buffer.pop_batch(self.rl.batch_size,
                                                     timeout=0.2)
                 if batch is None:
@@ -217,6 +280,20 @@ class ThreadedRuntime(SchedulerExecutorMixin):
         trainer.start()
         trainer.join(timeout)
         if trainer.is_alive():
+            # sample liveness BEFORE signalling stop — the diagnostics
+            # should describe the stall, not the shutdown
+            now = time.monotonic()
+
+            def age(role: str) -> Optional[float]:
+                beat = self._last_beat.get(role)
+                return None if beat is None else now - beat
+
+            liveness = [
+                RoleLiveness("rollout", rollout.is_alive(), age("rollout"),
+                             f"active={self.engine.n_active}"),
+                RoleLiveness("trainer", trainer.is_alive(), age("trainer"),
+                             f"version={self.trainer.version}"),
+            ]
             # _stop alone unblocks both threads (the trainer's pop_batch
             # polls on a short timeout), so the buffer stays open and the
             # runtime can be re-run with a larger deadline
@@ -229,7 +306,8 @@ class ThreadedRuntime(SchedulerExecutorMixin):
                 f"{self.trainer.version}/{target} "
                 f"(buffered={len(self.sched.buffer)}, "
                 f"active={self.engine.n_active}, "
-                f"unscored={self.sched.pending_rewards()})")
+                f"unscored={self.sched.pending_rewards()}): "
+                + format_liveness(liveness))
         rollout.join(30.0)
         self.clock = time.perf_counter() - self._t0
         if rollout.is_alive():

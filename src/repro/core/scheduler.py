@@ -19,7 +19,7 @@ training step publishes — is independent of *how* the pipeline executes.
   * weight-publication accounting: each completed train step advances
     the staleness controller's policy version and appends a ``StepLog``.
 
-It owns NO transport: no clock, no threads, no device placement.  Three
+It owns NO transport: no clock, no threads, no device placement.  Four
 executors drive it —
 
   * ``core/controller.py::AsyncRLController`` — the virtual-clock
@@ -27,12 +27,24 @@ executors drive it —
     ``TimingModel``; produces every timing figure);
   * ``core/runtime.py::ThreadedRuntime`` — real concurrency: a rollout
     thread and a trainer thread on disjoint device submeshes;
-  * the same two with ``core/simulator.py``'s stub engine/trainer for
+  * ``core/fleet.py::FleetRuntime`` — multi-process: N rollout worker
+    processes and M trainer replicas under a supervisor (DESIGN.md
+    §Fleet runtime), using the per-worker in-flight accounting and
+    requeue API below;
+  * the same with ``core/simulator.py``'s stub engine/trainer for
     cluster-scale discrete-event studies.
 
 All methods are thread-safe: the virtual executor calls them from one
 thread, the threaded runtime from two (admission/collection on the
-rollout thread, batch formation/publication on the trainer thread).
+rollout thread, batch formation/publication on the trainer thread), the
+fleet supervisor from its receiver and trainer-pump threads.
+
+Staleness accounting (DESIGN.md §Staleness accounting with
+pending-unscored trajectories): Eq. 3's numerator ``n_submitted`` counts
+a request exactly once, at first hand-off toward an engine, and never
+decrements — finished-but-unscored trajectories and crashed-worker
+requeues both stay inside N_r.  Requests carry a private ``_counted``
+flag so a requeued or re-offered request is never double-counted.
 """
 from __future__ import annotations
 
@@ -100,6 +112,10 @@ class AsyncScheduler:
         self._next_rid = 0
         self._deferred: List[Dict] = []    # planned but not yet admitted
         self._starved = False              # engine bounced work on resources
+        # fleet executor state (DESIGN.md §Fleet runtime): per-worker
+        # in-flight assignment map for crash requeue, rid -> (worker, req)
+        self._assigned: Dict[int, tuple] = {}
+        self.requeued_total = 0
         self._lock = threading.RLock()
 
     # ---- admission (rollout side) -----------------------------------------
@@ -120,21 +136,33 @@ class AsyncScheduler:
         Pending-reward stage: trajectories finished but not yet scored
         by the async reward service remain part of Eq. 3's N_r —
         ``n_submitted`` counts at submission and never decrements, so
-        async scoring cannot silently loosen the staleness bound.  On
-        top of that, while the service backlog is at its bound
-        (``saturated()``) fresh stream pulls stop entirely: a slow
-        verifier throttles admission instead of growing an unbounded
-        unscored queue (DESIGN.md §Environments and reward service)."""
-        backpressure = (self.reward_service is not None
-                        and self.reward_service.saturated())
+        async scoring cannot silently loosen the staleness bound
+        (DESIGN.md §Staleness accounting with pending-unscored
+        trajectories).  On top of that, while the service backlog is at
+        its bound (``saturated()``) fresh stream pulls stop entirely: a
+        slow verifier throttles admission instead of growing an
+        unbounded unscored queue (DESIGN.md §Environments and reward
+        service).
+
+        Requeued requests (fleet crash recovery) sit at the FRONT of the
+        deferred queue already counted in ``n_submitted``; they bypass
+        the ``can_submit`` gate — they are already inside N_r, and
+        gating them again could deadlock a run sitting exactly at the
+        staleness bound."""
+        backpressure = self.saturated()
         with self._lock:
             reqs: List[Dict] = []
-            while (self._deferred and n_free > len(reqs)
-                   and self.stal.can_submit(len(reqs) + 1)):
+            n_new = 0                      # not-yet-counted reqs planned
+            while self._deferred and n_free > len(reqs):
+                counted = self._deferred[0].get("_counted", False)
+                if not counted and not self.stal.can_submit(n_new + 1):
+                    break
                 reqs.append(self._deferred.pop(0))
+                n_new += 0 if counted else 1
             while (not self._starved and not backpressure
                    and n_free > len(reqs)
-                   and self.stal.can_submit(len(reqs) + 1)):
+                   and self.stal.can_submit(n_new + 1)):
+                n_new += 1
                 prob, gid = self.stream.next_request()
                 reqs.append({"rid": self._next_rid, "prompt_id": gid,
                              "prompt": prob.prompt_tokens,
@@ -150,12 +178,97 @@ class AsyncScheduler:
         (``RolloutEngine.stats()["deferred_last"]``): while nonzero the
         scheduler stops pulling fresh stream work and only retries the
         backlog, instead of re-probing ``free_slots()`` — which cannot
-        see block-pool headroom (DESIGN.md §Chunked prefill)."""
+        see block-pool headroom (DESIGN.md §Chunked prefill).
+
+        Requests already counted into Eq. 3 (fleet pre-ack accounting or
+        a crash requeue) are skipped by the submission count — a request
+        enters ``n_submitted`` exactly once however many times it is
+        re-offered."""
         with self._lock:
-            self.stal.submit(n)
+            taken = reqs[:n]
+            n_uncounted = sum(1 for r in taken if not r.get("_counted"))
+            if n_uncounted:
+                self.stal.submit(n_uncounted)
+            for r in taken:
+                r["_counted"] = True
             if n < len(reqs):
                 self._deferred[:0] = reqs[n:]
             self._starved = deferred > 0
+
+    def saturated(self) -> bool:
+        """True while the async reward service's scoring backlog is at
+        its bound — the admission-backpressure signal (DESIGN.md
+        §Environments and reward service) and the fleet's elastic
+        shrink signal (DESIGN.md §Elastic policy)."""
+        return (self.reward_service is not None
+                and self.reward_service.saturated())
+
+    # ---- per-worker in-flight accounting (fleet executor) -----------------
+    # DESIGN.md §Requeue semantics: the supervisor counts a request into
+    # Eq. 3 when it is SENT to a worker (assign), not when the worker
+    # acks it — between send and ack the request is in flight on the
+    # transport and must already bound fresh admission.  The assignment
+    # map is the single source of truth for what a crashed worker owes.
+
+    def assign(self, worker: str, reqs: List[Dict]) -> None:
+        """Record ``reqs`` as sent to ``worker`` and count any
+        not-yet-counted ones into Eq. 3's numerator.  Idempotent per
+        request: a requeued request keeps its ``_counted`` flag."""
+        with self._lock:
+            n_uncounted = sum(1 for r in reqs if not r.get("_counted"))
+            if n_uncounted:
+                self.stal.submit(n_uncounted)
+            for r in reqs:
+                r["_counted"] = True
+                self._assigned[r["rid"]] = (worker, r)
+
+    def acked(self, worker: str, reqs: List[Dict], n: int,
+              deferred: int = 0) -> None:
+        """Worker accepted the first ``n`` of a previously ``assign``-ed
+        batch: the remainder leaves the worker's in-flight set and goes
+        back to the FRONT of the deferred queue (still counted — no
+        double submission on retry).  ``deferred`` as in ``admitted``."""
+        with self._lock:
+            rest = reqs[n:]
+            for r in rest:
+                self._assigned.pop(r["rid"], None)
+            if rest:
+                self._deferred[:0] = rest
+            self._starved = deferred > 0
+
+    def finished_inflight(self, rid: int) -> bool:
+        """A trajectory for ``rid`` arrived: drop it from the in-flight
+        assignment map so a later crash of its worker cannot requeue an
+        already-delivered request.  Returns False for unknown rids
+        (e.g. a duplicate delivery the supervisor already dropped)."""
+        with self._lock:
+            return self._assigned.pop(rid, None) is not None
+
+    def inflight_of(self, worker: str) -> List[int]:
+        """rids currently assigned to ``worker`` (diagnostics/elastic)."""
+        with self._lock:
+            return sorted(rid for rid, (w, _) in self._assigned.items()
+                          if w == worker)
+
+    def requeue_worker(self, worker: str) -> List[Dict]:
+        """Crash recovery (DESIGN.md §Requeue semantics): move every
+        request still assigned to ``worker`` to the front of the
+        deferred queue, in rid order, WITHOUT touching ``n_submitted``
+        (they are still in flight for Eq. 3).  Idempotent — a second
+        call for the same worker, or a requeue racing a late delivery,
+        finds the map entries gone and returns [].  The re-admission
+        path is the ordinary ``plan_admission``; the engine's
+        interrupt/re-prefill machinery regenerates the trajectory from
+        the prompt on whichever worker picks it up."""
+        with self._lock:
+            reqs = sorted((r for rid, (w, r) in self._assigned.items()
+                           if w == worker), key=lambda r: r["rid"])
+            for r in reqs:
+                del self._assigned[r["rid"]]
+            if reqs:
+                self._deferred[:0] = reqs
+                self.requeued_total += len(reqs)
+            return reqs
 
     # ---- reward collection (rollout side) ---------------------------------
     def collect(self, finished, finish_time: float) -> None:

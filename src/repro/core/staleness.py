@@ -8,6 +8,13 @@ with N_r the total number of trajectories generated or in flight, B the
 training batch size, i the current policy version and eta the maximum
 permitted staleness.  eta = 0 degenerates to synchronous RL: exactly one
 batch may be in flight per policy version.
+
+What counts toward N_r is the scheduler's job, not this controller's:
+``n_submitted`` is incremented exactly once per request (first hand-off
+toward an engine) and NEVER decremented — generating, interrupted,
+requeued-after-crash and finished-but-unscored requests all remain
+inside N_r until trained on (DESIGN.md §Staleness accounting with
+pending-unscored trajectories).  The controller only answers Eq. 3.
 """
 from __future__ import annotations
 

@@ -1,15 +1,25 @@
 """Versioned parameter store — AReaL's 'distributed storage' between
-trainer workers and rollout workers.
+trainer workers and rollout workers (DESIGN.md §Weight-publication
+path).
 
 The trainer publishes (version, params); rollout workers pull the latest.
 Optionally spills each published version to a checkpoint directory.
 ``history`` keeps the last few versions so the proximal-policy recompute
 and debugging can reference them.
+
+Multi-subscriber publication (DESIGN.md §Fleet runtime): in-process
+executors poll ``latest()`` at step boundaries, but a process fleet
+needs push — ``subscribe`` registers a callback invoked on every
+``publish`` with ``(version, params)``.  The fleet supervisor uses one
+subscriber to fan a published version out to every live rollout worker
+over its transport; an RPC/parameter-server backend would register its
+own broadcaster the same way.  Callbacks run outside the store lock on
+the publishing thread, in registration order.
 """
 from __future__ import annotations
 
 import threading
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro import checkpoint
 
@@ -20,10 +30,17 @@ class ParameterStore:
         self._lock = threading.Lock()
         self._latest: Optional[Tuple[int, Any]] = None
         self._history: Dict[int, Any] = {}
+        self._subscribers: List[Callable[[int, Any], None]] = []
         self.keep = keep
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
         self.publishes = 0
+
+    def subscribe(self, fn: Callable[[int, Any], None]) -> None:
+        """Register a publication callback (fleet weight broadcast —
+        see module docstring).  Safe to call while publishing."""
+        with self._lock:
+            self._subscribers.append(fn)
 
     def publish(self, version: int, params, meta: Optional[Dict] = None) -> None:
         with self._lock:
@@ -35,9 +52,12 @@ class ParameterStore:
                 if v != version:
                     del self._history[v]
             self.publishes += 1
+            subscribers = list(self._subscribers)
         if self.ckpt_dir and self.ckpt_every and version % self.ckpt_every == 0:
             checkpoint.save(f"{self.ckpt_dir}/v{version:06d}.npz", params,
                             meta={"version": version, **(meta or {})})
+        for fn in subscribers:             # outside the lock: callbacks
+            fn(version, params)            # may do slow transport sends
 
     def latest(self) -> Optional[Tuple[int, Any]]:
         with self._lock:

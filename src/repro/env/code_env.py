@@ -1,7 +1,8 @@
 """Code-verifier environment: the generated snippet is executed against
 unit-test cases in a restricted subprocess sandbox, with a rule-based
 pass/fail reward — the DeepCoder recipe at laptop scale (DESIGN.md
-§Environments and reward service).
+§Environments and reward service; the isolation layers below are
+DESIGN.md §Sandbox policy).
 
 Task shape (learnable by the char-level toy LM: the target expression
 appears verbatim in the prompt, so RL can learn to extract it):

@@ -1,7 +1,8 @@
 """Asynchronous reward service: a host-side worker pool that scores
 finished generations OFF the rollout/trainer critical path (Section 4.1:
 "reward computation latency is pipelined behind generation"; DESIGN.md
-§Environments and reward service).
+§Environments and reward service, queue discipline and locking in
+DESIGN.md §Queue and thread ownership).
 
 Data flow::
 

@@ -41,6 +41,16 @@ def split_devices(train_fraction: float = 0.25, *, model_parallel: int = 1,
     return mk(devices[:n_roll]), mk(devices[n_roll:n_roll + n_train])
 
 
+def host_weights(params):
+    """Device -> host copy of a param tree as plain numpy (DESIGN.md
+    §Fleet runtime): the picklable form the fleet supervisor ships over
+    worker transports when publishing one trainer version to MANY
+    rollout subscribers — the cross-PROCESS analogue of
+    ``push_weights``'s cross-submesh device_put.  An RPC backend would
+    serialize exactly this tree."""
+    return jax.tree.map(np.asarray, params)
+
+
 def push_weights(params, rollout_mesh: Mesh, specs=None):
     """Trainer -> rollout weight publication: one device_put of the
     (possibly resharded) param tree onto the rollout submesh.  With

@@ -24,9 +24,16 @@ scale and under a selected executor:
     disaggregation).  Run with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` for a local
     multi-device pool.
+  * ``--runtime fleet``: the multi-process elastic fleet
+    (core/fleet.py, DESIGN.md §Fleet runtime): ``--rollout-workers N``
+    rollout processes and ``--trainer-procs M`` trainer replicas under
+    a supervising parent, with heartbeats, crash requeue/respawn and
+    (``--elastic``) reward-backlog-driven grow/shrink.  Engines run
+    with per-request RNG so trajectories are reproducible across any
+    worker placement.
 
 On a cluster, each pod runs this entry point under its own process
-group.
+group.  Every flag is documented in docs/OPERATIONS.md.
 """
 from __future__ import annotations
 
@@ -85,7 +92,9 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
                  run_timeout: float = 0.0, final_eval: bool = True,
                  prefill_chunk: int = 0, env: str = "",
                  reward_workers: int = 0, reward_latency: float = 0.0,
-                 reward_backlog: int = 64, sandbox_timeout: float = 2.0):
+                 reward_backlog: int = 64, sandbox_timeout: float = 2.0,
+                 rollout_workers: int = 2, trainer_procs: int = 1,
+                 elastic: bool = False, min_workers: int = 1):
     """End-to-end AReaL training on a verifiable environment.
 
     ``env`` selects the workload (DESIGN.md §Environments and reward
@@ -98,9 +107,10 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
     continuation hook (requires chunked prefill; enabled automatically).
 
     Returns (executor, trainer, reward_service); the executor is the
-    virtual-clock controller or the threaded runtime depending on
-    ``runtime`` — both expose .history/.clock/.effective_throughput()."""
-    assert runtime in ("virtual", "threaded"), runtime
+    virtual-clock controller, the threaded runtime or the process fleet
+    depending on ``runtime`` — all expose
+    .history/.clock/.effective_throughput()."""
+    assert runtime in ("virtual", "threaded", "fleet"), runtime
     assert env in ("", "math", "code", "multiturn"), env
     full_cfg = get_model_config(arch)
     cfg = full_cfg
@@ -129,12 +139,14 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
             prefill_chunk = prompt_len
 
     model = build_model(cfg, remat=False)
-    params = model.init(jax.random.key(seed))
-    engine = RolloutEngine(model, params, n_slots=n_slots,
-                           prompt_len=prompt_len, max_gen_len=max_gen_len,
-                           seed=seed, prefill_chunk=prefill_chunk,
-                           continuation=continuation)
-    trainer = PPOTrainer(model, rl, params)
+    engine = trainer = None
+    if runtime != "fleet":                 # fleet workers build their own
+        params = model.init(jax.random.key(seed))
+        engine = RolloutEngine(model, params, n_slots=n_slots,
+                               prompt_len=prompt_len, max_gen_len=max_gen_len,
+                               seed=seed, prefill_chunk=prefill_chunk,
+                               continuation=continuation)
+        trainer = PPOTrainer(model, rl, params)
     store = ParameterStore(ckpt_dir=ckpt_dir or None,
                            ckpt_every=10 if ckpt_dir else 0)
     if environment is None:
@@ -145,10 +157,10 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
         stream = EnvPromptStream(environment, answers_per_prompt)
     service = None
     if reward_workers > 0:
-        if runtime != "threaded":
+        if runtime not in ("threaded", "fleet"):
             raise ValueError(
-                "--reward-workers needs --runtime threaded (the virtual "
-                "executor models pipelined verification with "
+                "--reward-workers needs --runtime threaded or fleet (the "
+                "virtual executor models pipelined verification with "
                 "reward_latency instead)")
         from repro.env import AsyncRewardService
         service = AsyncRewardService(environment, n_workers=reward_workers,
@@ -184,6 +196,32 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
         ctl = ThreadedRuntime(engine=engine, trainer=trainer, scheduler=sched,
                               store=store, rollout_mesh=roll_mesh)
         ctl.run(steps, timeout=run_timeout or None)
+    elif runtime == "fleet":
+        from repro.core import fleet as fleet_mod
+        if continuation is not None:
+            raise ValueError(
+                "--runtime fleet does not support multi-turn environments "
+                "(the continuation hook would have to live inside the "
+                "rollout worker process)")
+        ctl = fleet_mod.FleetRuntime(
+            scheduler=sched,
+            engine_factory=fleet_mod.build_engine,
+            engine_factory_kwargs=dict(
+                model_cfg=cfg, seed=seed,
+                engine_kwargs=dict(n_slots=n_slots, prompt_len=prompt_len,
+                                   max_gen_len=max_gen_len,
+                                   prefill_chunk=prefill_chunk,
+                                   rng="request")),
+            trainer_factory=fleet_mod.build_trainer,
+            trainer_factory_kwargs=dict(model_cfg=cfg, rl=rl, seed=seed),
+            n_slots=n_slots, rollout_workers=rollout_workers,
+            trainer_procs=trainer_procs, store=store, elastic=elastic,
+            min_workers=min_workers)
+        try:
+            ctl.run(steps, timeout=run_timeout or None)
+        finally:
+            ctl.close()
+        trainer = ctl.trainer              # canonical post-run state view
     else:
         # virtual-clock cost model for a small pod (sec 7.1: 75/25 split);
         # costs reflect the TARGET architecture's size, not the reduced model
@@ -199,7 +237,8 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
         ctl = AsyncRLController(engine=engine, trainer=trainer,
                                 scheduler=sched, rl=rl, timing=timing)
         ctl.run(steps)
-    if scale == "laptop" and final_eval and env in ("", "math"):
+    if (scale == "laptop" and final_eval and env in ("", "math")
+            and trainer.params is not None):
         # paper protocol: evaluate the FINAL checkpoint on held-out problems
         from repro.core.evaluate import evaluate
         res = evaluate(model, trainer.params, n_problems=64,
@@ -217,9 +256,24 @@ def main():
     ap.add_argument("--steps", type=int, default=25)
     ap.add_argument("--scale", default="laptop", choices=["laptop", "pod"])
     ap.add_argument("--runtime", default="virtual",
-                    choices=["virtual", "threaded"],
-                    help="virtual-clock executor (deterministic) or the "
-                         "threaded disaggregated runtime (real concurrency)")
+                    choices=["virtual", "threaded", "fleet"],
+                    help="virtual-clock executor (deterministic), the "
+                         "threaded disaggregated runtime (real concurrency) "
+                         "or the multi-process elastic fleet (supervised "
+                         "worker processes, DESIGN.md §Fleet runtime)")
+    ap.add_argument("--rollout-workers", type=int, default=2,
+                    help="--runtime fleet: initial number of rollout worker "
+                         "processes")
+    ap.add_argument("--trainer-procs", type=int, default=1,
+                    help="--runtime fleet: trainer replica processes "
+                         "(stateless executors — any M reproduces the "
+                         "single-trainer step sequence)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="--runtime fleet: grow the rollout fleet while "
+                         "generation starves admission, shrink (graceful "
+                         "drain) while the reward backlog saturates")
+    ap.add_argument("--min-workers", type=int, default=1,
+                    help="--runtime fleet --elastic: floor for shrink")
     ap.add_argument("--train-fraction", type=float, default=0.25,
                     help="trainer share of the device pool for the threaded "
                          "runtime's submesh split (Sec 7.1: 0.25)")
@@ -283,7 +337,10 @@ def main():
         env=args.env, reward_workers=args.reward_workers,
         reward_latency=args.reward_latency,
         reward_backlog=args.reward_backlog,
-        sandbox_timeout=args.sandbox_timeout)
+        sandbox_timeout=args.sandbox_timeout,
+        rollout_workers=args.rollout_workers,
+        trainer_procs=args.trainer_procs, elastic=args.elastic,
+        min_workers=args.min_workers)
     out = {
         "arch": args.arch, "runtime": args.runtime, "steps": trainer.version,
         "wall_s": round(time.time() - t0, 1),
@@ -309,6 +366,10 @@ def main():
             ctl.trainer_busy_s / max(ctl.clock, 1e-9), 4)
         out["tokens_during_train"] = ctl.tokens_during_train
         out["n_devices"] = len(jax.devices())
+    if args.runtime == "fleet":
+        out["respawns"] = ctl.respawns
+        out["requeued"] = ctl.requeued
+        out["fleet_events"] = len(ctl.registry.events)
     print(json.dumps(out))
 
 

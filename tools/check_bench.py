@@ -92,6 +92,23 @@ SPECS: Dict[str, List[Dict[str, Any]]] = {
         {"path": "code_env.completed", "equals": True},
         {"path": "code_env.sandbox_verifications", "min": 1},
     ],
+    "BENCH_fleet_overlap.json": [
+        # PR 6 acceptance: the 2-worker process fleet reproduces the
+        # single-process ThreadedRuntime's trajectories bit-for-bit on
+        # the same seed (per-request RNG + lr=0 frozen params).
+        {"path": "equivalence.trajectories_identical", "equals": True},
+        {"path": "equivalence.n_common", "min": 1},
+        # a SIGKILLed worker's in-flight slots are requeued and training
+        # completes with nothing lost or double-counted.
+        {"path": "kill.completed", "equals": True},
+        {"path": "kill.requeued", "min": 1},
+        {"path": "kill.duplicates", "equals": 0},
+        {"path": "kill.lost", "equals": 0},
+        # floor only: process supervision + pipe transport must not
+        # collapse throughput vs the threaded runtime (fleet pipelining
+        # usually puts this well above 1 on multi-core hosts).
+        {"path": "throughput_ratio", "min": 0.2},
+    ],
 }
 
 

@@ -8,9 +8,14 @@ Two guarantees:
    sin this tool exists to prevent: code shipping with references to a
    DESIGN.md that didn't exist).
 2. Relative markdown links in the documentation set (README.md,
-   DESIGN.md, benchmarks/README.md) point at files that exist, and
-   ``#anchor`` fragments match a heading (GitHub slug rules) in the
-   target document.
+   DESIGN.md, docs/OPERATIONS.md, benchmarks/README.md) point at files
+   that exist, and ``#anchor`` fragments match a heading (GitHub slug
+   rules) in the target document.
+3. No dead design sections: every H2/H3 heading of DESIGN.md is cited
+   by at least one ``DESIGN.md §<section>`` reference somewhere in the
+   source tree.  A section nobody cites is either documentation that
+   rotted away from the code or code that shipped without claiming its
+   design — both are failures.
 
 Exit status is non-zero with one line per violation.  Stdlib only — the
 CI docs lane runs it without installing the package.
@@ -25,7 +30,8 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 SOURCE_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
-DOC_FILES = ("README.md", "DESIGN.md", "benchmarks/README.md")
+DOC_FILES = ("README.md", "DESIGN.md", "docs/OPERATIONS.md",
+             "benchmarks/README.md")
 
 # a section citation: the filename, '§', then a name running until a
 # character that can't be part of a heading (citations close with ')',
@@ -35,8 +41,9 @@ HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
 MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
 
-def headings_of(md_path: Path):
-    """Heading texts of a markdown file (code fences excluded)."""
+def leveled_headings_of(md_path: Path):
+    """(level, text) heading pairs of a markdown file (code fences
+    excluded)."""
     out = []
     fenced = False
     for line in md_path.read_text(encoding="utf-8").splitlines():
@@ -47,8 +54,26 @@ def headings_of(md_path: Path):
             continue
         m = HEADING.match(line)
         if m:
-            out.append(m.group(2))
+            out.append((len(m.group(1)), m.group(2)))
     return out
+
+
+def headings_of(md_path: Path):
+    """Heading texts of a markdown file (code fences excluded)."""
+    return [h for _, h in leveled_headings_of(md_path)]
+
+
+def all_section_refs():
+    """Every ``DESIGN.md §<section>`` citation in the source tree, as
+    (source file, cited name) pairs (docstrings wrap, so whitespace is
+    collapsed before matching)."""
+    refs = []
+    for d in SOURCE_DIRS:
+        for py in sorted((ROOT / d).rglob("*.py")):
+            text = re.sub(r"\s+", " ", py.read_text(encoding="utf-8"))
+            for m in SECTION_REF.finditer(text):
+                refs.append((py.relative_to(ROOT), m.group(1).strip()))
+    return refs
 
 
 def github_slug(heading: str) -> str:
@@ -57,7 +82,7 @@ def github_slug(heading: str) -> str:
     return s.replace(" ", "-")
 
 
-def check_section_refs(errors):
+def check_section_refs(errors, refs):
     design = ROOT / "DESIGN.md"
     if not design.exists():
         errors.append("DESIGN.md does not exist but source files cite it")
@@ -70,16 +95,28 @@ def check_section_refs(errors):
         # continues one at a word boundary
         return any(ref == h or ref.startswith(h + " ") for h in headings)
 
-    for d in SOURCE_DIRS:
-        for py in sorted((ROOT / d).rglob("*.py")):
-            # docstrings wrap: collapse all whitespace before matching
-            text = re.sub(r"\s+", " ", py.read_text(encoding="utf-8"))
-            for m in SECTION_REF.finditer(text):
-                ref = m.group(1).strip()
-                if not resolves(ref):
-                    errors.append(
-                        f"{py.relative_to(ROOT)}: 'DESIGN.md §{ref}' does "
-                        f"not match any DESIGN.md heading {headings}")
+    for src, ref in refs:
+        if not resolves(ref):
+            errors.append(
+                f"{src}: 'DESIGN.md §{ref}' does "
+                f"not match any DESIGN.md heading {headings}")
+
+
+def check_dead_sections(errors, refs):
+    """Guarantee 3: every H2/H3 of DESIGN.md is cited from >= 1
+    docstring (the reverse direction of check_section_refs)."""
+    design = ROOT / "DESIGN.md"
+    if not design.exists():
+        return
+    cited = [ref for _, ref in refs]
+    for level, h in leveled_headings_of(design):
+        if level not in (2, 3):
+            continue
+        if not any(ref == h or ref.startswith(h + " ") for ref in cited):
+            errors.append(
+                f"DESIGN.md: H{level} section '{h}' is cited by no source "
+                f"file (dead section — cite it from the module that "
+                f"implements it, or fold it into a live section)")
 
 
 def check_markdown_links(errors):
@@ -115,13 +152,16 @@ def check_markdown_links(errors):
 
 def main() -> int:
     errors: list[str] = []
-    check_section_refs(errors)
+    refs = all_section_refs()
+    check_section_refs(errors, refs)
+    check_dead_sections(errors, refs)
     check_markdown_links(errors)
     for e in errors:
         print(f"check_docs: {e}", file=sys.stderr)
     if not errors:
         n_docs = len(DOC_FILES)
-        print(f"check_docs: OK (section refs + links across {n_docs} docs)")
+        print(f"check_docs: OK (section refs, dead-section scan + links "
+              f"across {n_docs} docs)")
     return 1 if errors else 0
 
 
