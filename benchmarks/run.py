@@ -17,6 +17,7 @@ keeps the perf scripts from rotting); with ``name`` only that module.
   async_overlap          Threaded runtime: real gen/train wall-clock overlap
   reward_overlap         Async reward service vs synchronous verification
   fleet_overlap          Process fleet: equivalence, crash recovery, speed
+  weight_stream          Streaming delta publication: identity, tokens lost
   roofline_report        Roofline terms from the dry-run artifacts
 
 Prints ``name,us_per_call,derived`` CSV.
@@ -31,7 +32,7 @@ from benchmarks import (async_overlap, chunked_prefill, fig1_timeline,
                         fig6a_dynamic_batching, fig6b_interruptible,
                         fleet_overlap, paged_cache, reward_overlap,
                         roofline_report, table1_end_to_end, table2_staleness,
-                        table8_rloo)
+                        table8_rloo, weight_stream)
 from benchmarks.common import emit
 
 MODULES = [
@@ -48,6 +49,7 @@ MODULES = [
     ("overlap", async_overlap),
     ("reward", reward_overlap),
     ("fleet", fleet_overlap),
+    ("wstream", weight_stream),
     ("roofline", roofline_report),
 ]
 
@@ -62,9 +64,13 @@ MODULES = [
 # fast instead of hanging the lane); reward keeps the async reward
 # service honest AND runs the --env code sandbox subprocess in CI; fleet
 # spawns the multi-process executor, kills a worker and checks recovery
-# (also a hard-timeout subprocess — supervision bugs fail fast).
+# (also a hard-timeout subprocess — supervision bugs fail fast); wstream
+# runs the streaming weight-publication identity/stall battery (its
+# deterministic stall numbers are gated at zero drift, so the smoke run
+# keeps the fixed full schedule there and reduces only the runtime
+# sections).
 SMOKE_MODULES = ("fig1", "fig6a", "paged", "chunked", "overlap", "reward",
-                 "fleet", "roofline")
+                 "fleet", "wstream", "roofline")
 
 
 def main() -> None:

@@ -156,6 +156,9 @@ def _engine_stats(engine, progress: Dict) -> Dict:
     ingest = getattr(engine, "ingest_backlog_tokens", None)
     if callable(ingest):
         st["ingest_backlog_tokens"] = ingest()
+    ss = getattr(engine, "stream_stats", None)
+    if callable(ss):                      # streaming pickup progress
+        st.update(ss())                   # (DESIGN.md §Version fence)
     return st
 
 
@@ -197,11 +200,13 @@ def _rollout_worker_main(worker_id: str, conn, factory: Callable,
         return
     pending_weights: Optional[tuple] = None
     admit_q: collections.deque = collections.deque()
+    wmsg_q: collections.deque = collections.deque()
+    chunks_per_step = int(cfg.get("stream_chunks_per_step", 8))
     draining = drained_sent = False
     try:
         while True:
             progress["loops"] += 1
-            idle = engine.n_active == 0 and not admit_q
+            idle = engine.n_active == 0 and not admit_q and not wmsg_q
             msg = transport.recv(cfg["idle_sleep"] if idle else 0.0)
             while msg is not None:
                 kind = msg[0]
@@ -209,6 +214,8 @@ def _rollout_worker_main(worker_id: str, conn, factory: Callable,
                     admit_q.append((msg[1], msg[2]))
                 elif kind == "weights":   # keep only the newest version
                     pending_weights = (msg[1], msg[2])
+                elif kind == "wmsg":      # streamed chunk message
+                    wmsg_q.append(msg[1])
                 elif kind == "drain":
                     draining = True
                 elif kind == "stop":
@@ -222,6 +229,21 @@ def _rollout_worker_main(worker_id: str, conn, factory: Callable,
                 engine.update_weights(_to_device(params), version,
                                       interruptible=cfg["interruptible"])
             pending_weights = None
+            # streaming pickup (DESIGN.md §Version fence): feed a bounded
+            # number of chunk messages per loop so staging overlaps the
+            # decode step below; the engine's params flip only when a
+            # stream completes
+            fed = 0
+            while wmsg_q and fed < chunks_per_step:
+                engine.feed_weight_message(wmsg_q.popleft(),
+                                           interruptible=cfg["interruptible"])
+                fed += 1
+            need_full = getattr(engine, "consume_stream_need_full", None)
+            if callable(need_full) and need_full():
+                # decoder lost the base (missed a publication): ask the
+                # supervisor for one full tree to resynchronize
+                # (DESIGN.md §Torn-stream recovery)
+                transport.send(("need_full", worker_id))
             engine.maybe_apply_pending()
             while admit_q and not engine.has_pending_weights:
                 reqs, clock = admit_q.popleft()
@@ -439,6 +461,14 @@ class FleetRuntime(SchedulerExecutorMixin):
         aborts (crash-loop guard).
     worker_env : extra environment variables for worker processes (e.g.
         pinning each worker to one fake XLA device).
+    weight_stream : ``"full"`` (default) broadcasts whole param trees;
+        ``"delta"`` / ``"delta-q"`` encode each publication once against
+        the previous one and fan the chunk messages out to every worker
+        (DESIGN.md §Streaming weight publication).  Late joiners still
+        get a full tree at registration, and a worker whose decoder
+        loses its base sends ``need_full`` to resynchronize.
+    stream_chunk_elems : elements per chunk when streaming.
+    stream_chunks_per_step : max chunk messages a worker feeds per loop.
     """
 
     def __init__(self, *, scheduler: AsyncScheduler,
@@ -453,7 +483,10 @@ class FleetRuntime(SchedulerExecutorMixin):
                  heartbeat_s: float = 0.05, heartbeat_timeout: float = 2.0,
                  startup_timeout: float = 120.0, max_respawns: int = 3,
                  worker_env: Optional[Dict[str, str]] = None,
-                 idle_sleep: float = 1e-3):
+                 idle_sleep: float = 1e-3,
+                 weight_stream: str = "full",
+                 stream_chunk_elems: int = 65536,
+                 stream_chunks_per_step: int = 8):
         assert rollout_workers >= 1 and trainer_procs >= 1
         self.sched = scheduler
         self.rl = scheduler.rl
@@ -476,6 +509,15 @@ class FleetRuntime(SchedulerExecutorMixin):
         self.max_respawns = max_respawns
         self.worker_env = worker_env
         self.idle_sleep = idle_sleep
+        from repro.core.weights import ENCODINGS
+        if weight_stream not in ENCODINGS:
+            raise ValueError(f"weight_stream must be one of {ENCODINGS}, "
+                             f"got {weight_stream!r}")
+        self.weight_stream = weight_stream
+        self.stream_chunk_elems = stream_chunk_elems
+        self.stream_chunks_per_step = stream_chunks_per_step
+        self._stream_base = None          # previous published host tree
+        self._stream_base_version: Optional[int] = None
 
         self.registry = FleetRegistry()
         self._ctx = mp.get_context("spawn")   # never fork a jax process
@@ -542,7 +584,8 @@ class FleetRuntime(SchedulerExecutorMixin):
                                        self.trainer_factory_kwargs)
         cfg = {"heartbeat_s": self.heartbeat_s,
                "idle_sleep": self.idle_sleep,
-               "interruptible": self.rl.interruptible}
+               "interruptible": self.rl.interruptible,
+               "stream_chunks_per_step": self.stream_chunks_per_step}
         proc = self._ctx.Process(
             target=target, name=f"areal-{worker_id}",
             args=(worker_id, child_conn, factory, kwargs, cfg), daemon=True)
@@ -607,7 +650,14 @@ class FleetRuntime(SchedulerExecutorMixin):
         h.last_beat = now                 # any message proves liveness
         if kind == "heartbeat":
             h.beats += 1
+            prev_v = h.stats.get("version")
             h.stats.update(msg[3])
+            new_v = h.stats.get("version")
+            if new_v is not None and new_v != prev_v:
+                # first heartbeat at a new version = publication pickup
+                # observed (note_pickup ignores never-published versions,
+                # e.g. the initial v0)
+                self.sched.note_pickup(new_v, self._now(), who=h.worker_id)
         elif kind == "register":
             if h.state == "starting":
                 h.state = "ready"
@@ -647,6 +697,16 @@ class FleetRuntime(SchedulerExecutorMixin):
                     pass
         elif kind == "stopped":
             self.registry.retire(h, "stopped")
+        elif kind == "need_full":
+            # a streaming worker lost its delta base (missed or torn
+            # publication): resynchronize it with one full tree
+            # (DESIGN.md §Torn-stream recovery)
+            if self._params_np is not None:
+                try:
+                    h.transport.send(("weights", self._version,
+                                      self._params_np))
+                except (OSError, ValueError):
+                    pass
         elif kind == "trained":
             self._trained_q.put(msg)
         elif kind == "error":
@@ -834,6 +894,7 @@ class FleetRuntime(SchedulerExecutorMixin):
                 _, _, new_version, metrics, params_np, opt_np = reply
                 self._params_np, self._opt_np = params_np, opt_np
                 self._version = new_version
+                self.sched.note_published(new_version, self._now())
                 self.store.publish(new_version, params_np)
                 self.sched.note_policy_update(new_version)
                 self.sched.log_step(
@@ -849,12 +910,30 @@ class FleetRuntime(SchedulerExecutorMixin):
     def _broadcast_weights(self, version: int, params) -> None:
         """ParameterStore subscriber: fan one publication out to every
         live rollout worker (DESIGN.md §Weight-publication path; the
-        multi-subscriber form of the threaded runtime's store poll)."""
+        multi-subscriber form of the threaded runtime's store poll).
+        In stream mode the tree is delta-encoded ONCE against the
+        previous publication and the chunk messages fan out individually
+        (DESIGN.md §Streaming weight publication) — each worker feeds
+        them into its version-fenced decoder between decode steps."""
+        msgs: List[tuple]
+        if self.weight_stream != "full":
+            from repro.core.weights import encode_stream
+            stream = encode_stream(
+                params, version=version, base=self._stream_base,
+                base_version=self._stream_base_version,
+                encoding=self.weight_stream,
+                chunk_elems=self.stream_chunk_elems)
+            self._stream_base = params
+            self._stream_base_version = version
+            msgs = [("wmsg", m) for m in stream]
+        else:
+            msgs = [("weights", version, params)]
         for h in self.registry.workers("rollout"):
             if h.state not in ("ready", "draining"):
                 continue
             try:
-                h.transport.send(("weights", version, params))
+                for m in msgs:
+                    h.transport.send(m)
             except (OSError, ValueError):
                 pass                      # liveness check handles the rest
 

@@ -165,6 +165,17 @@ class RolloutEngine:
         self._driver_thread: Optional[int] = None
         self._ingest_queue: List[int] = []
 
+        # streaming weight publication state (DESIGN.md §Version fence):
+        # an in-flight stream assembles host-side in the decoder and
+        # stages per-leaf device copies in _staged_dev; self.params flips
+        # only when the stream COMPLETES, through update_weights
+        self._stream_decoder = None
+        self._staged_dev: Dict[str, object] = {}
+        self._in_stream_flip = False
+        self._stream_need_full = False
+        self.weight_streams_completed = 0
+        self.weight_streams_torn = 0
+
         # stats
         self.tokens_generated = 0
         self.interruptions = 0
@@ -413,6 +424,7 @@ class RolloutEngine:
             "ingest_backlog_tokens": self.ingest_backlog_tokens(),
             "continuations": self.continuations,
             "continuation_tokens": self.continuation_tokens,
+            **self.stream_stats(),
         }
 
     def admit(self, requests: Sequence[Dict], clock: float = 0.0) -> int:
@@ -842,12 +854,104 @@ class RolloutEngine:
         self._ingest_queue.append(i)
         self.continuations += 1
 
+    # ---- streaming weight pickup (DESIGN.md §Version fence) ---------------
+    def feed_weight_message(self, msg, *, interruptible: bool = True) -> bool:
+        """Version-fenced application of one publication-stream message
+        (DESIGN.md §Version fence).
+
+        While a stream is in flight the engine keeps decoding under the
+        LAST COMPLETE version: chunks assemble host-side in the stream
+        decoder and each completed leaf is immediately staged onto the
+        device (``on_leaf`` → ``_stage_stream_leaf``), so the
+        host→device transfer of later layers overlaps decode under the
+        earlier ones.  Slots only interrupt when the stream COMPLETES —
+        the flip is one ordinary ``update_weights`` call assembled from
+        the staged leaves (unchanged leaves reuse their existing device
+        buffers and are never re-transferred).  A torn stream (missing
+        chunks, superseding begin — DESIGN.md §Torn-stream recovery)
+        discards the staging and the engine keeps serving the last
+        complete version.
+
+        Returns True when ``msg`` completed a stream (the flip was
+        applied, or queued via the non-interruptible pending path)."""
+        self._assert_single_driver()
+        if self._stream_decoder is None:
+            from repro.core.weights import StreamDecoder
+            from repro.launch.disaggregated import host_weights
+            self._stream_decoder = StreamDecoder(
+                host_weights(self.params), self.version,
+                on_leaf=self._stage_stream_leaf)
+        dec = self._stream_decoder
+        torn_before = dec.torn
+        out = dec.feed(msg)
+        if dec.torn > torn_before:
+            self.weight_streams_torn += 1
+            self._staged_dev = {}
+        if dec.need_full:
+            dec.need_full = False
+            self._stream_need_full = True
+            self._staged_dev = {}
+        if out is None:
+            return False
+        version, _host_tree = out
+        staged, self._staged_dev = self._staged_dev, {}
+        from repro.core.weights import tree_rebuild
+        new_params = tree_rebuild(self.params, staged)
+        self._in_stream_flip = True
+        try:
+            self.update_weights(new_params, version,
+                                interruptible=interruptible)
+        finally:
+            self._in_stream_flip = False
+        self.weight_streams_completed += 1
+        return True
+
+    def _stage_stream_leaf(self, path: str, arr) -> None:
+        """Decoder ``on_leaf`` hook: push one completed leaf to the
+        device NOW, under decode of the earlier layers (DESIGN.md
+        §Version fence).  The staged buffer joins ``self.params`` only
+        at the stream-complete flip."""
+        self._staged_dev[path] = jnp.asarray(arr)
+
+    def consume_stream_need_full(self) -> bool:
+        """True once after a delta stream arrived whose base version this
+        engine does not hold (DESIGN.md §Torn-stream recovery): the
+        caller should request a full retransmit from the publisher."""
+        flag = self._stream_need_full
+        self._stream_need_full = False
+        return flag
+
+    def _invalidate_stream_decoder(self) -> None:
+        """A full-tree update replaced ``self.params`` outside the
+        stream path: the decoder's host base no longer matches, so drop
+        it (recreated lazily from the new params) along with anything
+        staged.  An open stream dies torn — last-complete semantics."""
+        if self._stream_decoder is not None:
+            if self._stream_decoder.mid_stream:
+                self.weight_streams_torn += 1
+            self._stream_decoder = None
+            self._staged_dev = {}
+
+    def stream_stats(self) -> Dict[str, int]:
+        """Streaming-pickup counters (DESIGN.md §Streaming weight
+        publication), merged into heartbeats by the fleet worker."""
+        dec = self._stream_decoder
+        base = dec.stats() if dec is not None else {
+            "streams_completed": 0, "streams_torn": 0,
+            "stream_chunks_received": 0, "stream_orphans": 0,
+            "stream_base_mismatches": 0, "stream_active": 0}
+        base["streams_completed"] = self.weight_streams_completed
+        base["streams_torn"] = self.weight_streams_torn
+        return base
+
     # ---- update_weights (the interruption path) ---------------------------
     def update_weights(self, params, version: int, *,
                        interruptible: bool = True) -> bool:
         """Returns True if applied now; False if deferred (non-interruptible
         mode with in-flight requests — the Fig. 6b baseline)."""
         self._assert_single_driver()
+        if not self._in_stream_flip:
+            self._invalidate_stream_decoder()
         if not interruptible and self.n_active > 0:
             self._pending_weights = (params, version)
             return False

@@ -47,6 +47,7 @@ against.
 """
 from __future__ import annotations
 
+import collections
 import threading
 import time
 from dataclasses import dataclass
@@ -126,12 +127,23 @@ class ThreadedRuntime(SchedulerExecutorMixin):
     rollout_mesh, param_specs : when set, published params are
         ``disaggregated.push_weights``-ed onto the rollout submesh by the
         trainer thread before the store publication.
+    weight_stream : ``"full"`` (default) publishes whole param trees via
+        the store; ``"delta"`` / ``"delta-q"`` stream chunked delta
+        messages through an in-process queue instead (DESIGN.md
+        §Streaming weight publication) — the rollout thread feeds a
+        bounded number of chunks per tick into the engine's
+        version-fenced decoder, so pickup overlaps decoding.
+    stream_chunk_elems : elements per chunk when streaming.
+    stream_chunks_per_tick : max stream messages fed per rollout tick.
     """
 
     def __init__(self, *, engine, trainer, scheduler: AsyncScheduler,
                  store: Optional[ParameterStore] = None,
                  rollout_mesh=None, param_specs=None,
-                 idle_sleep: float = 1e-3):
+                 idle_sleep: float = 1e-3,
+                 weight_stream: str = "full",
+                 stream_chunk_elems: int = 65536,
+                 stream_chunks_per_tick: int = 8):
         self.engine = engine
         self.trainer = trainer
         self.sched = scheduler
@@ -140,6 +152,20 @@ class ThreadedRuntime(SchedulerExecutorMixin):
         self.rollout_mesh = rollout_mesh
         self.param_specs = param_specs
         self.idle_sleep = idle_sleep
+        from repro.core.weights import ENCODINGS
+        if weight_stream not in ENCODINGS:
+            raise ValueError(f"weight_stream must be one of {ENCODINGS}, "
+                             f"got {weight_stream!r}")
+        self.weight_stream = weight_stream
+        self.stream_chunk_elems = stream_chunk_elems
+        self.stream_chunks_per_tick = stream_chunks_per_tick
+        # trainer→rollout stream channel (delta modes): the trainer thread
+        # appends encoded messages, the rollout thread drains a bounded
+        # slice per tick (DESIGN.md §Streaming weight publication)
+        self._stream_q: collections.deque = collections.deque()
+        self._stream_lock = threading.Lock()
+        self._stream_base = None          # previous published HOST tree
+        self._stream_base_version: Optional[int] = None
 
         self.clock = 0.0                  # wall seconds of the last run
         self._t0 = 0.0
@@ -165,15 +191,33 @@ class ThreadedRuntime(SchedulerExecutorMixin):
         return time.perf_counter() - self._t0
 
     # ---- rollout side -----------------------------------------------------
-    def _maybe_pickup_weights(self) -> None:
-        """Step-boundary weight pickup: if the trainer published a newer
-        version, interrupt + re-prefill (rollout-thread work, on the
-        rollout submesh — the only generation-side cost of an update)."""
+    def _maybe_pickup_weights(self, drain: bool = False) -> None:
+        """Step-boundary weight pickup.  Full mode: if the trainer
+        published a newer version, interrupt + re-prefill (rollout-thread
+        work, on the rollout submesh — the only generation-side cost of
+        an update).  Stream mode: feed at most ``stream_chunks_per_tick``
+        queued chunk messages into the engine's version-fenced decoder
+        (DESIGN.md §Version fence) so the transfer overlaps decoding;
+        ``drain=True`` (end of run) feeds everything queued."""
+        if self.weight_stream != "full":
+            budget = None if drain else self.stream_chunks_per_tick
+            fed = 0
+            while budget is None or fed < budget:
+                with self._stream_lock:
+                    msg = self._stream_q.popleft() if self._stream_q else None
+                if msg is None:
+                    break
+                fed += 1
+                if self.engine.feed_weight_message(
+                        msg, interruptible=self.rl.interruptible):
+                    self.sched.note_pickup(self.engine.version, self._now())
+            return
         latest = self.store.latest()
         if latest is not None and latest[0] > self.engine.version:
             version, params = latest
             self.engine.update_weights(params, version,
                                        interruptible=self.rl.interruptible)
+            self.sched.note_pickup(version, self._now())
 
     def _rollout_tick(self) -> bool:
         """One admission + decode round; returns True if any slot advanced."""
@@ -229,6 +273,23 @@ class ThreadedRuntime(SchedulerExecutorMixin):
         if self.rollout_mesh is not None:
             from repro.launch.disaggregated import push_weights
             params = push_weights(params, self.rollout_mesh, self.param_specs)
+        self.sched.note_published(self.trainer.version, self._now())
+        if self.weight_stream != "full":
+            # delta modes: encode against the previous published host tree
+            # and enqueue the chunk messages; the store publication below
+            # stays the canonical history/checkpoint path (the rollout
+            # thread ignores it in stream mode)
+            from repro.launch.disaggregated import stream_weights
+            host, stream = stream_weights(
+                self.trainer.params, version=self.trainer.version,
+                base=self._stream_base,
+                base_version=self._stream_base_version,
+                encoding=self.weight_stream,
+                chunk_elems=self.stream_chunk_elems)
+            self._stream_base = host
+            self._stream_base_version = self.trainer.version
+            with self._stream_lock:
+                self._stream_q.extend(stream)
         self.store.publish(self.trainer.version, params)
         self.sched.note_policy_update(self.trainer.version)
         return self.sched.log_step(
@@ -319,10 +380,11 @@ class ThreadedRuntime(SchedulerExecutorMixin):
         if self._errors:
             raise self._errors[0]
         # the rollout thread released the engine on exit: pick up the final
-        # published version here so post-run engine state matches the
-        # trainer (as the synchronous executors guarantee), then release
-        # again so a later run()'s fresh rollout thread can bind
-        self._maybe_pickup_weights()
+        # published version here (draining the whole stream queue in delta
+        # modes) so post-run engine state matches the trainer (as the
+        # synchronous executors guarantee), then release again so a later
+        # run()'s fresh rollout thread can bind
+        self._maybe_pickup_weights(drain=True)
         self.engine.maybe_apply_pending()
         release = getattr(self.engine, "release_driver", None)
         if release:
@@ -350,7 +412,7 @@ class ThreadedRuntime(SchedulerExecutorMixin):
             batch = self.sched.buffer.pop_batch(self.rl.batch_size)
             assert batch is not None
             self._train_once(batch)
-        self._maybe_pickup_weights()
+        self._maybe_pickup_weights(drain=True)
         self.engine.maybe_apply_pending()
         release = getattr(self.engine, "release_driver", None)
         if release:

@@ -116,6 +116,11 @@ class AsyncScheduler:
         # in-flight assignment map for crash requeue, rid -> (worker, req)
         self._assigned: Dict[int, tuple] = {}
         self.requeued_total = 0
+        # publication-to-pickup accounting
+        # (DESIGN.md §Streaming weight publication):
+        # version -> publish clock, and per-pickup samples
+        self._published_t: Dict[int, float] = {}
+        self.pickup_latencies: List[tuple] = []
         self._lock = threading.RLock()
 
     # ---- admission (rollout side) -----------------------------------------
@@ -345,6 +350,38 @@ class AsyncScheduler:
         deposited (finished-but-unscored: still in-flight for Eq. 3)."""
         with self._lock:
             return self._pending_unscored
+
+    # ---- publication accounting (DESIGN.md §Streaming weight publication) -
+    def note_published(self, version: int, t: float) -> None:
+        """The trainer side made ``version`` available to rollout (full
+        tree in the store, or the first message of its weight stream on
+        the wire): starts the publication-to-pickup clock the streaming
+        benchmark reads (benchmarks/weight_stream.py)."""
+        with self._lock:
+            self._published_t[version] = t
+
+    def note_pickup(self, version: int, t: float, who: str = "engine") -> None:
+        """A rollout engine flipped to ``version``: record the
+        publication-to-pickup latency.  Unknown versions (picked up
+        before ``note_published``, e.g. a register-time full send) are
+        ignored; per-worker duplicates are kept — with many subscribers
+        each worker's pickup is its own latency sample."""
+        with self._lock:
+            t0 = self._published_t.get(version)
+            if t0 is not None:
+                self.pickup_latencies.append((version, who, t - t0))
+
+    def publication_stats(self) -> Dict:
+        """Aggregate publication-to-pickup latencies (seconds — or the
+        executor's own clock units)."""
+        with self._lock:
+            lats = [lat for _, _, lat in self.pickup_latencies]
+            return {
+                "published": len(self._published_t),
+                "pickups": len(lats),
+                "latency_mean": (sum(lats) / len(lats)) if lats else 0.0,
+                "latency_max": max(lats) if lats else 0.0,
+            }
 
     # ---- training accounting (trainer side) -------------------------------
     def record_consumed(self, batch: List[Trajectory]) -> None:

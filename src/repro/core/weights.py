@@ -1,11 +1,11 @@
-"""Versioned parameter store — AReaL's 'distributed storage' between
-trainer workers and rollout workers (DESIGN.md §Weight-publication
-path).
+"""Versioned parameter store + streaming delta publication (DESIGN.md
+§Weight-publication path; DESIGN.md §Streaming weight publication).
 
 The trainer publishes (version, params); rollout workers pull the latest.
-Optionally spills each published version to a checkpoint directory.
-``history`` keeps the last few versions so the proximal-policy recompute
-and debugging can reference them.
+Optionally spills each published version to a checkpoint directory on a
+background writer thread (publication must never stall on disk — see
+``ParameterStore.publish``).  ``history`` keeps the last few versions so
+the proximal-policy recompute and debugging can reference them.
 
 Multi-subscriber publication (DESIGN.md §Fleet runtime): in-process
 executors poll ``latest()`` at step boundaries, but a process fleet
@@ -15,26 +15,441 @@ subscriber to fan a published version out to every live rollout worker
 over its transport; an RPC/parameter-server backend would register its
 own broadcaster the same way.  Callbacks run outside the store lock on
 the publishing thread, in registration order.
+
+Streaming publication (DESIGN.md §Streaming weight publication): instead
+of shipping the whole parameter tree per version, ``encode_stream``
+frames one publication as an ordered ``WeightStream`` of messages —
+``StreamBegin``, per-leaf ``WeightChunk``s, ``StreamEnd`` — that a
+receiver reassembles with ``StreamDecoder``.  Three encodings:
+
+  * ``full``    — raw leaf values, chunked; needs no base (first publish,
+                  shape mismatch, and non-finite-delta fallback).
+  * ``delta``   — bitwise XOR against the receiver's base version.  XOR
+                  of the raw bit patterns is EXACT for every dtype
+                  (arithmetic ``old + (new - old)`` is not, in floating
+                  point), and an unchanged leaf XORs to all-zero so its
+                  chunks are simply not sent (empty-delta sparsity).
+  * ``delta-q`` — int8-quantized arithmetic delta with a per-chunk scale
+                  (``scale = max|delta| / 127``); lossy within the
+                  declared per-chunk tolerance ``scale``, with exact
+                  fallback for integer/bool leaves and non-finite deltas.
+
+The decoder owns torn-stream recovery (DESIGN.md §Torn-stream recovery):
+a stream missing chunks at its end, interrupted by a new begin, or built
+on a base version the receiver does not hold is DISCARDED whole — the
+receiver keeps serving the last complete version; no partially-applied
+tree is ever observable.
 """
 from __future__ import annotations
 
 import threading
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from queue import Queue
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
 
 from repro import checkpoint
 
+# ---- stream framing (DESIGN.md §Chunk framing) ------------------------------
+
+
+@dataclass(frozen=True)
+class StreamBegin:
+    """Opens one version's publication stream (DESIGN.md §Chunk framing).
+    ``base_version`` is the version the deltas were computed against
+    (None for a base-free ``full`` stream); ``n_chunks`` is the exact
+    number of ``WeightChunk`` messages that follow, which is what lets
+    the decoder detect a torn stream at ``StreamEnd``."""
+    version: int
+    base_version: Optional[int]
+    encoding: str                      # "full" | "delta" | "delta-q"
+    n_chunks: int
+
+
+@dataclass(frozen=True)
+class WeightChunk:
+    """One contiguous span of one flattened leaf (DESIGN.md §Chunk
+    framing): ``path`` is the '/'-joined pytree key path, ``offset`` /
+    ``size`` address elements of the raveled leaf, ``kind`` selects the
+    application rule (``full`` = raw values, ``xor`` = bitwise delta on
+    the leaf's unsigned view, ``q8`` = int8 payload dequantized with
+    ``scale`` and added to the base).  ``last_of_leaf`` marks the final
+    chunk emitted for this leaf so receivers can hand the completed leaf
+    off (e.g. to an overlapped device transfer) before the stream
+    ends."""
+    version: int
+    path: str
+    seq: int
+    offset: int
+    size: int
+    shape: Tuple[int, ...]
+    dtype: str
+    kind: str                          # "full" | "xor" | "q8"
+    payload: np.ndarray
+    scale: float = 0.0
+    last_of_leaf: bool = False
+
+
+@dataclass(frozen=True)
+class StreamEnd:
+    """Closes a stream; carries ``n_chunks`` redundantly so a receiver
+    that missed the begin can still account the loss."""
+    version: int
+    n_chunks: int
+
+
+class WeightStream:
+    """One publication's ordered message list: ``StreamBegin``, the
+    ``WeightChunk``s, ``StreamEnd`` (DESIGN.md §Chunk framing).
+    Iterable; transports send each message as-is."""
+
+    def __init__(self, messages: List):
+        assert messages and isinstance(messages[0], StreamBegin)
+        assert isinstance(messages[-1], StreamEnd)
+        self.messages = messages
+
+    @property
+    def version(self) -> int:
+        return self.messages[0].version
+
+    @property
+    def n_chunks(self) -> int:
+        return self.messages[0].n_chunks
+
+    def __iter__(self) -> Iterator:
+        return iter(self.messages)
+
+    def __len__(self) -> int:
+        return len(self.messages)
+
+    def nbytes(self) -> int:
+        """Payload bytes on the wire (chunk payloads only)."""
+        return sum(m.payload.nbytes for m in self.messages
+                   if isinstance(m, WeightChunk))
+
+    def tolerance(self) -> float:
+        """Largest declared per-chunk quantization tolerance (0.0 for
+        exact streams): decoded leaves differ from the published ones by
+        at most this much elementwise."""
+        return max((m.scale for m in self.messages
+                    if isinstance(m, WeightChunk) and m.kind == "q8"),
+                   default=0.0)
+
+
+# ---- pytree <-> flat path helpers -------------------------------------------
+
+def _key_part(p) -> str:
+    return str(getattr(p, "key", getattr(p, "idx", p)))
+
+
+def tree_items(tree) -> List[Tuple[str, Any]]:
+    """Flatten a pytree to ``[(path, leaf), ...]`` in treedef order with
+    '/'-joined string paths — the same key scheme as checkpoint/io.py,
+    shared by the chunk framing (DESIGN.md §Chunk framing)."""
+    import jax
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [("/".join(_key_part(p) for p in path), leaf)
+            for path, leaf in flat]
+
+
+def tree_rebuild(template, leaves_by_path: Dict[str, Any]):
+    """Rebuild a tree shaped like ``template``, taking each leaf from
+    ``leaves_by_path`` when present and from the template otherwise."""
+    import jax
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(_key_part(p) for p in path)
+        leaves.append(leaves_by_path.get(key, leaf))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _uint_view(a: np.ndarray) -> np.ndarray:
+    """Reinterpret any fixed-width leaf as its same-width unsigned
+    integer view — the domain where XOR deltas are exact."""
+    return a.view(np.dtype(f"uint{a.dtype.itemsize * 8}"))
+
+
+ENCODINGS = ("full", "delta", "delta-q")
+
+
+def _leaf_chunks(path: str, new: np.ndarray, base: Optional[np.ndarray],
+                 encoding: str, version: int,
+                 chunk_elems: int) -> List[WeightChunk]:
+    """Chunk one leaf under one encoding (DESIGN.md §Chunk framing).
+    Falls back to ``full`` chunks when there is no usable base (first
+    publish, shape/dtype mismatch) or when quantization cannot represent
+    the delta (non-finite values); integer/bool leaves use the exact
+    ``xor`` rule under ``delta-q`` too."""
+    flat_new = np.ascontiguousarray(new).reshape(-1)
+    usable_base = (base is not None and base.shape == new.shape
+                   and base.dtype == new.dtype)
+    kind = "full"
+    if encoding != "full" and usable_base:
+        if encoding == "delta" or new.dtype.kind not in "fc":
+            kind = "xor"
+        else:
+            kind = "q8"
+    chunks: List[WeightChunk] = []
+    n = flat_new.size
+    if kind == "xor":
+        bits = _uint_view(flat_new) ^ _uint_view(
+            np.ascontiguousarray(base).reshape(-1))
+        if not bits.any():
+            return []                  # unchanged leaf: nothing on the wire
+        for off in range(0, n, chunk_elems):
+            part = bits[off:off + chunk_elems]
+            if not part.any():
+                continue               # empty-delta sparsity, per chunk
+            chunks.append(WeightChunk(
+                version=version, path=path, seq=0, offset=off,
+                size=part.size, shape=tuple(new.shape), dtype=str(new.dtype),
+                kind="xor", payload=part.copy()))
+    elif kind == "q8":
+        flat_base = np.ascontiguousarray(base).reshape(-1)
+        delta = (flat_new.astype(np.float64)
+                 - flat_base.astype(np.float64))
+        if not np.isfinite(delta).all():
+            kind = "full"              # quantization cannot represent it
+        elif not delta.any():
+            return []
+        else:
+            for off in range(0, n, chunk_elems):
+                part = delta[off:off + chunk_elems]
+                peak = float(np.max(np.abs(part)))
+                if peak == 0.0:
+                    continue
+                scale = peak / 127.0
+                q = np.clip(np.round(part / scale), -127, 127).astype(np.int8)
+                chunks.append(WeightChunk(
+                    version=version, path=path, seq=0, offset=off,
+                    size=part.size, shape=tuple(new.shape),
+                    dtype=str(new.dtype), kind="q8", payload=q, scale=scale))
+    if kind == "full":
+        for off in range(0, n, chunk_elems):
+            part = flat_new[off:off + chunk_elems]
+            chunks.append(WeightChunk(
+                version=version, path=path, seq=0, offset=off,
+                size=part.size, shape=tuple(new.shape), dtype=str(new.dtype),
+                kind="full", payload=part.copy()))
+    if chunks:
+        chunks[-1] = _replace_chunk(chunks[-1], last_of_leaf=True)
+    return chunks
+
+
+def _replace_chunk(c: WeightChunk, **kw) -> WeightChunk:
+    import dataclasses
+    return dataclasses.replace(c, **kw)
+
+
+def encode_stream(params, *, version: int, base=None,
+                  base_version: Optional[int] = None,
+                  encoding: str = "delta",
+                  chunk_elems: int = 65536) -> WeightStream:
+    """Frame one publication as a ``WeightStream`` (DESIGN.md §Chunk
+    framing).  ``params``/``base`` are HOST trees (numpy leaves — see
+    ``launch/disaggregated.host_weights``); ``base`` is the previously
+    published version the receiver is known to hold, or None for a
+    base-free full stream.  Leaves are chunked at ``chunk_elems``
+    elements; under ``delta``/``delta-q`` unchanged chunks are simply
+    not emitted.  The result decodes bit-exactly for ``full`` and
+    ``delta``, and within ``WeightStream.tolerance()`` for
+    ``delta-q``."""
+    assert encoding in ENCODINGS, encoding
+    if base is None:
+        base_version = None
+        encoding_eff = "full"
+    else:
+        encoding_eff = encoding
+    base_by_path: Dict[str, np.ndarray] = {}
+    if base is not None:
+        base_by_path = {p: np.asarray(leaf) for p, leaf in tree_items(base)}
+    chunks: List[WeightChunk] = []
+    for path, leaf in tree_items(params):
+        chunks.extend(_leaf_chunks(path, np.asarray(leaf),
+                                   base_by_path.get(path), encoding_eff,
+                                   version, chunk_elems))
+    chunks = [_replace_chunk(c, seq=i) for i, c in enumerate(chunks)]
+    begin = StreamBegin(version=version, base_version=base_version,
+                        encoding=encoding_eff, n_chunks=len(chunks))
+    end = StreamEnd(version=version, n_chunks=len(chunks))
+    return WeightStream([begin, *chunks, end])
+
+
+class StreamDecoder:
+    """Receiver-side stream assembler (DESIGN.md §Torn-stream recovery).
+
+    Holds the last COMPLETE version ``(self.version, self.params)`` and
+    stages an in-flight stream off to the side; ``feed(msg)`` returns
+    ``(version, params)`` exactly when a ``StreamEnd`` completes a
+    stream, None otherwise.  The fence invariant: ``self.params`` never
+    changes mid-stream, so a receiver that dies — or a stream that
+    arrives torn — leaves the last complete version intact:
+
+      * a new ``StreamBegin`` while a stream is open discards the open
+        stream (``torn``);
+      * a ``StreamEnd`` whose chunk count does not match discards the
+        stream (``torn``);
+      * a delta stream whose ``base_version`` is not the version we hold
+        is unusable: it is ignored whole and ``need_full`` is set so the
+        caller can request a full retransmit (``base_mismatches``);
+      * chunks/ends with no matching open stream are counted as
+        ``orphans`` and ignored (e.g. a receiver that joined
+        mid-broadcast).
+
+    ``on_leaf(path, array)`` fires as each leaf's last chunk applies —
+    the hook the engine uses to overlap host→device transfer of early
+    leaves with decode under the previous version (DESIGN.md §Version
+    fence).  ``params=None`` decodes base-free full streams into a
+    ``{path: array}`` dict instead of a tree."""
+
+    def __init__(self, params=None, version: Optional[int] = None, *,
+                 on_leaf: Optional[Callable[[str, np.ndarray], None]] = None):
+        self.params = params
+        self.version = version
+        self.on_leaf = on_leaf
+        self.torn = 0
+        self.completed = 0
+        self.orphans = 0
+        self.base_mismatches = 0
+        self.chunks_received = 0
+        self.need_full = False
+        self._cur: Optional[Dict[str, Any]] = None
+
+    @property
+    def mid_stream(self) -> bool:
+        return self._cur is not None
+
+    def _discard(self) -> None:
+        if self._cur is not None:
+            self.torn += 1
+            self._cur = None
+
+    def _base_leaves(self) -> Dict[str, np.ndarray]:
+        if self.params is None:
+            return {}
+        return {p: np.asarray(leaf) for p, leaf in tree_items(self.params)}
+
+    def feed(self, msg):
+        """Feed one stream message; returns ``(version, params)`` when a
+        stream completes, else None (see class docstring for the
+        discard rules — DESIGN.md §Torn-stream recovery)."""
+        if isinstance(msg, StreamBegin):
+            self._discard()
+            if msg.encoding != "full" and msg.base_version != self.version:
+                # deltas against a version we don't hold: unusable whole
+                self.base_mismatches += 1
+                self.need_full = True
+                return None
+            self._cur = {"begin": msg, "seen": 0, "bad": False,
+                         "leaves": {}, "base": self._base_leaves()}
+            return None
+        if isinstance(msg, WeightChunk):
+            self.chunks_received += 1
+            cur = self._cur
+            if cur is None or msg.version != cur["begin"].version:
+                self.orphans += 1
+                return None
+            cur["seen"] += 1
+            self._apply_chunk(cur, msg)
+            return None
+        if isinstance(msg, StreamEnd):
+            cur = self._cur
+            if cur is None or msg.version != cur["begin"].version:
+                self.orphans += 1
+                return None
+            if cur["seen"] != cur["begin"].n_chunks or cur["bad"]:
+                self._discard()        # torn: keep the last complete version
+                return None
+            self._cur = None
+            self.completed += 1
+            self.version = msg.version
+            leaves = cur["leaves"]
+            if self.params is None:
+                self.params = dict(leaves)
+                return msg.version, self.params
+            self.params = tree_rebuild(self.params, leaves)
+            return msg.version, self.params
+        raise TypeError(f"not a stream message: {type(msg).__name__}")
+
+    def _apply_chunk(self, cur: Dict, msg: WeightChunk) -> None:
+        buf = cur["leaves"].get(msg.path)
+        if buf is None:
+            base = cur["base"].get(msg.path)
+            if (base is not None and tuple(base.shape) == msg.shape
+                    and str(base.dtype) == msg.dtype):
+                buf = base.copy()
+            elif msg.kind == "full":
+                buf = np.zeros(msg.shape, np.dtype(msg.dtype))
+            else:                      # delta against a leaf we don't hold
+                cur["bad"] = True
+                return
+            cur["leaves"][msg.path] = buf
+        flat = buf.reshape(-1)
+        sl = slice(msg.offset, msg.offset + msg.size)
+        if msg.kind == "full":
+            flat[sl] = msg.payload
+        elif msg.kind == "xor":
+            v = _uint_view(flat)
+            v[sl] = v[sl] ^ msg.payload
+        elif msg.kind == "q8":
+            base_flat = cur["base"][msg.path].reshape(-1)
+            flat[sl] = (base_flat[sl].astype(np.float64)
+                        + msg.payload.astype(np.float64) * msg.scale
+                        ).astype(buf.dtype)
+        else:
+            cur["bad"] = True
+            return
+        if msg.last_of_leaf and self.on_leaf is not None:
+            self.on_leaf(msg.path, buf)
+
+    def stats(self) -> Dict[str, int]:
+        return {"streams_completed": self.completed,
+                "streams_torn": self.torn,
+                "stream_chunks_received": self.chunks_received,
+                "stream_orphans": self.orphans,
+                "stream_base_mismatches": self.base_mismatches,
+                "stream_active": int(self.mid_stream)}
+
+
+class VersionEvicted(KeyError):
+    """``ParameterStore.get`` of a version that WAS published but has
+    been evicted from the history window — distinct from a version that
+    was never published (which returns None).  Raised loudly so a
+    proximal-recompute path that lost the race between ``latest()`` and
+    ``get()`` fails instead of silently training on None."""
+
+
+@dataclass
+class _Spill:
+    path: str
+    params: Any
+    meta: Dict
+
 
 class ParameterStore:
+    """Versioned trainer→rollout publication (DESIGN.md
+    §Weight-publication path).  Checkpoint spills run on a background
+    writer thread so publish-to-subscriber latency is independent of
+    checkpoint size (DESIGN.md §Streaming weight publication); call
+    ``close()`` to drain pending spills."""
+
     def __init__(self, keep: int = 2, ckpt_dir: Optional[str] = None,
                  ckpt_every: int = 0):
         self._lock = threading.Lock()
         self._latest: Optional[Tuple[int, Any]] = None
         self._history: Dict[int, Any] = {}
+        self._published: set = set()       # every version ever published
         self._subscribers: List[Callable[[int, Any], None]] = []
         self.keep = keep
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
         self.publishes = 0
+        self.spills = 0                    # checkpoints actually written
+        self._spill_q: Optional[Queue] = None
+        self._spill_thread: Optional[threading.Thread] = None
+        self.spill_errors: List[BaseException] = []
 
     def subscribe(self, fn: Callable[[int, Any], None]) -> None:
         """Register a publication callback (fleet weight broadcast —
@@ -42,10 +457,64 @@ class ParameterStore:
         with self._lock:
             self._subscribers.append(fn)
 
+    # ---- background checkpoint writer ----------------------------------
+    def _spill_loop(self) -> None:
+        q = self._spill_q
+        while True:
+            item = q.get()
+            try:
+                if item is None:
+                    return
+                try:
+                    checkpoint.save(item.path, item.params, meta=item.meta)
+                    self.spills += 1
+                except BaseException as e:  # noqa: BLE001 — surfaced on close
+                    self.spill_errors.append(e)
+            finally:
+                q.task_done()
+
+    def _enqueue_spill(self, version: int, params, meta: Optional[Dict]):
+        with self._lock:
+            if self._spill_q is None:
+                self._spill_q = Queue()
+                self._spill_thread = threading.Thread(
+                    target=self._spill_loop, name="areal-ckpt-writer",
+                    daemon=True)
+                self._spill_thread.start()
+        self._spill_q.put(_Spill(
+            path=f"{self.ckpt_dir}/v{version:06d}.npz", params=params,
+            meta={"version": version, **(meta or {})}))
+
+    def flush(self) -> None:
+        """Block until every enqueued checkpoint spill has been written
+        (drain-on-close half of the background writer)."""
+        if self._spill_q is not None:
+            self._spill_q.join()
+
+    def close(self) -> None:
+        """Drain pending spills and stop the writer thread.  Re-raises
+        the first spill error, so a failed checkpoint write is never
+        silently lost."""
+        if self._spill_q is not None:
+            self._spill_q.join()
+            self._spill_q.put(None)
+            self._spill_thread.join(10.0)
+            self._spill_q = None
+            self._spill_thread = None
+        if self.spill_errors:
+            raise self.spill_errors[0]
+
+    # ---- publication ----------------------------------------------------
     def publish(self, version: int, params, meta: Optional[Dict] = None) -> None:
+        """Make ``(version, params)`` the latest publication and notify
+        subscribers.  The checkpoint spill (when due) is ENQUEUED to the
+        background writer, not written here: subscribers hear about the
+        version after an O(tree) bookkeeping step, never after a disk
+        write (DESIGN.md §Streaming weight publication)."""
         with self._lock:
             self._latest = (version, params)
             self._history[version] = params
+            self._published.add(version)
             for v in sorted(self._history):
                 if len(self._history) <= self.keep:
                     break
@@ -54,8 +523,7 @@ class ParameterStore:
             self.publishes += 1
             subscribers = list(self._subscribers)
         if self.ckpt_dir and self.ckpt_every and version % self.ckpt_every == 0:
-            checkpoint.save(f"{self.ckpt_dir}/v{version:06d}.npz", params,
-                            meta={"version": version, **(meta or {})})
+            self._enqueue_spill(version, params, meta)
         for fn in subscribers:             # outside the lock: callbacks
             fn(version, params)            # may do slow transport sends
 
@@ -64,5 +532,17 @@ class ParameterStore:
             return self._latest
 
     def get(self, version: int):
+        """Params for ``version`` from the history window.  A version
+        that was published but already evicted raises ``VersionEvicted``
+        (the latest()/get() race must fail loudly); a version that was
+        never published returns None."""
         with self._lock:
-            return self._history.get(version)
+            params = self._history.get(version)
+            if params is not None:
+                return params
+            if version in self._published:
+                raise VersionEvicted(
+                    f"version {version} was published but evicted from the "
+                    f"history window (keep={self.keep}); retained: "
+                    f"{sorted(self._history)}")
+            return None

@@ -51,11 +51,34 @@ def host_weights(params):
     return jax.tree.map(np.asarray, params)
 
 
+def stream_weights(params, *, version: int, base=None,
+                   base_version=None, encoding: str = "delta",
+                   chunk_elems: int = 65536):
+    """Streaming form of the trainer→rollout publication (DESIGN.md
+    §Streaming weight publication, §Chunk framing): device→host copy of
+    the param tree plus delta encoding against ``base`` — the previous
+    published HOST tree — framed as a ``WeightStream`` of chunk
+    messages.  Returns ``(host_tree, stream)``; the caller keeps
+    ``host_tree`` as the next publication's base and ships the stream's
+    messages over whatever transport reaches the rollout side (the
+    in-process queue of ``ThreadedRuntime`` or the fleet ``Transport``).
+    With ``base=None`` (first publication) the stream falls back to
+    base-free ``full`` chunks."""
+    from repro.core.weights import encode_stream
+    host = host_weights(params)
+    stream = encode_stream(host, version=version, base=base,
+                           base_version=base_version, encoding=encoding,
+                           chunk_elems=chunk_elems)
+    return host, stream
+
+
 def push_weights(params, rollout_mesh: Mesh, specs=None):
     """Trainer -> rollout weight publication: one device_put of the
     (possibly resharded) param tree onto the rollout submesh.  With
     interruptible generation this happens off the training critical path
-    (the trainer proceeds; rollout workers re-prefill on arrival)."""
+    (the trainer proceeds; rollout workers re-prefill on arrival).
+    ``stream_weights`` is the incremental host-side alternative
+    (DESIGN.md §Streaming weight publication)."""
     if specs is None:
         sharding = NamedSharding(rollout_mesh, P())
         return jax.device_put(params, sharding)

@@ -94,7 +94,8 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
                  reward_workers: int = 0, reward_latency: float = 0.0,
                  reward_backlog: int = 64, sandbox_timeout: float = 2.0,
                  rollout_workers: int = 2, trainer_procs: int = 1,
-                 elastic: bool = False, min_workers: int = 1):
+                 elastic: bool = False, min_workers: int = 1,
+                 weight_stream: str = "full"):
     """End-to-end AReaL training on a verifiable environment.
 
     ``env`` selects the workload (DESIGN.md §Environments and reward
@@ -194,7 +195,8 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
             print(f"disaggregated: {roll_mesh.devices.size} rollout / "
                   f"{train_mesh.devices.size} trainer devices", flush=True)
         ctl = ThreadedRuntime(engine=engine, trainer=trainer, scheduler=sched,
-                              store=store, rollout_mesh=roll_mesh)
+                              store=store, rollout_mesh=roll_mesh,
+                              weight_stream=weight_stream)
         ctl.run(steps, timeout=run_timeout or None)
     elif runtime == "fleet":
         from repro.core import fleet as fleet_mod
@@ -216,7 +218,7 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
             trainer_factory_kwargs=dict(model_cfg=cfg, rl=rl, seed=seed),
             n_slots=n_slots, rollout_workers=rollout_workers,
             trainer_procs=trainer_procs, store=store, elastic=elastic,
-            min_workers=min_workers)
+            min_workers=min_workers, weight_stream=weight_stream)
         try:
             ctl.run(steps, timeout=run_timeout or None)
         finally:
@@ -274,6 +276,16 @@ def main():
                          "drain) while the reward backlog saturates")
     ap.add_argument("--min-workers", type=int, default=1,
                     help="--runtime fleet --elastic: floor for shrink")
+    ap.add_argument("--weight-stream", default="full",
+                    choices=["full", "delta", "delta-q"],
+                    help="trainer→rollout publication transport for the "
+                         "threaded/fleet runtimes "
+                         "(DESIGN.md §Streaming weight publication): "
+                         "full = whole param tree per "
+                         "update; delta = chunked bitwise-exact XOR delta "
+                         "stream applied under a version fence; delta-q = "
+                         "int8-quantized delta chunks (lossy within a "
+                         "declared per-chunk tolerance)")
     ap.add_argument("--train-fraction", type=float, default=0.25,
                     help="trainer share of the device pool for the threaded "
                          "runtime's submesh split (Sec 7.1: 0.25)")
@@ -340,7 +352,7 @@ def main():
         sandbox_timeout=args.sandbox_timeout,
         rollout_workers=args.rollout_workers,
         trainer_procs=args.trainer_procs, elastic=args.elastic,
-        min_workers=args.min_workers)
+        min_workers=args.min_workers, weight_stream=args.weight_stream)
     out = {
         "arch": args.arch, "runtime": args.runtime, "steps": trainer.version,
         "wall_s": round(time.time() - t0, 1),

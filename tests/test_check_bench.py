@@ -95,3 +95,34 @@ def test_reward_overlap_regression_fails(tmp_path):
     errors = check_bench.run(tmp_path, ROOT)
     assert any(name in e and "throughput_ratio" in e for e in errors)
     assert any("backlog_bounded" in e for e in errors)
+
+
+def test_weight_stream_identity_violation_fails(tmp_path):
+    """The streaming-pickup identity (4-config matrix) and the torn-
+    version invariant (fleet kill trajectories) are gated metrics."""
+    _copy_baselines(tmp_path)
+    name = "BENCH_weight_stream.json"
+    rec = json.loads((tmp_path / name).read_text())
+    rec["identity"]["all_identical"] = False
+    rec["fleet_kill"]["trajectories_identical"] = False
+    (tmp_path / name).write_text(json.dumps(rec))
+    errors = check_bench.run(tmp_path, ROOT)
+    assert any("identity.all_identical" in e for e in errors)
+    assert any("fleet_kill.trajectories_identical" in e for e in errors)
+
+
+def test_weight_stream_stall_regression_fails(tmp_path):
+    """Losing the >=2x tokens-lost reduction, paying throughput for it,
+    or drifting the deterministic stall schedule all fail the gate."""
+    _copy_baselines(tmp_path)
+    name = "BENCH_weight_stream.json"
+    rec = json.loads((tmp_path / name).read_text())
+    rec["stall"]["tokens_lost_ratio"] = 1.5        # streaming stopped paying
+    rec["stall"]["throughput_ratio"] = 0.9         # ... and now costs tokens
+    rec["stall"]["chunks_delta_per_update"] += 1   # schedule drifted
+    (tmp_path / name).write_text(json.dumps(rec))
+    errors = check_bench.run(tmp_path, ROOT)
+    assert any("tokens_lost_ratio" in e for e in errors)
+    assert any("throughput_ratio" in e and name in e for e in errors)
+    assert any("chunks_delta_per_update" in e and "drifted" in e
+               for e in errors)

@@ -558,3 +558,62 @@ def test_fleet_kill_mid_ingest_requeues_and_matches_reference():
     assert common
     for rid in sorted(common):
         assert ref[rid] == got[rid], f"rid {rid} diverged after requeue"
+
+
+@pytest.mark.slow
+def test_fleet_kill_mid_weight_stream_never_applies_torn_version():
+    """SIGKILL a worker that has received some (not all) chunks of a
+    publication stream (DESIGN.md §Torn-stream recovery): the partial
+    version dies with the worker, its replacement bootstraps from the
+    supervisor's full weights, and every delivered trajectory is
+    bit-identical to the threaded reference — proof no torn partial
+    version was ever decoded against.
+
+    stream_chunk_elems=64 makes v1's base-free full stream hundreds of
+    chunks long and stream_chunks_per_step=1 feeds them one per engine
+    step, so 'mid-stream' is a wide, reliably observable window."""
+    ref = _threaded_reference()
+    rl = _tiny_rl()
+    sched = _math_sched(rl)
+    cap = _capture(sched)
+    rt = FleetRuntime(
+        scheduler=sched, engine_factory=tiny_engine_factory,
+        engine_factory_kwargs={}, trainer_factory=tiny_trainer_factory,
+        trainer_factory_kwargs={}, n_slots=2, rollout_workers=2,
+        heartbeat_s=0.05, heartbeat_timeout=30.0,
+        weight_stream="delta", stream_chunk_elems=64,
+        stream_chunks_per_step=1)
+    killed = {}
+
+    def killer():
+        deadline = time.monotonic() + 200
+        while time.monotonic() < deadline:
+            for h in rt.registry.ready("rollout"):
+                chunks = h.stats.get("stream_chunks_received", 0)
+                mid = h.stats.get("stream_active", 0)
+                if chunks >= 1 and mid and rt.sched.inflight_of(h.worker_id):
+                    killed["pid"] = h.proc.pid
+                    killed["chunks"] = chunks
+                    os.kill(h.proc.pid, signal.SIGKILL)
+                    return
+            time.sleep(0.002)
+
+    threading.Thread(target=killer, daemon=True).start()
+    try:
+        rt.run(3, timeout=RUN_TIMEOUT)
+    finally:
+        rt.close()
+    assert killed, "killer never observed a worker mid-stream"
+    assert killed["chunks"] >= 1
+    rids = [t.rid for t in cap]
+    assert len(set(rids)) == len(rids)        # nothing double-counted
+    assert rt.duplicates_dropped == 0
+    # requeue/respawn counts are timing-dependent (the victim may have
+    # delivered everything it owed in the kill window — that path is
+    # pinned by test_fleet_kill_mid_ingest_requeues_and_matches_reference);
+    # the mid-stream invariant is trajectory identity:
+    got = _by_rid(cap)
+    common = set(ref) & set(got)
+    assert common
+    for rid in sorted(common):
+        assert ref[rid] == got[rid], f"rid {rid} diverged after mid-stream kill"

@@ -1,0 +1,512 @@
+"""Publication-identity test battery for the streaming weight path
+(DESIGN.md §Streaming weight publication).
+
+Three layers:
+
+* codec properties (hypothesis): XOR deltas are BIT-exact for every
+  dtype, q8 stays within its declared per-chunk tolerance, unchanged
+  leaves put nothing on the wire (DESIGN.md §Chunk framing);
+* decoder fence: torn / superseded / base-mismatched streams are
+  discarded whole and the last complete version survives (DESIGN.md
+  §Torn-stream recovery);
+* ParameterStore: history eviction raises ``VersionEvicted`` (vs None
+  for never-published), subscriber ordering, callbacks outside the
+  lock, and checkpoint spills on the background writer so publish
+  latency is independent of disk (DESIGN.md §Weight-publication path);
+* engine identity: chunk-fed pickup is trajectory-identical to a
+  monolithic ``update_weights`` at the same step, across ring/paged x
+  monolithic/chunked prefill (DESIGN.md §Version fence).
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.weights import (ENCODINGS, ParameterStore, StreamBegin,
+                                StreamDecoder, StreamEnd, VersionEvicted,
+                                WeightChunk, encode_stream, tree_items)
+
+# ---- codec properties -------------------------------------------------------
+
+_DTYPES = ["float32", "float16", "int32", "int8", "uint16", "bool"]
+
+
+def _array(dtype: str, size: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    if dtype == "bool":
+        return rng.integers(0, 2, size=size).astype(bool)
+    dt = np.dtype(dtype)
+    if dt.kind == "f":
+        a = rng.standard_normal(size).astype(dt)
+        if size >= 3:                      # exercise non-finite bit patterns
+            a[0] = np.inf
+            a[1] = -np.inf
+            a[2] = np.nan
+        return a
+    info = np.iinfo(dt)
+    return rng.integers(info.min, int(info.max) + 1, size=size,
+                        dtype=np.int64).astype(dt)
+
+
+def _decode(stream, base_tree, base_version):
+    dec = StreamDecoder(base_tree, base_version)
+    out = None
+    for msg in stream:
+        got = dec.feed(msg)
+        if got is not None:
+            out = got
+    return out, dec
+
+
+def _bits_equal(a: np.ndarray, b: np.ndarray) -> bool:
+    if a.shape != b.shape or a.dtype != b.dtype:
+        return False
+    return bool(np.array_equal(a.view(np.uint8), b.view(np.uint8)))
+
+
+@settings(max_examples=25)
+@given(st.integers(0, 10_000), st.sampled_from(_DTYPES),
+       st.integers(1, 300), st.integers(1, 64))
+def test_xor_delta_roundtrip_is_bit_exact(seed, dtype, size, chunk_elems):
+    """XOR on the unsigned view is exact for EVERY dtype, including
+    non-finite floats where arithmetic deltas are not."""
+    base = {"w": _array(dtype, size, seed), "b": _array(dtype, 7, seed + 1)}
+    new = {"w": _array(dtype, size, seed + 2), "b": base["b"].copy()}
+    stream = encode_stream(new, version=1, base=base, base_version=0,
+                           encoding="delta", chunk_elems=chunk_elems)
+    out, dec = _decode(stream, {k: v.copy() for k, v in base.items()}, 0)
+    assert out is not None and out[0] == 1
+    assert _bits_equal(out[1]["w"], new["w"])
+    assert _bits_equal(out[1]["b"], new["b"])
+    assert dec.torn == 0 and dec.completed == 1
+    # unchanged leaf: empty-delta sparsity puts nothing on the wire
+    assert not any(isinstance(m, WeightChunk) and m.path == "b"
+                   for m in stream)
+
+
+@settings(max_examples=25)
+@given(st.integers(0, 10_000), st.integers(1, 300), st.integers(1, 64))
+def test_q8_decodes_within_declared_tolerance(seed, size, chunk_elems):
+    rng = np.random.default_rng(seed)
+    base = {"w": rng.standard_normal(size).astype(np.float32)}
+    new = {"w": (base["w"] + 1e-3 * rng.standard_normal(size)
+                 ).astype(np.float32)}
+    stream = encode_stream(new, version=1, base=base, base_version=0,
+                           encoding="delta-q", chunk_elems=chunk_elems)
+    out, _ = _decode(stream, {"w": base["w"].copy()}, 0)
+    assert out is not None
+    tol = stream.tolerance()
+    err = float(np.max(np.abs(out[1]["w"].astype(np.float64)
+                              - new["w"].astype(np.float64))))
+    # per-chunk scale plus one float32 rounding step on the re-cast
+    assert err <= tol + 1e-6
+
+
+@settings(max_examples=15)
+@given(st.integers(0, 10_000), st.sampled_from(list(ENCODINGS)))
+def test_identical_publication_sends_zero_chunks(seed, encoding):
+    """new == base under any delta encoding → n_chunks == 0, and the
+    stream still completes (the version fence still advances).  Finite
+    data only: arithmetic ``inf - inf`` is NaN, so an identical
+    non-finite leaf is (correctly) retransmitted under delta-q."""
+    rng = np.random.default_rng(seed)
+    base = {"a": rng.standard_normal(40).astype(np.float32),
+            "b": _array("int32", 9, seed)}
+    new = {k: v.copy() for k, v in base.items()}
+    stream = encode_stream(new, version=3, base=base, base_version=2,
+                           encoding=encoding)
+    if encoding != "full":
+        assert stream.n_chunks == 0
+    out, _ = _decode(stream, base, 2)
+    assert out is not None and out[0] == 3
+    assert _bits_equal(out[1]["a"], base["a"])
+
+
+def test_first_publish_without_base_is_full_and_base_free():
+    """base=None forces a base-free full stream regardless of the
+    requested encoding; a fresh decoder (params=None) can bootstrap
+    from it."""
+    new = {"layer/w": _array("float32", 33, 0), "layer/b": _array("int8", 5, 1)}
+    stream = encode_stream(new, version=1, base=None, encoding="delta",
+                           chunk_elems=16)
+    begin = stream.messages[0]
+    assert isinstance(begin, StreamBegin)
+    assert begin.encoding == "full" and begin.base_version is None
+    assert all(m.kind == "full" for m in stream.messages[1:-1])
+    out, _ = _decode(stream, None, None)
+    assert out is not None and out[0] == 1
+    for path, leaf in tree_items(new):
+        assert _bits_equal(out[1][path], np.asarray(leaf))
+
+
+def test_shape_and_dtype_mismatch_fall_back_to_full_chunks():
+    base = {"w": _array("float32", 20, 0), "b": _array("float32", 6, 1)}
+    new = {"w": _array("float32", 24, 2),             # grew: shape mismatch
+           "b": _array("float16", 6, 3)}              # dtype mismatch
+    stream = encode_stream(new, version=1, base=base, base_version=0,
+                           encoding="delta", chunk_elems=8)
+    kinds = {m.path: m.kind for m in stream.messages
+             if isinstance(m, WeightChunk)}
+    assert kinds == {"w": "full", "b": "full"}
+    out, _ = _decode(stream, base, 0)
+    assert out is not None
+    assert _bits_equal(out[1]["w"], new["w"])
+    assert _bits_equal(out[1]["b"], new["b"])
+
+
+def test_nonfinite_delta_under_q8_falls_back_to_exact_full():
+    base = {"w": np.zeros(10, np.float32)}
+    new = {"w": np.full(10, np.inf, np.float32)}
+    stream = encode_stream(new, version=1, base=base, base_version=0,
+                           encoding="delta-q")
+    assert all(m.kind == "full" for m in stream.messages
+               if isinstance(m, WeightChunk))
+    out, _ = _decode(stream, base, 0)
+    assert out is not None and _bits_equal(out[1]["w"], new["w"])
+    assert stream.tolerance() == 0.0
+
+
+# ---- torn-stream recovery (DESIGN.md §Torn-stream recovery) -----------------
+
+def _two_versions(seed=0, size=50, chunk_elems=8):
+    base = {"w": _array("float32", size, seed)}
+    new = {"w": _array("float32", size, seed + 1)}
+    stream = encode_stream(new, version=1, base=base, base_version=0,
+                           encoding="delta", chunk_elems=chunk_elems)
+    assert stream.n_chunks >= 2
+    return base, new, stream
+
+
+def test_torn_stream_missing_chunk_keeps_last_complete_version():
+    base, _new, stream = _two_versions()
+    msgs = list(stream)
+    del msgs[2]                            # drop one WeightChunk
+    dec = StreamDecoder({"w": base["w"].copy()}, 0)
+    assert all(dec.feed(m) is None for m in msgs)
+    assert dec.torn == 1 and dec.completed == 0
+    assert dec.version == 0
+    assert _bits_equal(dec.params["w"], base["w"])   # fence held
+
+
+def test_superseding_begin_tears_the_open_stream():
+    base, new, stream = _two_versions()
+    newer = {"w": _array("float32", 50, 7)}
+    stream2 = encode_stream(newer, version=2, base=base, base_version=0,
+                            encoding="delta", chunk_elems=8)
+    dec = StreamDecoder({"w": base["w"].copy()}, 0)
+    for m in list(stream)[:-1]:            # v1 never ends
+        dec.feed(m)
+    out = None
+    for m in stream2:
+        got = dec.feed(m)
+        out = got if got is not None else out
+    assert dec.torn == 1 and dec.completed == 1
+    assert out is not None and out[0] == 2
+    assert _bits_equal(dec.params["w"], newer["w"])
+
+
+def test_base_version_mismatch_ignored_whole_and_requests_full():
+    base, _new, stream = _two_versions()
+    dec = StreamDecoder({"w": base["w"].copy()}, 99)   # holds the wrong base
+    assert all(dec.feed(m) is None for m in stream)
+    assert dec.base_mismatches == 1 and dec.need_full
+    assert dec.completed == 0 and dec.version == 99
+    assert _bits_equal(dec.params["w"], base["w"])
+    # its chunks/end land with no open stream: orphans, not corruption
+    assert dec.orphans == stream.n_chunks + 1
+
+
+def test_orphan_messages_before_any_begin_are_counted_and_ignored():
+    base, _new, stream = _two_versions()
+    dec = StreamDecoder({"w": base["w"].copy()}, 0)
+    chunk = stream.messages[1]
+    assert dec.feed(chunk) is None
+    assert dec.feed(StreamEnd(version=1, n_chunks=3)) is None
+    assert dec.orphans == 2 and dec.torn == 0
+    with pytest.raises(TypeError):
+        dec.feed(("weights", 1, base))     # not a stream message
+
+
+@settings(max_examples=10)
+@given(st.integers(0, 1000), st.integers(2, 120))
+def test_stream_framing_accounts_every_chunk(seed, size):
+    """Begin/End chunk counts match the actual chunk list and seq
+    numbers are consecutive — the torn-stream detector's ground truth."""
+    base = {"w": _array("float32", size, seed)}
+    new = {"w": _array("float32", size, seed + 5)}
+    stream = encode_stream(new, version=4, base=base, base_version=3,
+                           encoding="delta", chunk_elems=16)
+    chunks = [m for m in stream.messages if isinstance(m, WeightChunk)]
+    assert stream.messages[0].n_chunks == len(chunks)
+    assert stream.messages[-1].n_chunks == len(chunks)
+    assert [c.seq for c in chunks] == list(range(len(chunks)))
+    assert stream.nbytes() == sum(c.payload.nbytes for c in chunks)
+
+
+# ---- ParameterStore ---------------------------------------------------------
+
+def test_store_eviction_raises_versioned_error_not_none():
+    store = ParameterStore(keep=2)
+    for v in (1, 2, 3, 4):
+        store.publish(v, {"w": v})
+    assert store.latest() == (4, {"w": 4})
+    assert store.get(4) == {"w": 4} and store.get(3) == {"w": 3}
+    with pytest.raises(VersionEvicted):
+        store.get(1)                       # published, then evicted: loud
+    assert store.get(99) is None           # never published: None
+
+
+def test_store_subscribers_fire_in_registration_order_outside_lock():
+    store = ParameterStore(keep=2)
+    order = []
+    store.subscribe(lambda v, p: order.append(("a", v)))
+    # a callback that re-enters the store would deadlock if callbacks
+    # ran under the (non-reentrant) store lock
+    store.subscribe(lambda v, p: order.append(("b", store.latest()[0])))
+    t = threading.Thread(target=store.publish, args=(1, {"w": 0}))
+    t.start()
+    t.join(10.0)
+    assert not t.is_alive(), "publish deadlocked inside a subscriber"
+    assert order == [("a", 1), ("b", 1)]
+
+
+def test_store_slow_subscriber_does_not_corrupt_publication():
+    store = ParameterStore(keep=4)
+    seen = []
+    gate = threading.Event()
+
+    def slow(v, p):
+        gate.wait(5.0)
+        seen.append(v)
+
+    store.subscribe(slow)
+    threads = [threading.Thread(target=store.publish, args=(v, {"w": v}))
+               for v in (1, 2)]
+    threads[0].start()
+    # latest() is already v1 while the slow subscriber still blocks
+    deadline = threading.Event()
+    for _ in range(500):
+        if store.latest() == (1, {"w": 1}):
+            break
+        deadline.wait(0.01)
+    assert store.latest() == (1, {"w": 1})
+    threads[1].start()
+    gate.set()
+    for t in threads:
+        t.join(10.0)
+    assert sorted(seen) == [1, 2]
+    assert store.latest() == (2, {"w": 2}) and store.get(1) == {"w": 1}
+
+
+def test_store_spills_off_the_publishing_thread(tmp_path, monkeypatch):
+    """Publish-to-subscriber latency is independent of checkpoint size:
+    the spill is enqueued, not written, on the publishing thread
+    (DESIGN.md §Streaming weight publication).  A checkpoint writer
+    blocked on 'disk' must not delay publish or subscribers."""
+    from repro import checkpoint
+    disk = threading.Event()
+    written = []
+
+    def blocked_save(path, params, meta=None):
+        assert disk.wait(10.0), "flush never released the fake disk"
+        written.append((path, meta["version"]))
+
+    monkeypatch.setattr(checkpoint, "save", blocked_save)
+    store = ParameterStore(keep=2, ckpt_dir=str(tmp_path), ckpt_every=1)
+    heard = []
+    store.subscribe(lambda v, p: heard.append(v))
+    store.publish(1, {"w": 1})             # returns without touching disk
+    store.publish(2, {"w": 2})
+    assert heard == [1, 2]                 # subscribers already notified
+    assert store.spills == 0               # nothing written yet
+    disk.set()
+    store.flush()
+    assert store.spills == 2
+    assert sorted(v for _, v in written) == [1, 2]
+    assert all(p.startswith(str(tmp_path)) for p, _ in written)
+    store.close()
+
+
+def test_store_close_surfaces_spill_errors(tmp_path, monkeypatch):
+    from repro import checkpoint
+
+    def broken_save(path, params, meta=None):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(checkpoint, "save", broken_save)
+    store = ParameterStore(keep=2, ckpt_dir=str(tmp_path), ckpt_every=1)
+    store.publish(1, {"w": 1})             # does not raise here
+    with pytest.raises(OSError, match="disk full"):
+        store.close()
+
+
+def test_store_respects_ckpt_every_stride(tmp_path, monkeypatch):
+    from repro import checkpoint
+    written = []
+    monkeypatch.setattr(checkpoint, "save",
+                        lambda path, params, meta=None: written.append(
+                            meta["version"]))
+    store = ParameterStore(keep=4, ckpt_dir=str(tmp_path), ckpt_every=2)
+    for v in (1, 2, 3, 4):
+        store.publish(v, {"w": v})
+    store.flush()
+    assert sorted(written) == [2, 4]
+    store.close()
+
+
+# ---- engine identity: streamed pickup == monolithic update ------------------
+
+def _engine_pair(cache, prefill_chunk):
+    from repro.configs.base import ModelConfig
+    from repro.core.rollout import RolloutEngine
+    from repro.data import tokenizer
+    from repro.models.model import build_model
+    cfg = ModelConfig(name="wtest", family="dense", n_layers=1, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64,
+                      vocab_size=tokenizer.VOCAB_SIZE)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.key(7))
+
+    def make():
+        return RolloutEngine(model, params, n_slots=3, prompt_len=8,
+                             max_gen_len=6, seed=11, cache=cache,
+                             block_size=4, prefill_chunk=prefill_chunk,
+                             rng="request", eos_id=-1)
+
+    return model, params, make
+
+
+def _perturbed(params, seed=5):
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, leaf in enumerate(leaves):
+        a = np.asarray(leaf)
+        if a.dtype.kind == "f" and i % 2 == 0:
+            a = a + (1e-2 * rng.standard_normal(a.shape)).astype(a.dtype)
+        out.append(jax.numpy.asarray(a))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _reqs(n):
+    return [{"rid": i, "prompt_id": i, "prompt": [1, 4 + i, 5, 6],
+             "answer": None} for i in range(n)]
+
+
+def _run(engine, reqs, *, flip_at, apply_fn, steps=40):
+    done = {}
+    pending = list(reqs)
+    for step in range(steps):
+        n = engine.admit(pending)
+        pending = pending[n:]
+        if step == flip_at:
+            apply_fn(engine)
+        for f in engine.step():
+            assert f.rid not in done
+            done[f.rid] = (tuple(f.prompt), tuple(f.response),
+                           tuple(np.asarray(f.logprobs).tolist()))
+        if not pending and engine.n_active == 0:
+            break
+    assert not pending and engine.n_active == 0
+    return done
+
+
+@pytest.mark.parametrize("cache,prefill_chunk", [
+    ("ring", 0), ("ring", 4), ("paged", 0), ("paged", 4)])
+def test_streamed_pickup_identical_to_monolithic_update(cache, prefill_chunk):
+    """Feeding an unquantized chunk stream (flip held to step K) yields
+    bit-identical trajectories to one monolithic ``update_weights`` at
+    step K, on every engine configuration (DESIGN.md §Version fence)."""
+    from repro.launch.disaggregated import host_weights
+    _model, params, make = _engine_pair(cache, prefill_chunk)
+    params2 = _perturbed(params)
+    stream = encode_stream(host_weights(params2), version=1,
+                           base=host_weights(params), base_version=0,
+                           encoding="delta", chunk_elems=64)
+    msgs = list(stream)
+    assert len(msgs) > 6                   # genuinely chunked
+
+    def monolithic(engine):
+        assert engine.update_weights(params2, 1)
+
+    body, end = msgs[:-1], msgs[-1]
+    flip_at = 4
+
+    def streamed(engine):
+        # body chunks were already spread over earlier steps; the END —
+        # the only message that may flip — lands exactly at flip_at
+        assert engine.feed_weight_message(end)
+        assert engine.version == 1
+
+    baseline = _run(make(), _reqs(5), flip_at=flip_at, apply_fn=monolithic)
+
+    engine = make()
+    fed = 0
+    done = {}
+    pending = _reqs(5)
+    per_step = max(1, (len(body) + flip_at - 1) // flip_at)
+    for step in range(40):
+        n = engine.admit(pending)
+        pending = pending[n:]
+        if step < flip_at:
+            for _ in range(per_step):
+                if fed < len(body):
+                    assert not engine.feed_weight_message(body[fed])
+                    fed += 1
+            assert engine.version == 0     # fence: no flip mid-stream
+        elif step == flip_at:
+            while fed < len(body):
+                assert not engine.feed_weight_message(body[fed])
+                fed += 1
+            streamed(engine)
+        for f in engine.step():
+            done[f.rid] = (tuple(f.prompt), tuple(f.response),
+                           tuple(np.asarray(f.logprobs).tolist()))
+        if not pending and engine.n_active == 0:
+            break
+    assert engine.stream_stats()["streams_completed"] == 1
+    assert set(done) == set(baseline)
+    assert done == baseline
+
+
+def test_engine_discards_torn_stream_and_keeps_serving():
+    """A stream interrupted by a full-tree update dies torn: the staged
+    partial version is dropped, the engine serves the update, and a
+    later complete stream (against the new base) still applies."""
+    from repro.launch.disaggregated import host_weights
+    _model, params, make = _engine_pair("ring", 0)
+    engine = make()
+    params2 = _perturbed(params, seed=5)
+    params3 = _perturbed(params, seed=9)
+    stream = list(encode_stream(host_weights(params2), version=1,
+                                base=host_weights(params), base_version=0,
+                                encoding="delta", chunk_elems=64))
+    for msg in stream[:3]:                 # begin + two chunks, no end
+        assert not engine.feed_weight_message(msg)
+    engine.update_weights(params2, 1)      # supersedes the open stream
+    assert engine.stream_stats()["streams_torn"] == 1
+    assert engine.version == 1
+    stream2 = encode_stream(host_weights(params3), version=2,
+                            base=host_weights(params2), base_version=1,
+                            encoding="delta", chunk_elems=64)
+    flipped = [engine.feed_weight_message(m) for m in stream2]
+    assert flipped[-1] and engine.version == 2
+    assert engine.stream_stats()["streams_completed"] == 1
+
+
+def test_engine_base_mismatch_requests_full_retransmit():
+    from repro.launch.disaggregated import host_weights
+    _model, params, make = _engine_pair("ring", 0)
+    engine = make()
+    params2 = _perturbed(params)
+    stream = encode_stream(host_weights(params2), version=7,
+                           base=host_weights(params2), base_version=6,
+                           encoding="delta", chunk_elems=64)
+    for msg in stream:                     # deltas against v6; engine holds v0
+        assert not engine.feed_weight_message(msg)
+    assert engine.version == 0
+    assert engine.consume_stream_need_full()
+    assert not engine.consume_stream_need_full()   # read-and-reset

@@ -109,6 +109,48 @@ SPECS: Dict[str, List[Dict[str, Any]]] = {
         # usually puts this well above 1 on multi-core hosts).
         {"path": "throughput_ratio", "min": 0.2},
     ],
+    "BENCH_weight_stream.json": [
+        # PR 7 acceptance: unquantized streaming is bit-for-bit
+        # trajectory-identical to a monolithic full-tree update at the
+        # same step boundary, across ring/paged x monolithic/chunked.
+        {"path": "identity.all_identical", "equals": True},
+        {"path": "identity.ring_monolithic.n_finished", "min": 4},
+        # tokens lost per update drop >= 2x under the fixed 1-chunk-per-
+        # opportunity transport model, at no throughput cost; the whole
+        # stall section is schedule-deterministic and single-threaded,
+        # so its numbers are held at ZERO drift vs the committed run
+        # (step counts are fixed even in smoke mode).
+        {"path": "stall.tokens_lost_ratio", "min": 2.0},
+        {"path": "stall.throughput_ratio", "min": 1.0},
+        {"path": "stall.tokens_lost_delta_per_update", "equals": 0.0},
+        {"path": "stall.tokens_lost_full_per_update", "rel": 0.0},
+        {"path": "stall.chunks_full_per_update", "rel": 0.0},
+        {"path": "stall.chunks_delta_per_update", "rel": 0.0},
+        # publication-to-pickup latency (decode opportunities): zero
+        # drift, and streamed pickup strictly inside the full transfer
+        {"path": "stall.delta_latency_steps", "rel": 0.0},
+        {"path": "stall.full_latency_steps", "rel": 0.0},
+        # delta-q decodes within its own declared per-chunk tolerance
+        # and IS lossy (the exact-XOR path is the identity section)
+        {"path": "quantized.within_tolerance", "equals": True},
+        {"path": "quantized.lossy", "equals": True},
+        # the real executors: threaded full vs delta identical on lr=0,
+        # and a worker SIGKILLed mid-stream leaves a fleet that finishes
+        # with nothing lost/duplicated and bit-identical trajectories
+        # (proof the torn partial version was never applied)
+        {"path": "threaded.trajectories_identical", "equals": True},
+        {"path": "threaded.streams_completed", "min": 1},
+        # (requeue-on-kill >= 1 is gated by BENCH_fleet_overlap.json;
+        # here the kill lands mid-stream, where the victim may have
+        # already delivered everything it owed — the mid-stream-specific
+        # invariant is that NO torn partial version is ever applied,
+        # i.e. trajectories stay bit-identical.)
+        {"path": "fleet_kill.killed", "equals": True},
+        {"path": "fleet_kill.completed", "equals": True},
+        {"path": "fleet_kill.duplicates", "equals": 0},
+        {"path": "fleet_kill.lost", "equals": 0},
+        {"path": "fleet_kill.trajectories_identical", "equals": True},
+    ],
 }
 
 
