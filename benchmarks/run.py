@@ -18,6 +18,7 @@ keeps the perf scripts from rotting); with ``name`` only that module.
   reward_overlap         Async reward service vs synchronous verification
   fleet_overlap          Process fleet: equivalence, crash recovery, speed
   weight_stream          Streaming delta publication: identity, tokens lost
+  decode_speed           Fused decode fast path + self-speculative rounds
   roofline_report        Roofline terms from the dry-run artifacts
 
 Prints ``name,us_per_call,derived`` CSV.
@@ -27,8 +28,8 @@ from __future__ import annotations
 import sys
 import traceback
 
-from benchmarks import (async_overlap, chunked_prefill, fig1_timeline,
-                        fig4_scaling, fig5c_throughput,
+from benchmarks import (async_overlap, chunked_prefill, decode_speed,
+                        fig1_timeline, fig4_scaling, fig5c_throughput,
                         fig6a_dynamic_batching, fig6b_interruptible,
                         fleet_overlap, paged_cache, reward_overlap,
                         roofline_report, table1_end_to_end, table2_staleness,
@@ -50,6 +51,7 @@ MODULES = [
     ("reward", reward_overlap),
     ("fleet", fleet_overlap),
     ("wstream", weight_stream),
+    ("decode", decode_speed),
     ("roofline", roofline_report),
 ]
 
@@ -68,9 +70,10 @@ MODULES = [
 # runs the streaming weight-publication identity/stall battery (its
 # deterministic stall numbers are gated at zero drift, so the smoke run
 # keeps the fixed full schedule there and reduces only the runtime
-# sections).
+# sections); decode runs the fused/split/spec trajectory-identity +
+# dispatch-count battery (the fast-path engine modes must not rot).
 SMOKE_MODULES = ("fig1", "fig6a", "paged", "chunked", "overlap", "reward",
-                 "fleet", "wstream", "roofline")
+                 "fleet", "wstream", "decode", "roofline")
 
 
 def main() -> None:

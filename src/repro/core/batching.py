@@ -92,6 +92,32 @@ def plan_prefill_chunks(total: int, budget: int, align: int = 1,
     return spans
 
 
+def span_dest_blocks(tables: np.ndarray, start: Sequence[int],
+                     length: Sequence[int], block_size: int,
+                     width: int) -> np.ndarray:
+    """Physical destination blocks for per-slot position spans.
+
+    tables: (n_slots, E) int32 block tables (-1 = unbound); row i's span
+    covers absolute positions [start[i], start[i] + length[i]), laid out
+    in a fixed-width (n_slots, width) array (length <= width; the rest
+    is -1 = "don't write").  Positions past the table (or in unbound
+    entries) also map to -1.  Used by the speculative verify/commit
+    passes (DESIGN.md §Self-speculative decoding), whose multi-token
+    spans land in the blocks ``blocks_needed`` preallocated at
+    admission.
+    """
+    start = np.asarray(start, np.int64)
+    length = np.asarray(length, np.int64)
+    pos = start[:, None] + np.arange(width)[None, :]
+    entry = pos // block_size
+    valid = ((np.arange(width)[None, :] < length[:, None])
+             & (entry < tables.shape[1]))
+    dest = np.take_along_axis(tables,
+                              np.clip(entry, 0, tables.shape[1] - 1).astype(np.int64),
+                              axis=1)
+    return np.where(valid, dest, -1).astype(np.int32)
+
+
 # ---------------------------------------------------------------------------
 # Paged KV-cache block allocator (host side of the paged rollout engine)
 # ---------------------------------------------------------------------------

@@ -156,6 +156,15 @@ def _engine_stats(engine, progress: Dict) -> Dict:
     ingest = getattr(engine, "ingest_backlog_tokens", None)
     if callable(ingest):
         st["ingest_backlog_tokens"] = ingest()
+    # decode fast-path counters (DESIGN.md §Self-speculative decoding):
+    # the liveness report surfaces the acceptance rate so an operator
+    # can see a draft model gone stale (rate collapsing toward 0)
+    if getattr(engine, "decode_dispatches", None) is not None:
+        st["decode_dispatches"] = engine.decode_dispatches
+        st["drafted_tokens"] = engine.drafted_tokens
+        st["accepted_tokens"] = engine.accepted_tokens
+        st["draft_acceptance_rate"] = engine.draft_acceptance_rate
+        st["accepted_tokens_per_step"] = engine.accepted_tokens_per_step
     ss = getattr(engine, "stream_stats", None)
     if callable(ss):                      # streaming pickup progress
         st.update(ss())                   # (DESIGN.md §Version fence)
@@ -953,6 +962,9 @@ class FleetRuntime(SchedulerExecutorMixin):
             if h.role == "rollout" and st:
                 detail += (f" active={st.get('n_active', '?')}"
                            f" v={st.get('version', '?')}")
+                if st.get("drafted_tokens"):
+                    detail += (" accept="
+                               f"{st.get('draft_acceptance_rate', 0.0):.2f}")
             roles.append(RoleLiveness(f"{h.role}:{h.worker_id}",
                                       h.proc.is_alive(), age, detail))
         pump = self._pump_thread

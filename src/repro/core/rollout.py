@@ -145,7 +145,9 @@ class RolloutEngine:
                  cache: str = "ring", block_size: int = 16,
                  n_blocks: Optional[int] = None,
                  prefill_chunk: int = 0, rng: str = "auto",
-                 continuation=None):
+                 continuation=None, fused_decode: Optional[str] = None,
+                 spec_decode: int = 0,
+                 spec_draft_units: Optional[int] = None):
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.params = params
@@ -176,6 +178,47 @@ class RolloutEngine:
         self.weight_streams_completed = 0
         self.weight_streams_torn = 0
 
+        # decode fast paths (DESIGN.md §Fused decode tail,
+        # §Self-speculative decoding)
+        if fused_decode not in (None, "fused", "split"):
+            raise ValueError(f"fused_decode must be None, 'fused' or "
+                             f"'split', got {fused_decode!r}")
+        if fused_decode is not None and cache != "paged":
+            raise ValueError("fused_decode requires cache='paged': the "
+                             "fused tail is a paged-pool kernel "
+                             "(DESIGN.md §Fused decode tail)")
+        self.fused_decode = fused_decode
+        self.spec_decode = int(spec_decode)
+        if self.spec_decode:
+            if self.spec_decode < 2:
+                raise ValueError("spec_decode is the total tokens per "
+                                 "round (1 committed + drafts); needs >= 2")
+            if temperature > 0.0:
+                raise ValueError(
+                    "spec_decode requires temperature <= 0 (greedy): "
+                    "acceptance compares draft tokens against the full "
+                    "model's argmax, which is only exact without sampling "
+                    "(DESIGN.md §Self-speculative decoding)")
+            if fused_decode is not None:
+                raise ValueError("spec_decode and fused_decode are "
+                                 "separate decode fast paths; enable one")
+            chunk_attr = ("prefill_chunk_paged" if cache == "paged"
+                          else "prefill_chunk")
+            if not hasattr(model, chunk_attr):
+                raise ValueError(
+                    "spec_decode verifies drafts through the chunked "
+                    "prefill path; the model lacks " + chunk_attr)
+            n_units = getattr(model, "n_units", 1)
+            du = (max(1, n_units - 1) if spec_draft_units is None
+                  else int(spec_draft_units))
+            if not 1 <= du <= n_units:
+                raise ValueError(f"spec_draft_units must be in "
+                                 f"[1, {n_units}], got {du}")
+            self._spec_draft_units = du
+        # one in-flight speculative round: set by the draft phase,
+        # consumed by verify+commit, discarded by update_weights
+        self._draft: Optional[Dict] = None
+
         # stats
         self.tokens_generated = 0
         self.interruptions = 0
@@ -187,6 +230,13 @@ class RolloutEngine:
         self.decode_steps_during_prefill = 0
         self.continuations = 0             # multi-turn episode extensions
         self.continuation_tokens = 0       # appended-span tokens ingested
+        # decode fast-path counters (DESIGN.md §Self-speculative decoding)
+        self.decode_dispatches = 0         # jitted decode-path calls
+        self.drafted_tokens = 0            # truncated-model draft proposals
+        self.accepted_tokens = 0           # tokens committed by spec rounds
+        self.accepted_draft_tokens = 0     # drafts the full model agreed with
+        self.spec_rounds = 0
+        self.spec_member_rounds = 0        # per-slot round participations
 
         # multi-turn hook (DESIGN.md §Multi-turn continuation in the engine):
         # fn(finished, turn, budget) -> env tokens to
@@ -231,11 +281,21 @@ class RolloutEngine:
             self._tables_dev = None        # device copy, refreshed on change
             self.cache = model.init_paged_cache(n_slots, self.n_blocks,
                                                 block_size, dtype)
-            self._jit_decode_paged = jax.jit(self._decode_paged_fn)
+            if self.fused_decode == "fused":
+                self._jit_decode_paged = jax.jit(self._decode_paged_fused_fn)
+            else:
+                self._jit_decode_paged = jax.jit(self._decode_paged_fn)
+            if self.fused_decode == "split":
+                self._jit_decode_logits = jax.jit(self._decode_paged_logits_fn)
+                self._jit_sample = jax.jit(self._sample_only_fn)
             self._jit_prefill_paged = jax.jit(self._prefill_paged_fn)
             if self.prefill_chunk:
                 self._jit_chunk_paged = jax.jit(self._chunk_paged_fn)
                 self._jit_chunk_paged_quiet = jax.jit(self._chunk_paged_quiet_fn)
+            if self.spec_decode:
+                self._jit_spec_draft = jax.jit(self._spec_draft_paged_fn)
+                self._jit_spec_verify = jax.jit(self._spec_verify_paged_fn)
+                self._jit_spec_commit = jax.jit(self._spec_commit_paged_fn)
         else:
             if self.prefill_chunk and not hasattr(model, "prefill_chunk"):
                 raise ValueError(
@@ -248,6 +308,10 @@ class RolloutEngine:
             if self.prefill_chunk:
                 self._jit_chunk = jax.jit(self._chunk_fn)
                 self._jit_chunk_quiet = jax.jit(self._chunk_quiet_fn)
+            if self.spec_decode:
+                self._jit_spec_draft = jax.jit(self._spec_draft_fn)
+                self._jit_spec_verify = jax.jit(self._spec_verify_fn)
+                self._jit_spec_commit = jax.jit(self._spec_commit_fn)
         if self.prefill_chunk:
             self._jit_reset = jax.jit(self.model.reset_slot_rows)
 
@@ -359,6 +423,101 @@ class RolloutEngine:
             params, tokens, cache, tables, dest, slot_ids, start, length)
         return cache
 
+    # ---- decode fast-path jit bodies --------------------------------------
+    def _decode_paged_fused_fn(self, params, token, cache, tables, active,
+                               rng, rids, draws):
+        """One-dispatch fused decode step (DESIGN.md §Fused decode tail):
+        the per-layer table lookup is hoisted to one shared gather, each
+        attention block's pool read + output projection runs through the
+        fused-tail kernel, and sampling folds into the same program —
+        one jit call in, sampled tokens out."""
+        logits, cache = self.model.decode_step_paged(
+            params, token, cache, tables, active, fused_tail=True)
+        tok, lp = self._sample_any(logits, rng, rids, draws)
+        return tok, lp, cache
+
+    def _decode_paged_logits_fn(self, params, token, cache, tables, active):
+        """Split-mode measurement baseline (DESIGN.md §Fused decode
+        tail): the decode step returns full (B, Vp) logits and sampling
+        runs as a SECOND dispatch — what the fused path saves."""
+        return self.model.decode_step_paged(params, token, cache, tables,
+                                            active)
+
+    def _sample_only_fn(self, logits, rng, rids, draws):
+        return self._sample_any(logits, rng, rids, draws)
+
+    def _spec_draft_body(self, decode_fn, token, cache):
+        """k-1 truncated-layer decode steps under one jit — the draft
+        phase of DESIGN.md §Self-speculative decoding.  Every cache
+        write (pool K/V, recurrent rows, positions) stays inside the
+        scan carry and is DISCARDED: only the proposed tokens escape."""
+        def body(carry, _):
+            tok, c = carry
+            logits, c = decode_fn(tok, c)
+            nxt = jnp.argmax(self._masked_logits(logits),
+                             axis=-1).astype(jnp.int32)
+            return (nxt, c), nxt
+        _, drafts = jax.lax.scan(body, (token, cache), None,
+                                 length=self.spec_decode - 1)
+        return drafts                       # (k-1, B)
+
+    def _spec_draft_paged_fn(self, params, token, cache, tables, active):
+        du = self._spec_draft_units
+        return self._spec_draft_body(
+            lambda tok, c: self.model.decode_step_paged(
+                params, tok, c, tables, active, draft_units=du),
+            token, cache)
+
+    def _spec_draft_fn(self, params, token, cache, active):
+        du = self._spec_draft_units
+        return self._spec_draft_body(
+            lambda tok, c: self.model.decode_step(
+                params, tok, c, active, draft_units=du),
+            token, cache)
+
+    def _spec_greedy(self, logits):
+        """Greedy verification outputs: per-position argmax + logprob
+        over the (G, C, Vp) all-position logits of the verify span."""
+        lf = self._masked_logits(logits)
+        tok = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+        lp = jnp.take_along_axis(jax.nn.log_softmax(lf, axis=-1),
+                                 tok[..., None], axis=-1)[..., 0]
+        return tok, lp
+
+    def _spec_verify_paged_fn(self, params, tokens, cache, tables, dest,
+                              slot_ids, start, length):
+        """Verify ALL draft positions in one chunked-prefill-style pass
+        (DESIGN.md §Self-speculative decoding): write-then-read gives
+        exact causal logits at every span position; the advanced cache
+        is NOT returned — rejected positions' K/V and recurrent state
+        must never land, so rollback is a functional discard."""
+        logits, _ = self.model.prefill_chunk_paged(
+            params, tokens, cache, tables, dest, slot_ids, start, length,
+            all_logits=True)
+        return self._spec_greedy(logits)
+
+    def _spec_commit_paged_fn(self, params, tokens, cache, tables, dest,
+                              slot_ids, start, length):
+        """Commit the accepted prefix: the same span re-runs with
+        per-slot ``length`` = accepted count, so pool writes and
+        recurrent-state advance stop exactly at the acceptance
+        watermark and ``t`` lands on start + accepted."""
+        _, cache = self.model.prefill_chunk_paged(
+            params, tokens, cache, tables, dest, slot_ids, start, length)
+        return cache
+
+    def _spec_verify_fn(self, params, tokens, cache, slot_ids, start, length):
+        """Ring-cache verify pass (see ``_spec_verify_paged_fn``)."""
+        logits, _ = self.model.prefill_chunk(params, tokens, cache, slot_ids,
+                                             start, length, all_logits=True)
+        return self._spec_greedy(logits)
+
+    def _spec_commit_fn(self, params, tokens, cache, slot_ids, start, length):
+        """Ring-cache commit pass (see ``_spec_commit_paged_fn``)."""
+        _, cache = self.model.prefill_chunk(params, tokens, cache, slot_ids,
+                                            start, length)
+        return cache
+
     def _next_rng(self):
         self._step_count += 1
         return jax.random.fold_in(self._rng, self._step_count)
@@ -424,8 +583,39 @@ class RolloutEngine:
             "ingest_backlog_tokens": self.ingest_backlog_tokens(),
             "continuations": self.continuations,
             "continuation_tokens": self.continuation_tokens,
+            "decode_dispatches": self.decode_dispatches,
+            "drafted_tokens": self.drafted_tokens,
+            "accepted_tokens": self.accepted_tokens,
+            "spec_rounds": self.spec_rounds,
+            "draft_acceptance_rate": self.draft_acceptance_rate,
+            "accepted_tokens_per_step": self.accepted_tokens_per_step,
             **self.stream_stats(),
         }
+
+    @property
+    def draft_acceptance_rate(self) -> float:
+        """Fraction of truncated-model draft proposals the full model's
+        verify pass agreed with (DESIGN.md §Self-speculative decoding)."""
+        return self.accepted_draft_tokens / max(1, self.drafted_tokens)
+
+    @property
+    def accepted_tokens_per_step(self) -> float:
+        """Per-slot committed tokens per FULL-MODEL pass: a slot's round
+        costs 2 full-model passes over it (verify + commit; the
+        truncated draft pass is excluded because it runs only
+        ``spec_draft_units`` of the layer stack) and commits its
+        accepted count.  The speculative win condition is this exceeding
+        1.0 — the non-speculative engine commits exactly one token per
+        full-model pass over a slot.  Normalizing per member-round keeps
+        the metric independent of batch occupancy."""
+        return self.accepted_tokens / max(1, 2 * self.spec_member_rounds)
+
+    @property
+    def spec_pending(self) -> bool:
+        """True between a round's draft phase and its verify+commit —
+        the window where an ``update_weights`` interrupt lands mid-draft
+        and the proposals are discarded with the old weights."""
+        return self._draft is not None
 
     def admit(self, requests: Sequence[Dict], clock: float = 0.0) -> int:
         """requests: dicts with rid, prompt_id, prompt (list[int]), answer.
@@ -742,6 +932,8 @@ class RolloutEngine:
             while self._ingest_queue and not any(
                     s.active and not s.ingesting for s in self.slots):
                 self._ingest_one_chunk()
+        if self.spec_decode:
+            return self._step_spec()
         act = np.array([s.active and not s.ingesting for s in self.slots])
         if not act.any():
             return []
@@ -756,14 +948,26 @@ class RolloutEngine:
             # decode loop free of per-step host->device table uploads
             if self._tables_dev is None:
                 self._tables_dev = jnp.asarray(self.tables)
-            tok, lp, self.cache = self._jit_decode_paged(
-                self.params, jnp.asarray(pend), self.cache,
-                self._tables_dev, jnp.asarray(act), rng,
-                jnp.asarray(rids), jnp.asarray(draws))
+            if self.fused_decode == "split":
+                # measurement baseline: decode and sampling are separate
+                # dispatches (DESIGN.md §Fused decode tail)
+                logits, self.cache = self._jit_decode_logits(
+                    self.params, jnp.asarray(pend), self.cache,
+                    self._tables_dev, jnp.asarray(act))
+                tok, lp = self._jit_sample(logits, rng, jnp.asarray(rids),
+                                           jnp.asarray(draws))
+                self.decode_dispatches += 2
+            else:
+                tok, lp, self.cache = self._jit_decode_paged(
+                    self.params, jnp.asarray(pend), self.cache,
+                    self._tables_dev, jnp.asarray(act), rng,
+                    jnp.asarray(rids), jnp.asarray(draws))
+                self.decode_dispatches += 1
         else:
             tok, lp, self.cache = self._jit_decode(
                 self.params, jnp.asarray(pend), self.cache, jnp.asarray(act),
                 rng, jnp.asarray(rids), jnp.asarray(draws))
+            self.decode_dispatches += 1
         tok = np.asarray(tok)
         lp = np.asarray(lp)
         finished: List[Finished] = []
@@ -777,27 +981,166 @@ class RolloutEngine:
             s.versions.append(self.version)
             s.pending = t_new
             self.tokens_generated += 1
-            done = t_new == self.eos_id
-            trunc = len(s.response) >= self.max_gen_len
-            if done or trunc:
-                fin = self._make_finished(s, truncated=trunc and not done)
-                extra = None
-                if self.continuation is not None and not trunc:
-                    # multi-turn: the environment may answer back; the
-                    # budget is the response headroom left after its
-                    # message plus at least one sampled token
-                    budget = self.max_gen_len - len(s.response) - 1
-                    if budget > 0:
-                        extra = self.continuation(fin, s.turns, budget)
-                    if extra is not None and not 0 < len(extra) <= budget:
-                        extra = None
-                if extra is not None:
-                    self._continue_slot(i, [int(t) for t in extra])
-                    continue               # slot stays active, turn k+1
+            fin = self._maybe_finish(i, s)
+            if fin is not None:
                 finished.append(fin)
-                if self.cache_mode == "paged":
-                    self._release_slot_blocks(i)
-                self.slots[i] = Slot()
+        return finished
+
+    def _maybe_finish(self, i: int, s: Slot) -> Optional[Finished]:
+        """Shared end-of-trajectory handling for the plain and
+        speculative decode loops: EOS/truncation check, the multi-turn
+        continuation hook, block release, slot reset.  Returns the
+        Finished record, or None (still running / continued)."""
+        t_new = s.response[-1]
+        done = t_new == self.eos_id
+        trunc = len(s.response) >= self.max_gen_len
+        if not (done or trunc):
+            return None
+        fin = self._make_finished(s, truncated=trunc and not done)
+        extra = None
+        if self.continuation is not None and not trunc:
+            # multi-turn: the environment may answer back; the budget is
+            # the response headroom left after its message plus at least
+            # one sampled token
+            budget = self.max_gen_len - len(s.response) - 1
+            if budget > 0:
+                extra = self.continuation(fin, s.turns, budget)
+            if extra is not None and not 0 < len(extra) <= budget:
+                extra = None
+        if extra is not None:
+            self._continue_slot(i, [int(t) for t in extra])
+            return None                    # slot stays active, turn k+1
+        if self.cache_mode == "paged":
+            self._release_slot_blocks(i)
+        self.slots[i] = Slot()
+        return fin
+
+    # ---- speculative decoding (DESIGN.md §Self-speculative decoding) ------
+    def _span_dest(self, start: np.ndarray, length: np.ndarray) -> np.ndarray:
+        """Physical destination blocks for per-slot decode spans
+        [start, start+length): every decode position was preallocated at
+        admission (``blocks_needed`` covers the full generation), so the
+        lookup is a pure host-side table read."""
+        from repro.core.batching import span_dest_blocks
+        return span_dest_blocks(self.tables, start, length, self.block_size,
+                                self.spec_decode)
+
+    def _step_spec(self) -> List[Finished]:
+        """One speculative engine step.  A round is TWO engine steps:
+
+        1. draft — one jit dispatch scans k-1 truncated-layer decode
+           steps from each member slot's pending token; the proposals
+           park in ``self._draft`` (cache writes discarded).
+        2. verify+commit — one full-model chunk pass scores every span
+           position (cache discarded), the host accepts the agreeing
+           prefix (capped at EOS and response headroom), and a second
+           chunk pass with length = accepted commits exactly that
+           prefix.
+
+        An ``update_weights`` between the two discards ``_draft`` — the
+        mid-draft interrupt of DESIGN.md §Self-speculative decoding."""
+        if self._draft is not None:
+            return self._spec_verify_commit()
+        act = np.array([s.active and not s.ingesting for s in self.slots])
+        if not act.any():
+            return []
+        if self._ingest_queue:
+            self.decode_steps_during_prefill += 1
+        k = self.spec_decode
+        pend = np.array([s.pending for s in self.slots], np.int32)
+        t0 = np.array([s.history_len if s.active else 0 for s in self.slots],
+                      np.int32)
+        if self.cache_mode == "paged":
+            if self._tables_dev is None:
+                self._tables_dev = jnp.asarray(self.tables)
+            drafts = self._jit_spec_draft(self.params, jnp.asarray(pend),
+                                          self.cache, self._tables_dev,
+                                          jnp.asarray(act))
+        else:
+            drafts = self._jit_spec_draft(self.params, jnp.asarray(pend),
+                                          self.cache, jnp.asarray(act))
+        self.decode_dispatches += 1
+        self.drafted_tokens += (k - 1) * int(act.sum())
+        self._draft = {"members": act, "pend": pend, "t0": t0,
+                       "drafts": np.asarray(drafts)}
+        return []
+
+    def _spec_verify_commit(self) -> List[Finished]:
+        k = self.spec_decode
+        round_ = self._draft
+        self._draft = None
+        members = round_["members"]
+        t0 = round_["t0"]
+        drafts = round_["drafts"]                     # (k-1, n_slots)
+        g = self.n_slots
+        toks = np.zeros((g, k), np.int32)
+        toks[:, 0] = round_["pend"]
+        toks[:, 1:] = drafts.T
+        start = np.where(members, t0, 0).astype(np.int32)
+        length = np.where(members, k, 0).astype(np.int32)
+        slot_ids = np.where(members, np.arange(g), g + 1).astype(np.int32)
+        toks_d = jnp.asarray(toks)
+        start_d = jnp.asarray(start)
+        sids_d = jnp.asarray(slot_ids)
+        if self.cache_mode == "paged":
+            if self._tables_dev is None:
+                self._tables_dev = jnp.asarray(self.tables)
+            gtok, glp = self._jit_spec_verify(
+                self.params, toks_d, self.cache, self._tables_dev,
+                jnp.asarray(self._span_dest(start, length)), sids_d,
+                start_d, jnp.asarray(length))
+        else:
+            gtok, glp = self._jit_spec_verify(
+                self.params, toks_d, self.cache, sids_d, start_d,
+                jnp.asarray(length))
+        self.decode_dispatches += 1
+        gtok = np.asarray(gtok)                       # (n_slots, k)
+        glp = np.asarray(glp)
+        # host acceptance: 1 committed token + the leading drafts the
+        # full model reproduced, cut at the first EOS and at the
+        # response headroom
+        acc = np.zeros((g,), np.int32)
+        for i, s in enumerate(self.slots):
+            if not members[i]:
+                continue
+            a = 1
+            while a < k and drafts[a - 1, i] == gtok[i, a - 1]:
+                a += 1
+            a = min(a, self.max_gen_len - len(s.response))
+            for j in range(a):
+                if gtok[i, j] == self.eos_id:
+                    a = j + 1
+                    break
+            acc[i] = a
+        length_c = np.where(members, acc, 0).astype(np.int32)
+        if self.cache_mode == "paged":
+            self.cache = self._jit_spec_commit(
+                self.params, toks_d, self.cache, self._tables_dev,
+                jnp.asarray(self._span_dest(start, length_c)), sids_d,
+                start_d, jnp.asarray(length_c))
+        else:
+            self.cache = self._jit_spec_commit(
+                self.params, toks_d, self.cache, sids_d, start_d,
+                jnp.asarray(length_c))
+        self.decode_dispatches += 1
+        self.spec_rounds += 1
+        self.spec_member_rounds += int(members.sum())
+        finished: List[Finished] = []
+        for i, s in enumerate(self.slots):
+            if not members[i]:
+                continue
+            a = int(acc[i])
+            for j in range(a):
+                s.response.append(int(gtok[i, j]))
+                s.logprobs.append(float(glp[i, j]))
+                s.versions.append(self.version)
+            s.pending = int(gtok[i, a - 1])
+            self.tokens_generated += a
+            self.accepted_tokens += a
+            self.accepted_draft_tokens += a - 1
+            fin = self._maybe_finish(i, s)
+            if fin is not None:
+                finished.append(fin)
         return finished
 
     def _make_finished(self, s: Slot, truncated: bool) -> Finished:
@@ -955,6 +1298,11 @@ class RolloutEngine:
         if not interruptible and self.n_active > 0:
             self._pending_weights = (params, version)
             return False
+        # a speculative round caught mid-draft dies with the old weights:
+        # its proposals were drafted under them and must not be verified
+        # or committed under the new ones
+        # (DESIGN.md §Self-speculative decoding)
+        self._draft = None
         same_version = version == self.version
         params_changed = params is not self.params
         self.params = params

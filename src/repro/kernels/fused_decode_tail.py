@@ -1,0 +1,131 @@
+"""Pallas TPU fused decode tail: paged KV gather + online-softmax
+attention + output projection in ONE kernel (DESIGN.md §Fused decode
+tail).
+
+``paged_decode_attention`` iterates (slot, q-head, table-entry) and
+returns per-head contexts that the model then reshapes and projects with
+a separate ``wo`` matmul — a (B, H, hd) round-trip through HBM on every
+decode step of the hottest loop in the system.  This kernel processes
+ALL query heads of a slot per grid step, so when the sequential
+table-entry axis finishes the accumulated per-head contexts are still in
+VMEM and the output projection folds in before anything is written back:
+the kernel's output is the block's (B, D) projected residual
+contribution, not attention contexts.
+
+The grid is (slot, table-entry) with the entry axis sequential.  Like
+``paged_decode_attention``, the block table and per-slot position ``t``
+are scalar-prefetch operands and the BlockSpec index map streams exactly
+the physical (bs, Hkv, hd) tile the slot's table names; masking stays
+purely positional (unbound entry / beyond ``t`` / outside the window).
+GQA is a static loop over kv heads, each folding its (group, bs) score
+tile into per-head online-softmax statistics.
+
+Oracle: ``repro.kernels.ref.fused_decode_tail``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tables_ref, t_ref, q_ref, k_ref, v_ref, wo_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale, window, bs, ne, h, hkv):
+    ib = pl.program_id(0)
+    e = pl.program_id(1)
+    group = h // hkv
+
+    @pl.when(e == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    blk = tables_ref[ib, e]                              # physical block id
+    t = t_ref[ib]
+    pos = e * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    mask = (blk >= 0) & (pos <= t)                       # (1, bs)
+    if window > 0:
+        mask &= pos > t - window
+
+    # static loop over kv heads: each folds its (group, bs) score tile
+    # into the per-q-head online-softmax running statistics.
+    for kh in range(hkv):
+        lo, hi = kh * group, (kh + 1) * group
+        q = q_ref[0, lo:hi, :].astype(jnp.float32)       # (g, hd)
+        k = k_ref[0, :, kh, :].astype(jnp.float32)       # (bs, hd)
+        v = v_ref[0, :, kh, :].astype(jnp.float32)       # (bs, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (g, bs)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[lo:hi, :]                         # (g, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)     # (g, bs)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[lo:hi, :] = l_ref[lo:hi, :] * alpha \
+            + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[lo:hi, :] = acc_ref[lo:hi, :] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[lo:hi, :] = m_new
+
+    @pl.when(e == ne - 1)
+    def _finish():
+        # contexts are still in VMEM: fold the output projection in
+        # before anything round-trips through HBM.
+        l = jnp.maximum(l_ref[...], 1e-30)
+        ctx = (acc_ref[...] / l).reshape(1, -1)          # (1, H*hd)
+        o = jax.lax.dot_general(
+            ctx, wo_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (1, D)
+        o_ref[0, :] = o[0].astype(o_ref.dtype)
+
+
+def fused_decode_tail_pallas(q, k_pool, v_pool, wo, block_tables, t, *,
+                             window=0, softmax_scale=None, interpret=True):
+    """q: (B, H, hd); pools: (N, bs, Hkv, hd); wo: (H*hd, D);
+    block_tables: (B, E) int32 (-1 = unbound); t: (B,) int32 current
+    absolute position.  Returns (B, D)."""
+    b, h, hd = q.shape
+    n, bs, hkv, _ = k_pool.shape
+    e = block_tables.shape[1]
+    d = wo.shape[1]
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+
+    grid = (b, e)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                  # block_tables, t
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda b_, e_, bt, tt: (b_, 0, 0)),
+            # the paged gather: the physical pool block streamed at step
+            # (b, e) is whatever the slot's table names (clamped so
+            # unbound -1 entries stay addressable; they are masked out).
+            pl.BlockSpec((1, bs, hkv, hd),
+                         lambda b_, e_, bt, tt:
+                         (jnp.maximum(bt[b_, e_], 0), 0, 0, 0)),
+            pl.BlockSpec((1, bs, hkv, hd),
+                         lambda b_, e_, bt, tt:
+                         (jnp.maximum(bt[b_, e_], 0), 0, 0, 0)),
+            pl.BlockSpec((h * hd, d), lambda b_, e_, bt, tt: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda b_, e_, bt, tt: (b_, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, hd), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window, bs=bs,
+                          ne=e, h=h, hkv=hkv),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), t.astype(jnp.int32),
+      q, k_pool, v_pool, wo)

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.fused_decode_tail import fused_decode_tail_pallas
 from repro.kernels.linear_scan import linear_scan_pallas
 from repro.kernels.paged_decode_attention import paged_decode_attention_pallas
 from repro.kernels.paged_prefill_attention import paged_prefill_attention_pallas
@@ -139,6 +140,42 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, t, *,
         qp, kp, vp, block_tables, t, window=window, softmax_scale=scale,
         interpret=(backend == "pallas_interpret"))
     return out[:, :, :hd]
+
+
+# ---------------------------------------------------------------------------
+# fused decode tail (DESIGN.md §Fused decode tail)
+# ---------------------------------------------------------------------------
+
+def fused_decode_tail(q, k_pool, v_pool, wo, block_tables, t, *,
+                      window: int = 0,
+                      softmax_scale: Optional[float] = None,
+                      backend: Optional[str] = None):
+    """Paged decode attention fused with the output projection: q (B, H,
+    hd) against pools (N, bs, Hkv, hd) through block_tables (B, E),
+    projected by wo (H*hd, D) in the same kernel — returns (B, D), never
+    materializing the (B, H, hd) contexts (DESIGN.md §Fused decode
+    tail).  wo is padded per head (the pad rows multiply the padded
+    context columns, which are zero)."""
+    backend = backend or _BACKEND
+    if backend == "jnp":
+        return _ref.fused_decode_tail(q, k_pool, v_pool, wo, block_tables, t,
+                                      window=window,
+                                      softmax_scale=softmax_scale)
+    b, h, hd = q.shape
+    d = wo.shape[1]
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    hdp = _round_up(hd, _LANE)
+    dp = _round_up(d, _LANE)
+    qp = _pad_axis(q, 2, hdp)
+    kp = _pad_axis(k_pool, 3, hdp)
+    vp = _pad_axis(v_pool, 3, hdp)
+    # per-head padding: (H*hd, D) -> (H, hd, D) -> pad hd and D -> flat
+    wop = _pad_axis(_pad_axis(wo.reshape(h, hd, d), 1, hdp), 2, dp)
+    wop = wop.reshape(h * hdp, dp)
+    out = fused_decode_tail_pallas(
+        qp, kp, vp, wop, block_tables, t, window=window, softmax_scale=scale,
+        interpret=(backend == "pallas_interpret"))
+    return out[:, :d]
 
 
 # ---------------------------------------------------------------------------

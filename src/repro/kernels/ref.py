@@ -247,6 +247,29 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, t, *,
                             softmax_scale=softmax_scale)
 
 
+def fused_decode_tail(q, k_pool, v_pool, wo, block_tables, t, *,
+                      window: int = 0,
+                      softmax_scale: Optional[float] = None):
+    """Paged decode attention fused with the output projection (the
+    decode-tail fusion, DESIGN.md §Fused decode tail).
+
+    q: (B, H, hd); k_pool, v_pool: (N, bs, Hkv, hd); wo: (H*hd, D) — the
+    attention output projection.  block_tables: (B, E) int32, t: (B,)
+    int32, exactly as in ``paged_decode_attention``.  Returns (B, D).
+
+    Semantics of record: the composition of ``paged_decode_attention``
+    and the projection matmul, in the same op order as the unfused model
+    path — so the fused engine mode is bitwise-identical to the default
+    path on the jnp backend, and the Pallas kernel's single-pass
+    gather+softmax+projection is validated against this composition.
+    """
+    b, h, hd = q.shape
+    out = paged_decode_attention(q, k_pool, v_pool, block_tables, t,
+                                 window=window, softmax_scale=softmax_scale)
+    return jnp.matmul(out.reshape(b, h * hd), wo,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
 def linear_scan(a, x, h0=None):
     """Diagonal linear recurrence  h_t = a_t * h_{t-1} + x_t.
 

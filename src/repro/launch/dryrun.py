@@ -90,7 +90,8 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
                  vocab_parallel: bool = False,
                  remat_policy: str = "none", accum_steps: int = 8,
                  paged_cache: bool = False, block_size: int = 16,
-                 prefill_chunk: int = 0, extra: str = ""):
+                 prefill_chunk: int = 0, fused_decode: bool = False,
+                 extra: str = ""):
     cfg = get_model_config(arch)
     shape = get_shape(shape_name)
     rec = {"arch": arch, "shape": shape_name,
@@ -99,12 +100,20 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
            "remat_policy": remat_policy, "accum_steps": accum_steps,
            "paged_cache": paged_cache,
            "prefill_chunk": prefill_chunk,
+           "fused_decode": fused_decode,
            "extra": extra}
 
     if paged_cache and (shape.kind != "decode" or cfg.is_encdec):
         rec["status"] = "skipped"
         rec["reason"] = ("--paged-cache applies to decoder-only decode "
                         "shapes (DESIGN.md §Arch-applicability)")
+        return rec
+
+    if fused_decode and not paged_cache:
+        rec["status"] = "skipped"
+        rec["reason"] = ("--fused-decode lowers the paged fast-path step: "
+                         "combine with --paged-cache on a decode shape "
+                         "(DESIGN.md §Fused decode tail)")
         return rec
 
     if shape.kind == "decode" and shape.seq_len >= 500_000 \
@@ -167,7 +176,8 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
         elif shape.kind == "decode" and paged_cache:
             # paged pool sized for equal worst-case capacity: every slot
             # can hold seq_len tokens (prefix sharing only shrinks usage)
-            step = steps_mod.make_paged_serve_step(model)
+            step = (steps_mod.make_fused_serve_step(model) if fused_decode
+                    else steps_mod.make_paged_serve_step(model))
             n_blocks = shape.global_batch * (-(-shape.seq_len // block_size))
             cache_shape, tables_shape = model_mod.paged_cache_specs(
                 model, cfg, shape.global_batch, shape.seq_len, block_size,
@@ -299,6 +309,11 @@ def main(argv=None):
                     help="decode shapes with --paged-cache: also lower + "
                          "compile the chunked-prefill ingest step with "
                          "spans of N tokens (DESIGN.md §Chunked prefill)")
+    ap.add_argument("--fused-decode", action="store_true",
+                    help="decode shapes with --paged-cache: lower the fused "
+                         "fast-path step (hoisted block-table gather + "
+                         "fused attention/projection tail; DESIGN.md "
+                         "§Fused decode tail)")
     ap.add_argument("--extra", default="", help="free-form variant tag")
     ap.add_argument("--out", default=None, help="output dir for JSON records")
     args = ap.parse_args(argv)
@@ -322,6 +337,7 @@ def main(argv=None):
                                paged_cache=args.paged_cache,
                                block_size=args.block_size,
                                prefill_chunk=args.prefill_chunk,
+                               fused_decode=args.fused_decode,
                                extra=args.extra)
         except Exception as e:  # a dry-run failure is a bug in the system
             rec = {"arch": arch, "shape": shp,
@@ -337,7 +353,8 @@ def main(argv=None):
                 "vp" if args.vocab_parallel else "",
                 args.remat_policy if args.remat_policy != "none" else "",
                 "nofsdp" if args.no_fsdp else "",
-                "paged" if args.paged_cache else "", args.extra]))
+                "paged" if args.paged_cache else "",
+                "fused" if args.fused_decode else "", args.extra]))
             with open(os.path.join(args.out, tag + ".json"), "w") as f:
                 json.dump(rec, f, indent=2)
     return 0 if ok else 1

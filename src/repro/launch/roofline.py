@@ -117,11 +117,69 @@ def to_markdown(rows: List[RooflineRow]) -> str:
     return "\n".join(out)
 
 
+# ---------------------------------------------------------------------------
+# decode throughput vs roofline (DESIGN.md §Fused decode tail)
+# ---------------------------------------------------------------------------
+
+DECODE_FAMILIES = ("transformer", "rg-lru", "xlstm")
+
+
+def decode_roofline_tokens_per_s(bytes_per_token: float) -> float:
+    """Single-stream decode is memory-bound: every generated token
+    re-reads the full weights plus the request's decode state (KV blocks
+    for attention, the fixed recurrent state for RG-LRU/xLSTM), so the
+    hardware ceiling is HBM_BW / bytes_per_token."""
+    return HBM_BW / max(float(bytes_per_token), 1.0)
+
+
+def decode_gap_rows(bench: Dict) -> List[Dict]:
+    """Measured-vs-roofline decode throughput per architecture family.
+
+    Consumes the ``families`` section of benchmarks/decode_speed.py
+    output: each entry carries measured ``tokens_per_s`` plus the
+    analytic ``bytes_per_token`` split into ``param_bytes`` (weights
+    re-read every step) and ``state_bytes`` (the family's decode state —
+    the term the family actually differentiates: growing KV for
+    transformers, O(1) recurrent state for RG-LRU and xLSTM).  The gap
+    ``measured_over_roofline`` is clamped to (0, 1]."""
+    rows = []
+    for fam, f in sorted(bench.get("families", {}).items()):
+        ceil = decode_roofline_tokens_per_s(f["bytes_per_token"])
+        rows.append({
+            "family": fam,
+            "measured_tok_s": f["tokens_per_s"],
+            "roofline_tok_s": ceil,
+            "measured_over_roofline": min(1.0, f["tokens_per_s"] / ceil),
+            "dominant_bytes": ("weights" if f["param_bytes"]
+                               >= f["state_bytes"] else "state"),
+        })
+    return rows
+
+
+def decode_gap_report(bench: Dict) -> str:
+    out = ["| family | measured tok/s | roofline tok/s | gap | dominant |",
+           "|---|---|---|---|---|"]
+    for r in decode_gap_rows(bench):
+        out.append(f"| {r['family']} | {r['measured_tok_s']:.1f} "
+                   f"| {r['roofline_tok_s']:.3e} "
+                   f"| {r['measured_over_roofline']:.2e} "
+                   f"| {r['dominant_bytes']} |")
+    return "\n".join(out)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="runs/dryrun")
     ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--decode-bench", default="",
+                    help="path to BENCH_decode_speed.json: print the "
+                         "per-family decode tokens/s-vs-roofline gap "
+                         "table instead of the dry-run roofline")
     args = ap.parse_args()
+    if args.decode_bench:
+        with open(args.decode_bench) as f:
+            print(decode_gap_report(json.load(f)))
+        return
     rows = load_rows(args.dir)
     if args.markdown:
         print(to_markdown(rows))

@@ -72,6 +72,23 @@ def main():
                          "per engine step so admission and weight-refresh "
                          "re-prefills never stall decoding (0 = monolithic; "
                          "DESIGN.md §Chunked prefill)")
+    ap.add_argument("--fused-decode", default="", choices=["", "fused",
+                                                           "split"],
+                    help="paged decode fast path: 'fused' = one dispatch "
+                         "per step (shared block-table gather, fused "
+                         "attention+projection tail, in-jit sampling); "
+                         "'split' = logits and sampling as separate "
+                         "dispatches (measurement baseline; DESIGN.md "
+                         "§Fused decode tail)")
+    ap.add_argument("--spec-decode", type=int, default=0,
+                    help="self-speculative decoding: total tokens per "
+                         "round (1 committed + N-1 truncated-layer "
+                         "drafts); requires greedy sampling, trajectories "
+                         "are identical to the plain engine (0 = off; "
+                         "DESIGN.md §Self-speculative decoding)")
+    ap.add_argument("--spec-draft-units", type=int, default=0,
+                    help="stacked units the draft pass runs (0 = all but "
+                         "the last)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -87,13 +104,20 @@ def main():
     prefill_chunk = args.prefill_chunk
     if continuation is not None and prefill_chunk <= 0:
         prefill_chunk = args.prompt_len    # turns need the span queue
+    extra = {}
+    if args.spec_decode:
+        extra["temperature"] = 0.0         # speculation is greedy-only
     engine = RolloutEngine(model, params, n_slots=args.slots,
                            prompt_len=args.prompt_len,
                            max_gen_len=args.max_gen, seed=args.seed,
                            cache=args.cache, block_size=args.block_size,
                            n_blocks=args.pool_blocks or None,
                            prefill_chunk=prefill_chunk,
-                           continuation=continuation)
+                           continuation=continuation,
+                           fused_decode=args.fused_decode or None,
+                           spec_decode=args.spec_decode,
+                           spec_draft_units=args.spec_draft_units or None,
+                           **extra)
 
     pending = []
     for i in range(args.requests):
@@ -149,6 +173,13 @@ def main():
     if args.prefill_chunk:
         out["decode_steps_during_prefill"] = \
             engine.decode_steps_during_prefill
+    if args.fused_decode or args.spec_decode:
+        out["decode_dispatches"] = engine.decode_dispatches
+    if args.spec_decode:
+        out["accepted_tokens_per_step"] = \
+            round(engine.accepted_tokens_per_step, 3)
+        out["draft_acceptance_rate"] = \
+            round(engine.draft_acceptance_rate, 3)
     print(json.dumps(out))
 
 

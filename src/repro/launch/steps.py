@@ -162,6 +162,18 @@ def make_paged_serve_step(model):
     return paged_serve_step
 
 
+def make_fused_serve_step(model):
+    """Fused decode fast path (DESIGN.md §Fused decode tail):
+    fused_serve_step(params, token, cache, tables) -> (logits, cache) —
+    ONE new token through the hoisted block-table gather and the fused
+    attention + output-projection tail, the step body the
+    ``--fused-decode`` engine dispatches once per decode step."""
+    def fused_serve_step(params, token, cache, tables):
+        return model.decode_step_paged(params, token, cache, tables,
+                                       fused_tail=True)
+    return fused_serve_step
+
+
 def make_paged_prefill_chunk_step(model):
     """Chunked-prefill ingest step (DESIGN.md §Chunked prefill):
     chunk_step(params, tokens, cache, tables, dest, slot_ids, start,

@@ -95,7 +95,8 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
                  reward_backlog: int = 64, sandbox_timeout: float = 2.0,
                  rollout_workers: int = 2, trainer_procs: int = 1,
                  elastic: bool = False, min_workers: int = 1,
-                 weight_stream: str = "full"):
+                 weight_stream: str = "full", fused_decode: str = "",
+                 spec_decode: int = 0, spec_draft_units: int = 0):
     """End-to-end AReaL training on a verifiable environment.
 
     ``env`` selects the workload (DESIGN.md §Environments and reward
@@ -139,6 +140,15 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
             # which only the chunked engine has
             prefill_chunk = prompt_len
 
+    eng_extra = {}
+    if fused_decode:
+        eng_extra["cache"] = "paged"       # the fused tail is a paged-path jit
+        eng_extra["fused_decode"] = fused_decode
+    if spec_decode:
+        eng_extra["spec_decode"] = spec_decode
+        eng_extra["spec_draft_units"] = spec_draft_units or None
+        eng_extra["temperature"] = 0.0     # speculation is greedy-only
+
     model = build_model(cfg, remat=False)
     engine = trainer = None
     if runtime != "fleet":                 # fleet workers build their own
@@ -146,7 +156,7 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
         engine = RolloutEngine(model, params, n_slots=n_slots,
                                prompt_len=prompt_len, max_gen_len=max_gen_len,
                                seed=seed, prefill_chunk=prefill_chunk,
-                               continuation=continuation)
+                               continuation=continuation, **eng_extra)
         trainer = PPOTrainer(model, rl, params)
     store = ParameterStore(ckpt_dir=ckpt_dir or None,
                            ckpt_every=10 if ckpt_dir else 0)
@@ -213,7 +223,7 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
                 engine_kwargs=dict(n_slots=n_slots, prompt_len=prompt_len,
                                    max_gen_len=max_gen_len,
                                    prefill_chunk=prefill_chunk,
-                                   rng="request")),
+                                   rng="request", **eng_extra)),
             trainer_factory=fleet_mod.build_trainer,
             trainer_factory_kwargs=dict(model_cfg=cfg, rl=rl, seed=seed),
             n_slots=n_slots, rollout_workers=rollout_workers,
@@ -322,6 +332,22 @@ def main():
     ap.add_argument("--sandbox-timeout", type=float, default=2.0,
                     help="--env code: wall-clock kill deadline (s) for "
                          "the verification sandbox subprocess")
+    ap.add_argument("--fused-decode", default="", choices=["", "fused",
+                                                           "split"],
+                    help="paged decode fast path for the rollout engine "
+                         "(forces --cache paged semantics inside the "
+                         "engine): 'fused' = one dispatch per decode step, "
+                         "'split' = measurement baseline (DESIGN.md "
+                         "§Fused decode tail)")
+    ap.add_argument("--spec-decode", type=int, default=0,
+                    help="self-speculative decoding: tokens per round "
+                         "(DESIGN.md §Self-speculative decoding).  Forces "
+                         "greedy sampling — a decode-throughput/debug mode, "
+                         "not a training recipe (greedy collapses GRPO "
+                         "groups)")
+    ap.add_argument("--spec-draft-units", type=int, default=0,
+                    help="stacked units the draft pass runs (0 = all but "
+                         "the last)")
     ap.add_argument("--eta", type=int, default=4,
                     help="max staleness (-1 = unbounded, 0 = synchronous)")
     ap.add_argument("--naive-ppo", action="store_true",
@@ -352,7 +378,9 @@ def main():
         sandbox_timeout=args.sandbox_timeout,
         rollout_workers=args.rollout_workers,
         trainer_procs=args.trainer_procs, elastic=args.elastic,
-        min_workers=args.min_workers, weight_stream=args.weight_stream)
+        min_workers=args.min_workers, weight_stream=args.weight_stream,
+        fused_decode=args.fused_decode, spec_decode=args.spec_decode,
+        spec_draft_units=args.spec_draft_units)
     out = {
         "arch": args.arch, "runtime": args.runtime, "steps": trainer.version,
         "wall_s": round(time.time() - t0, 1),
@@ -366,6 +394,15 @@ def main():
         if eng_stats is not None and hasattr(eng_stats, "stats"):
             s = eng_stats.stats()
             out["continuations"] = s.get("continuations", 0)
+    if args.fused_decode or args.spec_decode:
+        eng = getattr(ctl, "engine", None)
+        if eng is not None:
+            out["decode_dispatches"] = eng.decode_dispatches
+            if args.spec_decode:
+                out["accepted_tokens_per_step"] = round(
+                    eng.accepted_tokens_per_step, 3)
+                out["draft_acceptance_rate"] = round(
+                    eng.draft_acceptance_rate, 3)
     svc = getattr(ctl, "reward_service", None)
     if svc is not None:
         out["reward_service"] = svc.stats()

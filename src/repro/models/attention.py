@@ -309,12 +309,34 @@ def prefill_chunk_into_paged_cache(cfg: ModelConfig, params, x, positions,
     return o, new_pool
 
 
+def decode_dest_blocks(t, block_tables, block_size, active=None):
+    """The physical block the token at position ``t`` lands in:
+    table[t // bs] per slot (B,), -1 for non-decoding rows.
+
+    Split out of ``attn_decode_step_paged`` so the per-layer table
+    lookup can be hoisted: every attention layer of a decode step shares
+    one (t, tables) pair, so the model computes this gather ONCE and
+    threads it through the whole ``units`` scan instead of repeating the
+    take_along_axis per layer (DESIGN.md §Fused decode tail)."""
+    entry = jnp.clip(t // block_size, 0, block_tables.shape[1] - 1)
+    dest = jnp.take_along_axis(block_tables, entry[:, None], axis=1)[:, 0]
+    if active is not None:
+        dest = jnp.where(active, dest, -1)
+    return dest
+
+
 def attn_decode_step_paged(cfg: ModelConfig, params, x_t, t, pool,
-                           block_tables, *, window: int = 0, active=None):
+                           block_tables, *, window: int = 0, active=None,
+                           dest=None, fused_tail: bool = False):
     """One-token decode against the paged pool.  x_t: (B, d); t: (B,)
     absolute position; block_tables: (B, E) int32 (-1 = unbound).
     active: optional (B,) bool — non-decoding rows (mid-ingest slots of
-    the chunked engine) drop their pool write."""
+    the chunked engine) drop their pool write.  dest: optional (B,)
+    precomputed physical destination block per slot (the hoisted shared
+    gather — every layer of a decode step writes token t to the same
+    table entry, so the model computes it once; DESIGN.md §Fused decode
+    tail).  fused_tail=True runs gather + online-softmax + output
+    projection as ONE fused kernel (``ops.fused_decode_tail``)."""
     b, d = x_t.shape
     bs = pool["k_pool"].shape[1]
     q = layers.matmul(x_t, params["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
@@ -326,16 +348,22 @@ def attn_decode_step_paged(cfg: ModelConfig, params, x_t, t, pool,
     q = layers.apply_rope(q, t[:, None], cfg.rope_theta)
     k = layers.apply_rope(k, t[:, None], cfg.rope_theta)
 
-    # write the current token at (table[t // bs], t % bs); slots whose
-    # entry is unbound (inactive slot / dummy row) drop the write
-    entry = jnp.clip(t // bs, 0, block_tables.shape[1] - 1)
-    dest = jnp.take_along_axis(block_tables, entry[:, None], axis=1)[:, 0]
-    if active is not None:
-        dest = jnp.where(active, dest, -1)
+    if dest is None:
+        # write the current token at (table[t // bs], t % bs); slots whose
+        # entry is unbound (inactive slot / dummy row) drop the write
+        entry = jnp.clip(t // bs, 0, block_tables.shape[1] - 1)
+        dest = jnp.take_along_axis(block_tables, entry[:, None], axis=1)[:, 0]
+        if active is not None:
+            dest = jnp.where(active, dest, -1)
     pool = {
         "k_pool": _pool_scatter(pool["k_pool"], dest, t % bs, k[:, 0]),
         "v_pool": _pool_scatter(pool["v_pool"], dest, t % bs, v[:, 0]),
     }
+    if fused_tail:
+        o = ops.fused_decode_tail(q[:, 0], pool["k_pool"], pool["v_pool"],
+                                  params["wo"], block_tables, t,
+                                  window=window)
+        return o, pool
     out = ops.paged_decode_attention(q[:, 0], pool["k_pool"], pool["v_pool"],
                                      block_tables, t, window=window)
     return layers.matmul(out.reshape(b, cfg.q_dim), params["wo"]), pool

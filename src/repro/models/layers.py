@@ -7,6 +7,7 @@ so bf16 params are safe on TPU.
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Optional
 
@@ -91,8 +92,15 @@ def apply_rope(x, positions, theta: float):
     return out.astype(x.dtype)
 
 
+@functools.lru_cache(maxsize=8)
 def sinusoidal_positions(n_pos: int, dim: int):
-    """Whisper-style sinusoidal embedding table (n_pos, dim)."""
+    """Whisper-style sinusoidal embedding table (n_pos, dim).
+
+    Cached at module level: the table is a pure function of static
+    shape arguments, but it used to be rebuilt on EVERY trace of the
+    decode/prefill paths of rope_theta<=0 architectures — each jit
+    signature paid the (n_pos, dim) host build again.  The lru_cache
+    makes every trace capture the same constant (one device buffer)."""
     log_ts = math.log(10_000.0) / (dim // 2 - 1)
     inv = jnp.exp(-log_ts * jnp.arange(dim // 2, dtype=jnp.float32))
     ang = jnp.arange(n_pos, dtype=jnp.float32)[:, None] * inv[None, :]

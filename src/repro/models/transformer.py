@@ -259,14 +259,21 @@ def _block_chunk_state(cfg: ModelConfig, bt: str, p, h, cache, valid):
 
 
 def block_decode_paged(cfg: ModelConfig, bt: str, p, h_t, t, cache, tables,
-                       active=None):
+                       active=None, dest=None, fused_tail=False):
     """One-token paged dispatch: attention reads/writes the block pool
-    through the slot block tables; recurrent blocks are unchanged."""
+    through the slot block tables; recurrent blocks are unchanged.
+
+    ``dest``: optional (B,) precomputed destination block ids — the
+    per-layer table lookup hoisted out of the units scan so every
+    attention layer shares ONE gather (DESIGN.md §Fused decode tail).
+    ``fused_tail``: route the attention read + output projection through
+    the fused kernel instead of the two-op path."""
     if bt in ATTN_KINDS:
         hin = layers.norm_apply(cfg, p["attn_norm"], h_t)
         a, cache = attention.attn_decode_step_paged(
             cfg, p["attn"], hin, t, cache, tables,
-            window=_block_window(cfg, bt), active=active)
+            window=_block_window(cfg, bt), active=active, dest=dest,
+            fused_tail=fused_tail)
         h_t = h_t + a
         hin = layers.norm_apply(cfg, p["mlp_norm"], h_t)
         y = moe.moe_apply(cfg, p["moe"], hin)[0] if cfg.is_moe \
@@ -567,7 +574,8 @@ class LM:
             "t": cache["t"].at[slots].set(0, mode="drop"),
         }
 
-    def prefill_chunk(self, params, tokens, cache, slot_ids, start, length):
+    def prefill_chunk(self, params, tokens, cache, slot_ids, start, length,
+                      all_logits=False):
         """Chunked-prefill continuation against the ring cache
         (DESIGN.md §Chunked prefill).
 
@@ -579,6 +587,10 @@ class LM:
         scattered back.  Returns (last-real-token logits (G, Vp) — the
         sample source when a span completes a prompt — and the updated
         cache).  Out-of-range slot ids are dummy rows (computed, dropped).
+
+        ``all_logits``: return the full (G, C, Vp) logits instead — the
+        verification pass of DESIGN.md §Self-speculative decoding needs
+        the model's prediction at EVERY span position, not just the last.
         """
         cfg = self.cfg
         g, c = tokens.shape
@@ -605,19 +617,22 @@ class LM:
                                         valid=valid)
             rem.append(cj)
         h = layers.norm_apply(cfg, params["final_norm"], h)
-        idx = jnp.clip(length - 1, 0, c - 1)
-        h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
-        logits = self.logits(params, h_last)
+        if all_logits:
+            logits = self.logits(params, h)
+        else:
+            idx = jnp.clip(length - 1, 0, c - 1)
+            h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
+            logits = self.logits(params, h_last)
         new_sub = {"units": new_units, "rem": tuple(rem), "t": start + length}
         return logits, self.cache_insert(cache, new_sub, slot_ids)
 
     def prefill_chunk_paged(self, params, tokens, cache, tables, dest_blocks,
-                            slot_ids, start, length):
+                            slot_ids, start, length, all_logits=False):
         """Paged counterpart of ``prefill_chunk``: attention blocks
         scatter the chunk K/V into the global pool at ``dest_blocks``
         (G, C) and attend through the rows' block ``tables`` (G, E);
         recurrent state rows are gathered/advanced/scattered exactly as
-        in the ring path."""
+        in the ring path.  ``all_logits`` as in ``prefill_chunk``."""
         cfg = self.cfg
         g, c = tokens.shape
         positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
@@ -645,9 +660,12 @@ class LM:
                                               tables, valid=valid)
             rem.append(cj)
         h = layers.norm_apply(cfg, params["final_norm"], h)
-        idx = jnp.clip(length - 1, 0, c - 1)
-        h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
-        logits = self.logits(params, h_last)
+        if all_logits:
+            logits = self.logits(params, h)
+        else:
+            idx = jnp.clip(length - 1, 0, c - 1)
+            h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
+            logits = self.logits(params, h_last)
         new_sub = {"units": new_units, "rem": tuple(rem), "t": start + length}
         return logits, self.cache_insert(cache, new_sub, slot_ids,
                                          pooled_attn=True)
@@ -721,11 +739,22 @@ class LM:
         t = cache["t"].at[slot_ids].set(length, mode="drop")
         return logits, {"units": new_caches, "rem": tuple(rem_caches), "t": t}
 
-    def decode_step_paged(self, params, token, cache, tables, active=None):
+    def decode_step_paged(self, params, token, cache, tables, active=None,
+                          fused_tail=False, draft_units=None):
         """token: (B,) int32; tables: (B, E) int32 slot block tables.
         active: optional (B,) bool — non-decoding rows (mid-ingest
         chunked slots) keep their state and position untouched.
-        Returns (logits (B, Vp), new cache)."""
+        Returns (logits (B, Vp), new cache).
+
+        The destination-block table lookup is computed ONCE here and
+        threaded through every attention layer — one gather for the
+        whole units scan instead of one per layer (DESIGN.md §Fused
+        decode tail).  ``fused_tail`` additionally routes each attention
+        block's pool read + output projection through the fused kernel.
+        ``draft_units``: run only the first N stacked units (no
+        remainder layers) — the truncated-layer draft model of
+        DESIGN.md §Self-speculative decoding; the untouched unit caches
+        pass through so the cache pytree keeps its full shape."""
         cfg = self.cfg
         t = cache["t"]
         h = layers.embed_apply(params["embed"], token)
@@ -735,34 +764,58 @@ class LM:
             h = h + jnp.take(pe, jnp.clip(t, 0, pe.shape[0] - 1),
                              axis=0).astype(h.dtype)
 
+        dest = None
+        for bt, cu in zip(self.pattern, cache["units"]):
+            if bt in ATTN_KINDS:
+                dest = attention.decode_dest_blocks(
+                    t, tables, cu["k_pool"].shape[2], active=active)
+                break
+
         def unit_fn(h, xs):
             unit_params, unit_cache = xs
             new_cache = []
             for j, bt in enumerate(self.pattern):
                 h, c = block_decode_paged(cfg, bt, unit_params[j], h, t,
-                                          unit_cache[j], tables, active=active)
+                                          unit_cache[j], tables, active=active,
+                                          dest=dest, fused_tail=fused_tail)
                 new_cache.append(c)
             return h, tuple(new_cache)
 
-        h, new_caches = jax.lax.scan(unit_fn, h, (params["units"], cache["units"]))
-        rem_caches = []
-        for j in range(self.n_rem):
-            h, c = block_decode_paged(cfg, self.pattern[j], params["rem"][j],
-                                      h, t, cache["rem"][j], tables,
-                                      active=active)
-            rem_caches.append(c)
+        if draft_units is not None:
+            d = int(draft_units)
+            h, new_d = jax.lax.scan(
+                unit_fn, h,
+                (jax.tree.map(lambda x: x[:d], params["units"]),
+                 jax.tree.map(lambda x: x[:d], cache["units"])))
+            new_caches = jax.tree.map(
+                lambda nw, od: jnp.concatenate([nw, od[d:]], axis=0),
+                new_d, cache["units"])
+            rem_caches = cache["rem"]
+        else:
+            h, new_caches = jax.lax.scan(unit_fn, h,
+                                         (params["units"], cache["units"]))
+            rem_caches = []
+            for j in range(self.n_rem):
+                h, c = block_decode_paged(cfg, self.pattern[j],
+                                          params["rem"][j], h, t,
+                                          cache["rem"][j], tables,
+                                          active=active, dest=dest,
+                                          fused_tail=fused_tail)
+                rem_caches.append(c)
+            rem_caches = tuple(rem_caches)
         h = layers.norm_apply(cfg, params["final_norm"], h)
         logits = self.logits(params, h)
         t_new = t + 1 if active is None else jnp.where(active, t + 1, t)
-        return logits, {"units": new_caches, "rem": tuple(rem_caches),
+        return logits, {"units": new_caches, "rem": rem_caches,
                         "t": t_new}
 
-    def decode_step(self, params, token, cache, active=None):
+    def decode_step(self, params, token, cache, active=None, draft_units=None):
         """token: (B,) int32.  active: optional (B,) bool — non-decoding
         rows (mid-ingest chunked slots) keep their state and position
-        untouched.  Returns (logits (B, Vp), new cache)."""
+        untouched.  ``draft_units``: truncated-layer draft pass exactly
+        as in ``decode_step_paged`` (DESIGN.md §Self-speculative
+        decoding).  Returns (logits (B, Vp), new cache)."""
         cfg = self.cfg
-        b = token.shape[0]
         t = cache["t"]                                    # (B,) position to write
         h = layers.embed_apply(params["embed"], token)
         if cfg.rope_theta <= 0:
@@ -778,14 +831,27 @@ class LM:
                 new_cache.append(c)
             return h, tuple(new_cache)
 
-        h, new_caches = jax.lax.scan(unit_fn, h, (params["units"], cache["units"]))
-        rem_caches = []
-        for j in range(self.n_rem):
-            h, c = block_decode(cfg, self.pattern[j], params["rem"][j], h, t,
-                                cache["rem"][j], active=active)
-            rem_caches.append(c)
+        if draft_units is not None:
+            d = int(draft_units)
+            h, new_d = jax.lax.scan(
+                unit_fn, h,
+                (jax.tree.map(lambda x: x[:d], params["units"]),
+                 jax.tree.map(lambda x: x[:d], cache["units"])))
+            new_caches = jax.tree.map(
+                lambda nw, od: jnp.concatenate([nw, od[d:]], axis=0),
+                new_d, cache["units"])
+            rem_caches = cache["rem"]
+        else:
+            h, new_caches = jax.lax.scan(unit_fn, h,
+                                         (params["units"], cache["units"]))
+            rem_caches = []
+            for j in range(self.n_rem):
+                h, c = block_decode(cfg, self.pattern[j], params["rem"][j], h,
+                                    t, cache["rem"][j], active=active)
+                rem_caches.append(c)
+            rem_caches = tuple(rem_caches)
         h = layers.norm_apply(cfg, params["final_norm"], h)
         logits = self.logits(params, h)
         t_new = t + 1 if active is None else jnp.where(active, t + 1, t)
-        new_cache = {"units": new_caches, "rem": tuple(rem_caches), "t": t_new}
+        new_cache = {"units": new_caches, "rem": rem_caches, "t": t_new}
         return logits, new_cache

@@ -126,3 +126,39 @@ def test_weight_stream_stall_regression_fails(tmp_path):
     assert any("throughput_ratio" in e and name in e for e in errors)
     assert any("chunks_delta_per_update" in e and "drifted" in e
                for e in errors)
+
+
+def test_decode_speed_identity_violation_fails(tmp_path):
+    """The fused-path and speculative trajectory identities are gated
+    metrics — a fast path that changes sampled tokens cannot ship."""
+    _copy_baselines(tmp_path)
+    name = "BENCH_decode_speed.json"
+    rec = json.loads((tmp_path / name).read_text())
+    rec["fused"]["trajectories_identical"] = False
+    rec["spec"]["trajectories_identical"] = False
+    (tmp_path / name).write_text(json.dumps(rec))
+    errors = check_bench.run(tmp_path, ROOT)
+    assert any("fused.trajectories_identical" in e for e in errors)
+    assert any("spec.trajectories_identical" in e for e in errors)
+
+
+def test_decode_speed_regression_fails(tmp_path):
+    """Losing the single-dispatch property, the fused>=split throughput
+    floor, the >1 accepted-tokens-per-step win, or a family escaping its
+    roofline band all fail the gate."""
+    _copy_baselines(tmp_path)
+    name = "BENCH_decode_speed.json"
+    rec = json.loads((tmp_path / name).read_text())
+    rec["fused"]["dispatches_per_step"] = 2.0      # fusion silently undone
+    rec["fused"]["throughput_ratio"] = 0.8         # fused slower than split
+    rec["spec"]["accepted_tokens_per_step"] = 1.0  # speculation stopped paying
+    rec["families"]["transformer"]["measured_over_roofline"] = 1.7  # > ceiling
+    (tmp_path / name).write_text(json.dumps(rec))
+    errors = check_bench.run(tmp_path, ROOT)
+    assert any("dispatches_per_step" in e for e in errors)
+    assert any("fused.throughput_ratio" in e and "below floor" in e
+               for e in errors)
+    assert any("accepted_tokens_per_step" in e and "below floor" in e
+               for e in errors)
+    assert any("measured_over_roofline" in e and "above ceiling" in e
+               for e in errors)

@@ -193,6 +193,73 @@ def test_paged_decode_partial_block_masks_future():
 
 
 # ---------------------------------------------------------------------------
+# Fused decode tail (DESIGN.md §Fused decode tail)
+# ---------------------------------------------------------------------------
+
+FT_CASES = [
+    # b, h, hkv, hd, bs, entries, window, d_model
+    (1, 4, 4, 32, 8, 4, 0, 48),
+    (2, 8, 2, 64, 16, 6, 0, 128),
+    (3, 8, 1, 80, 8, 5, 16, 56),       # MQA + window + non-lane hd and d
+    (2, 4, 2, 128, 32, 3, 48, 96),
+]
+
+
+@pytest.mark.parametrize("b,h,hkv,hd,bs,entries,window,d", FT_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_decode_tail_pallas_vs_ref(b, h, hkv, hd, bs, entries, window,
+                                         d, dtype):
+    q = _mk((b, h, hd), dtype)
+    kp, vp, tables, t = _paged_case(b, hkv, hd, bs, entries)
+    kp, vp = kp.astype(dtype), vp.astype(dtype)
+    wo = _mk((h * hd, d), dtype, scale=hd ** -0.5)
+    o_ref = ops.fused_decode_tail(q, kp, vp, wo, tables, t, window=window,
+                                  backend="jnp")
+    o_pl = ops.fused_decode_tail(q, kp, vp, wo, tables, t, window=window,
+                                 backend="pallas_interpret")
+    active = np.asarray(tables.max(axis=1) >= 0)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(o_pl, np.float32)[active],
+                               np.asarray(o_ref, np.float32)[active],
+                               atol=tol, rtol=tol)
+
+
+def test_fused_decode_tail_ref_is_attention_then_projection():
+    """The oracle is the exact composition of the unfused model path:
+    paged decode attention followed by the wo matmul in the same op
+    order — the identity that makes the fused engine mode bitwise-equal
+    to the default paged path."""
+    b, h, hkv, hd, bs, entries, d = 2, 4, 2, 32, 8, 4, 48
+    q = _mk((b, h, hd))
+    kp, vp, tables, t = _paged_case(b, hkv, hd, bs, entries)
+    wo = _mk((h * hd, d))
+    fused = ref.fused_decode_tail(q, kp, vp, wo, tables, t)
+    attn = ref.paged_decode_attention(q, kp, vp, tables, t)
+    manual = jnp.matmul(attn.reshape(b, h * hd), wo,
+                        preferred_element_type=jnp.float32).astype(q.dtype)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(manual))
+
+
+def test_fused_decode_tail_partial_block_masks_future():
+    """Keys beyond t in the slot's partial last block must not leak into
+    the projected output either."""
+    b, h, hkv, hd, bs, d = 1, 2, 2, 16, 8, 24
+    q = _mk((b, h, hd))
+    kp = _mk((4, bs, hkv, hd))
+    vp = _mk((4, bs, hkv, hd))
+    wo = _mk((h * hd, d))
+    tables = jnp.asarray([[2, 1]], jnp.int32)
+    t = jnp.asarray([bs + 2], jnp.int32)
+    base = ref.fused_decode_tail(q, kp, vp, wo, tables, t)
+    kp2 = kp.at[1, 4:].set(1e3)
+    vp2 = vp.at[1, 4:].set(-1e3)
+    out = ops.fused_decode_tail(q, kp2, vp2, wo, tables, t,
+                                backend="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
 # Prefill continuation (chunked prefill, DESIGN.md §Chunked prefill)
 # ---------------------------------------------------------------------------
 

@@ -687,3 +687,146 @@ def test_multiturn_interrupt_identity(family, extra, cache):
         assert a[rid].response == b[rid].response, rid
         assert a[rid].turns == b[rid].turns
         assert a[rid].loss_mask == b[rid].loss_mask
+
+
+# ---------------------------------------------------------------------------
+# Decode fast paths (DESIGN.md §Fused decode tail, §Self-speculative decoding)
+# ---------------------------------------------------------------------------
+
+def _greedy_engine(cfg, cache, prefill_chunk=0, **kw):
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.key(7))
+    return RolloutEngine(model, params, n_slots=4, prompt_len=8,
+                         max_gen_len=6, seed=3, temperature=0.0,
+                         cache=cache, block_size=4,
+                         prefill_chunk=prefill_chunk,
+                         rng="request" if prefill_chunk else "auto", **kw)
+
+
+@pytest.mark.parametrize("cache", ["ring", "paged"])
+@pytest.mark.parametrize("prefill_chunk", [0, 3])
+@pytest.mark.parametrize("family,extra", [
+    ("dense", {}),
+    ("hybrid", {"block_pattern": ("rec", "local"), "d_ff": 64,
+                "local_window": 4}),
+])
+def test_spec_greedy_matches_baseline(family, extra, cache, prefill_chunk):
+    """The tentpole identity: greedy self-speculative decoding produces
+    the SAME full token sequences as the plain engine on the same seed —
+    speculation is a pure execution-schedule change (draft k-1 with the
+    truncated model, verify in one chunk pass, commit the agreeing
+    prefix), never a sampling change."""
+    cfg = _tiny(family, n_layers=3, **extra)
+    e1 = _greedy_engine(cfg, cache, prefill_chunk)
+    e2 = _greedy_engine(cfg, cache, prefill_chunk, spec_decode=3)
+    d1 = _run_to_completion(e1, _reqs(6))
+    d2 = _run_to_completion(e2, _reqs(6))
+    assert e2.spec_rounds > 0 and e2.drafted_tokens > 0
+    for rid in d1:
+        assert d1[rid].response == d2[rid].response, (family, cache)
+        np.testing.assert_allclose(d1[rid].logprobs, d2[rid].logprobs,
+                                   atol=1e-4)
+    # every committed token is counted, and acceptance is a rate
+    assert e2.accepted_tokens == e2.tokens_generated
+    assert 0.0 <= e2.draft_acceptance_rate <= 1.0
+
+
+@pytest.mark.parametrize("cache", ["ring", "paged"])
+def test_spec_interrupt_mid_draft_is_identity(cache):
+    """A same-weights interrupt landing BETWEEN the draft and verify
+    phases discards the in-flight proposals (never the committed state),
+    so trajectories still match the uninterrupted engine exactly."""
+    cfg = _tiny("dense", n_layers=3)
+    e1 = _greedy_engine(cfg, cache)
+    d1 = _run_to_completion(e1, _reqs(5))
+
+    e2 = _greedy_engine(cfg, cache, spec_decode=3)
+    done, pending, step, mid_draft_hits = {}, _reqs(5), 0, 0
+    while len(done) < 5:
+        n = e2.admit(pending)
+        pending = pending[n:]
+        # interrupt the first few staged-but-unverified rounds (always
+        # interrupting would starve commits forever — each discarded
+        # round is redrafted on the next step)
+        if e2.spec_pending and mid_draft_hits < 3:
+            mid_draft_hits += 1
+            e2.update_weights(e2.params, e2.version)
+            assert not e2.spec_pending     # interrupt discarded the round
+        for f in e2.step():
+            done[f.rid] = f
+        step += 1
+        assert step < 500
+    assert mid_draft_hits > 0
+    for rid in d1:
+        assert d1[rid].response == done[rid].response
+        np.testing.assert_allclose(d1[rid].logprobs, done[rid].logprobs,
+                                   atol=1e-4)
+
+
+def test_fused_and_split_match_default_paged():
+    """The fused single-dispatch step and the split two-dispatch
+    baseline compose the identical jnp ops as the default paged path, so
+    all three are bitwise-equal — and the dispatch counter proves the
+    fused step really is ONE jitted call per decode step."""
+    cfg = _tiny("dense")
+
+    def run(**kw):
+        model = build_model(cfg, remat=False)
+        params = model.init(jax.random.key(7))
+        eng = RolloutEngine(model, params, n_slots=4, prompt_len=8,
+                            max_gen_len=6, seed=3, cache="paged",
+                            block_size=4, **kw)
+        return eng, _run_to_completion(eng, _reqs(6))
+
+    e_def, d_def = run()
+    e_fus, d_fus = run(fused_decode="fused")
+    e_spl, d_spl = run(fused_decode="split")
+    for rid in d_def:
+        assert d_def[rid].response == d_fus[rid].response
+        assert d_def[rid].response == d_spl[rid].response
+        assert d_def[rid].logprobs == d_fus[rid].logprobs
+        assert d_def[rid].logprobs == d_spl[rid].logprobs
+    assert e_fus.decode_dispatches == e_def.decode_dispatches
+    assert e_spl.decode_dispatches == 2 * e_def.decode_dispatches
+    st = e_fus.stats()
+    assert st["decode_dispatches"] == e_fus.decode_dispatches
+
+
+def test_decode_fastpath_validation():
+    cfg = _tiny("dense")
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.key(7))
+
+    def make(**kw):
+        return RolloutEngine(model, params, n_slots=2, prompt_len=8,
+                             max_gen_len=6, **kw)
+
+    with pytest.raises(ValueError, match="paged"):
+        make(fused_decode="fused")                     # ring + fused
+    with pytest.raises(ValueError, match="fused_decode"):
+        make(cache="paged", fused_decode="bogus")
+    with pytest.raises(ValueError, match="temperature"):
+        make(spec_decode=3)                            # sampling + spec
+    with pytest.raises(ValueError, match=">= 2"):
+        make(spec_decode=1, temperature=0.0)
+    with pytest.raises(ValueError, match="one"):
+        make(cache="paged", fused_decode="fused", spec_decode=3,
+             temperature=0.0)
+    with pytest.raises(ValueError, match="spec_draft_units"):
+        make(spec_decode=3, temperature=0.0, spec_draft_units=99)
+
+
+def test_spec_stats_surface():
+    """stats() exposes the speculative counters the fleet liveness line
+    and the decode_speed benchmark consume."""
+    cfg = _tiny("dense", n_layers=3)
+    eng = _greedy_engine(cfg, "paged", spec_decode=3)
+    _run_to_completion(eng, _reqs(4))
+    st = eng.stats()
+    for key in ("decode_dispatches", "drafted_tokens", "accepted_tokens",
+                "spec_rounds", "draft_acceptance_rate",
+                "accepted_tokens_per_step"):
+        assert key in st, key
+    assert st["drafted_tokens"] > 0
+    assert st["accepted_tokens"] == eng.tokens_generated
+    assert st["accepted_tokens_per_step"] > 0.0

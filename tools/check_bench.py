@@ -109,6 +109,30 @@ SPECS: Dict[str, List[Dict[str, Any]]] = {
         # usually puts this well above 1 on multi-core hosts).
         {"path": "throughput_ratio", "min": 0.2},
     ],
+    "BENCH_decode_speed.json": [
+        # PR 8 acceptance: the fused single-dispatch decode step is
+        # bit-identical to the default and split paths and at least as
+        # fast as the two-dispatch split baseline (best-of-repeats).
+        {"path": "fused.trajectories_identical", "equals": True},
+        {"path": "fused.throughput_ratio", "min": 1.0},
+        {"path": "fused.dispatches_per_step", "equals": 1.0},
+        # greedy self-speculative decoding reproduces the plain greedy
+        # engine's full token sequences, and under controlled 100%
+        # draft acceptance commits strictly more than one token per
+        # member-dispatch (1.0 = plain decode; k=4 full acceptance
+        # would be 2.0, EOS/headroom truncation pulls it slightly down)
+        {"path": "spec.trajectories_identical", "equals": True},
+        {"path": "spec.accepted_tokens_per_step", "min": 1.05},
+        {"path": "spec.draft_acceptance_rate", "min": 0.5},
+        # per-family decode throughput sits inside its memory-bound
+        # roofline: gap in (0, 1] for every architecture family
+        {"path": "families.transformer.measured_over_roofline",
+         "min": 1e-9, "max": 1.0},
+        {"path": "families.rg-lru.measured_over_roofline",
+         "min": 1e-9, "max": 1.0},
+        {"path": "families.xlstm.measured_over_roofline",
+         "min": 1e-9, "max": 1.0},
+    ],
     "BENCH_weight_stream.json": [
         # PR 7 acceptance: unquantized streaming is bit-for-bit
         # trajectory-identical to a monolithic full-tree update at the
