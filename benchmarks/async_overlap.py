@@ -60,8 +60,8 @@ def _build(seed: int = 0):
     import jax
 
     from repro.configs.base import ModelConfig, RLConfig
-    from repro.core import (AsyncScheduler, PPOTrainer, RolloutEngine,
-                            ThreadedRuntime)
+    from repro.core import (AsyncScheduler, EngineConfig, PPOTrainer,
+                            RolloutEngine, ThreadedRuntime)
     from repro.data import tokenizer
     from repro.data.dataset import PromptStream
     from repro.launch.train import _place_disaggregated
@@ -76,8 +76,8 @@ def _build(seed: int = 0):
                   max_prompt_len=16, max_gen_len=16)
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.key(seed))
-    engine = RolloutEngine(model, params, n_slots=8, prompt_len=16,
-                           max_gen_len=16, seed=seed)
+    engine = RolloutEngine(model, params, cfg=EngineConfig(
+        n_slots=8, prompt_len=16, max_gen_len=16, seed=seed))
     trainer = PPOTrainer(model, rl, params)
     sched = AsyncScheduler(
         prompt_stream=PromptStream(seed=seed, answers_per_prompt=4,

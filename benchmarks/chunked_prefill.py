@@ -48,6 +48,7 @@ def _build(prefill_chunk: int, seed: int = 0):
     import jax
 
     from repro.configs.base import ModelConfig
+    from repro.core.config import EngineConfig
     from repro.core.rollout import RolloutEngine
     from repro.data import tokenizer
     from repro.models.model import build_model
@@ -57,10 +58,9 @@ def _build(prefill_chunk: int, seed: int = 0):
                       vocab_size=tokenizer.VOCAB_SIZE)
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.key(seed))
-    eng = RolloutEngine(model, params, n_slots=N_SLOTS,
-                        prompt_len=PROMPT_LEN, max_gen_len=MAX_GEN,
-                        seed=seed, rng="request",
-                        prefill_chunk=prefill_chunk)
+    eng = RolloutEngine(model, params, cfg=EngineConfig(
+        n_slots=N_SLOTS, prompt_len=PROMPT_LEN, max_gen_len=MAX_GEN,
+        seed=seed, rng="request", prefill_chunk=prefill_chunk))
     return eng, params
 
 

@@ -89,6 +89,7 @@ def _cfg(family: str = "dense"):
 def _build(cfg, seed: int = 0, **engine_kw):
     import jax
 
+    from repro.core.config import EngineConfig
     from repro.core.rollout import RolloutEngine
     from repro.models.model import build_model
 
@@ -96,9 +97,9 @@ def _build(cfg, seed: int = 0, **engine_kw):
     params = model.init(jax.random.key(seed))
     if engine_kw.pop("zero_last_unit", False):
         params = _zero_last_unit(params)
-    eng = RolloutEngine(model, params, n_slots=N_SLOTS,
-                        prompt_len=PROMPT_LEN, max_gen_len=MAX_GEN,
-                        seed=seed, rng="request", **engine_kw)
+    eng = RolloutEngine(model, params, cfg=EngineConfig(
+        n_slots=N_SLOTS, prompt_len=PROMPT_LEN, max_gen_len=MAX_GEN,
+        seed=seed, rng="request", **engine_kw))
     return model, params, eng
 
 

@@ -87,7 +87,7 @@ def decode_step_us(cache: str, steps: int) -> float:
     import jax
 
     from repro.configs import reduced
-    from repro.core import RolloutEngine
+    from repro.core import EngineConfig, RolloutEngine
     from repro.data import tokenizer
     from repro.models.model import build_model
 
@@ -95,9 +95,9 @@ def decode_step_us(cache: str, steps: int) -> float:
                               vocab_size=tokenizer.VOCAB_SIZE)
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.key(0))
-    eng = RolloutEngine(model, params, n_slots=8, prompt_len=16,
-                        max_gen_len=steps + 2, temperature=-1.0, seed=0,
-                        cache=cache, block_size=BLOCK_SIZE)
+    eng = RolloutEngine(model, params, cfg=EngineConfig(
+        n_slots=8, prompt_len=16, max_gen_len=steps + 2, temperature=-1.0,
+        seed=0, cache=cache, block_size=BLOCK_SIZE))
     prompt = list(range(1, 13))
     eng.admit([{"rid": i, "prompt_id": 0, "prompt": prompt, "answer": None}
                for i in range(8)])

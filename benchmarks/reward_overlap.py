@@ -55,8 +55,8 @@ def _build(mode: str, seed: int = 0):
     import jax
 
     from repro.configs.base import ModelConfig, RLConfig
-    from repro.core import (AsyncScheduler, PPOTrainer, RolloutEngine,
-                            ThreadedRuntime)
+    from repro.core import (AsyncScheduler, EngineConfig, PPOTrainer,
+                            RolloutEngine, ThreadedRuntime)
     from repro.data import tokenizer
     from repro.env import (AsyncRewardService, DelayEnv, EnvPromptStream,
                            MathEnv)
@@ -72,8 +72,8 @@ def _build(mode: str, seed: int = 0):
                   max_prompt_len=16, max_gen_len=16)
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.key(seed))
-    engine = RolloutEngine(model, params, n_slots=8, prompt_len=16,
-                           max_gen_len=16, seed=seed)
+    engine = RolloutEngine(model, params, cfg=EngineConfig(
+        n_slots=8, prompt_len=16, max_gen_len=16, seed=seed))
     trainer = PPOTrainer(model, rl, params)
     env = DelayEnv(MathEnv(seed=seed, max_operand=9), LATENCY_S)
     service = None
@@ -131,8 +131,8 @@ def _code_env(seed: int = 0):
     import jax
 
     from repro.configs.base import ModelConfig, RLConfig
-    from repro.core import (AsyncScheduler, PPOTrainer, RolloutEngine,
-                            ThreadedRuntime)
+    from repro.core import (AsyncScheduler, EngineConfig, PPOTrainer,
+                            RolloutEngine, ThreadedRuntime)
     from repro.data import tokenizer
     from repro.env import AsyncRewardService, CodeEnv, EnvPromptStream
 
@@ -147,8 +147,8 @@ def _code_env(seed: int = 0):
                   max_prompt_len=56, max_gen_len=12)
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.key(seed))
-    engine = RolloutEngine(model, params, n_slots=4, prompt_len=56,
-                           max_gen_len=12, seed=seed)
+    engine = RolloutEngine(model, params, cfg=EngineConfig(
+        n_slots=4, prompt_len=56, max_gen_len=12, seed=seed))
     env = CodeEnv(seed=seed, timeout_s=2.0)
     service = AsyncRewardService(env, n_workers=2, max_backlog=16)
     sched = AsyncScheduler(prompt_stream=EnvPromptStream(env, 2), rl=rl,

@@ -19,6 +19,7 @@ keeps the perf scripts from rotting); with ``name`` only that module.
   fleet_overlap          Process fleet: equivalence, crash recovery, speed
   weight_stream          Streaming delta publication: identity, tokens lost
   decode_speed           Fused decode fast path + self-speculative rounds
+  serve_gateway          Serving gateway: SLA load, LRU eviction, recompute
   roofline_report        Roofline terms from the dry-run artifacts
 
 Prints ``name,us_per_call,derived`` CSV.
@@ -32,8 +33,8 @@ from benchmarks import (async_overlap, chunked_prefill, decode_speed,
                         fig1_timeline, fig4_scaling, fig5c_throughput,
                         fig6a_dynamic_batching, fig6b_interruptible,
                         fleet_overlap, paged_cache, reward_overlap,
-                        roofline_report, table1_end_to_end, table2_staleness,
-                        table8_rloo, weight_stream)
+                        roofline_report, serve_gateway, table1_end_to_end,
+                        table2_staleness, table8_rloo, weight_stream)
 from benchmarks.common import emit
 
 MODULES = [
@@ -52,6 +53,7 @@ MODULES = [
     ("fleet", fleet_overlap),
     ("wstream", weight_stream),
     ("decode", decode_speed),
+    ("gateway", serve_gateway),
     ("roofline", roofline_report),
 ]
 
@@ -71,9 +73,12 @@ MODULES = [
 # deterministic stall numbers are gated at zero drift, so the smoke run
 # keeps the fixed full schedule there and reduces only the runtime
 # sections); decode runs the fused/split/spec trajectory-identity +
-# dispatch-count battery (the fast-path engine modes must not rot).
+# dispatch-count battery (the fast-path engine modes must not rot);
+# gateway runs the serving-gateway trace — its banded metrics are
+# tick-deterministic, so the smoke run keeps the full fixed schedule
+# (same discipline as wstream's stall section).
 SMOKE_MODULES = ("fig1", "fig6a", "paged", "chunked", "overlap", "reward",
-                 "fleet", "wstream", "decode", "roofline")
+                 "fleet", "wstream", "decode", "gateway", "roofline")
 
 
 def main() -> None:

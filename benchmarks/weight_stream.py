@@ -160,11 +160,12 @@ def _requests(n: int):
 
 def _engine(model, params, *, cache: str, prefill_chunk: int,
             max_gen_len: int = 16, n_slots: int = 4, eos_id: int = -1):
+    from repro.core.config import EngineConfig
     from repro.core.rollout import RolloutEngine
-    return RolloutEngine(model, params, n_slots=n_slots, prompt_len=16,
-                        max_gen_len=max_gen_len, seed=7, eos_id=eos_id,
-                        cache=cache, prefill_chunk=prefill_chunk,
-                        rng="request")
+    return RolloutEngine(model, params, cfg=EngineConfig(
+        n_slots=n_slots, prompt_len=16, max_gen_len=max_gen_len, seed=7,
+        eos_id=eos_id, cache=cache, prefill_chunk=prefill_chunk,
+        rng="request"))
 
 
 def _identity_one(model, params0, params1_dev, msgs, *, cache: str,

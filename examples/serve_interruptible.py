@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_model_config, reduced
-from repro.core import RolloutEngine
+from repro.core import EngineConfig, RolloutEngine
 from repro.data import tokenizer
 from repro.models.model import build_model
 
@@ -44,9 +44,9 @@ def main():
     cfg = dataclasses.replace(cfg, vocab_size=tokenizer.VOCAB_SIZE)
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.key(0))
-    engine = RolloutEngine(model, params, n_slots=6, prompt_len=16,
-                           max_gen_len=12, seed=0, cache=args.cache,
-                           block_size=args.block_size)
+    engine = RolloutEngine(model, params, cfg=EngineConfig(
+        n_slots=6, prompt_len=16, max_gen_len=12, seed=0, cache=args.cache,
+        block_size=args.block_size))
 
     # GRPO-style groups: each prompt sampled twice, so in paged mode the
     # second sample of a group shares its prompt's full KV blocks

@@ -18,6 +18,7 @@ components).
   weights      versioned parameter store (trainer -> rollout publication)
 """
 from repro.core.buffer import ReplayBuffer, Trajectory
+from repro.core.config import EngineConfig
 from repro.core.controller import AsyncRLController, TimingModel
 from repro.core.fleet import FleetRuntime
 from repro.core.reward import RewardService
@@ -29,7 +30,8 @@ from repro.core.trainer import PPOTrainer, TrainMetrics
 from repro.core.weights import ParameterStore
 
 __all__ = [
-    "AsyncRLController", "AsyncScheduler", "Finished", "FleetRuntime",
+    "AsyncRLController", "AsyncScheduler", "EngineConfig", "Finished",
+    "FleetRuntime",
     "ParameterStore", "PPOTrainer", "ReplayBuffer", "RewardService",
     "RolloutEngine", "StalenessController", "StalenessStats", "StepLog",
     "ThreadedRuntime", "TimingModel", "TrainMetrics", "Trajectory",

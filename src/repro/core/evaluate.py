@@ -11,6 +11,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional
 
+from repro.core.config import EngineConfig
 from repro.core.rollout import RolloutEngine
 from repro.data import tokenizer
 from repro.data.tasks import MathTaskGenerator, verify
@@ -36,10 +37,9 @@ def evaluate(model, params, *, n_problems: int = 64, prompt_len: int = 24,
     The eval problem stream uses a disjoint seed space from training
     (default 10_000) so memorization of the training stream cannot
     inflate accuracy."""
-    eng = engine or RolloutEngine(model, params, n_slots=n_slots,
-                                  prompt_len=prompt_len,
-                                  max_gen_len=max_gen_len,
-                                  temperature=temperature, seed=seed)
+    eng = engine or RolloutEngine(model, params, cfg=EngineConfig(
+        n_slots=n_slots, prompt_len=prompt_len, max_gen_len=max_gen_len,
+        temperature=temperature, seed=seed))
     gen = MathTaskGenerator(seed=seed, max_operand=max_operand)
     pending = []
     for i in range(n_problems):

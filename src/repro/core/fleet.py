@@ -344,12 +344,14 @@ def build_engine(*, model_cfg, seed: int, engine_kwargs: Dict):
     identical weights without any initial broadcast."""
     import jax
 
+    from repro.core.config import EngineConfig
     from repro.core.rollout import RolloutEngine
     from repro.models.model import build_model
 
     model = build_model(model_cfg, remat=False)
     params = model.init(jax.random.key(seed))
-    return RolloutEngine(model, params, seed=seed, **engine_kwargs)
+    return RolloutEngine(model, params,
+                         cfg=EngineConfig(seed=seed, **engine_kwargs))
 
 
 def build_trainer(*, model_cfg, rl, seed: int, pack_rows: int = 1):

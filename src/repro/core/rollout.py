@@ -54,6 +54,7 @@ Two prefill disciplines (``prefill_chunk``):
 from __future__ import annotations
 
 import threading
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -64,6 +65,7 @@ import numpy as np
 from repro.configs.base import ModelConfig, RLConfig
 from repro.core.batching import (BlockAllocator, plan_prefill_chunks,
                                  prefix_block_hashes)
+from repro.core.config import EngineConfig
 from repro.data import tokenizer
 
 
@@ -138,29 +140,49 @@ class RolloutEngine:
     into the engine directly.  The contract is enforced by a cheap
     owner-thread assertion; ``release_driver()`` hands ownership off."""
 
-    def __init__(self, model, params, *, n_slots: int, prompt_len: int,
-                 max_gen_len: int, temperature: float = 1.0,
-                 eos_id: int = tokenizer.EOS, seed: int = 0,
-                 version: int = 0, dtype=jnp.float32,
-                 cache: str = "ring", block_size: int = 16,
-                 n_blocks: Optional[int] = None,
-                 prefill_chunk: int = 0, rng: str = "auto",
-                 continuation=None, fused_decode: Optional[str] = None,
-                 spec_decode: int = 0,
-                 spec_draft_units: Optional[int] = None):
+    def __init__(self, model, params, cfg: Optional[EngineConfig] = None,
+                 **legacy):
+        """Primary form: ``RolloutEngine(model, params, cfg=EngineConfig(
+        n_slots=..., ...))`` — every pure-config invariant is validated
+        by ``EngineConfig.__post_init__`` (DESIGN.md §Serving gateway).
+
+        The legacy flat-kwarg form (``RolloutEngine(model, params,
+        n_slots=8, cache="paged", ...)``) is accepted for one release:
+        the kwargs forward into an ``EngineConfig`` and a
+        ``DeprecationWarning`` is emitted."""
+        if legacy:
+            if cfg is not None:
+                raise TypeError("pass EngineConfig OR legacy kwargs, "
+                                "not both")
+            warnings.warn(
+                "RolloutEngine(model, params, n_slots=..., ...) is "
+                "deprecated; pass cfg=EngineConfig(...) instead "
+                "(DESIGN.md §Serving gateway)",
+                DeprecationWarning, stacklevel=2)
+            cfg = EngineConfig(**legacy)
+        elif cfg is None:
+            cfg = EngineConfig()
         self.model = model
         self.cfg: ModelConfig = model.cfg
+        self.engine_config = cfg
         self.params = params
-        self.version = version
-        self.n_slots = n_slots
-        self.prompt_len = prompt_len
-        self.max_gen_len = max_gen_len
-        self.max_len = prompt_len + max_gen_len
-        self.temperature = temperature
-        self.eos_id = eos_id
-        self.dtype = dtype
-        self._rng = jax.random.key(seed)
+        self.version = cfg.version
+        self.n_slots = cfg.n_slots
+        self.prompt_len = cfg.prompt_len
+        self.max_gen_len = cfg.max_gen_len
+        self.max_len = cfg.prompt_len + cfg.max_gen_len
+        self.temperature = cfg.temperature
+        self.eos_id = cfg.eos_id
+        self.dtype = jnp.float32 if cfg.dtype is None else cfg.dtype
+        self._rng = jax.random.key(cfg.seed)
         self._step_count = 0
+        n_slots = cfg.n_slots
+        block_size = cfg.block_size
+        cache = cfg.cache
+        continuation = cfg.continuation
+        fused_decode = cfg.fused_decode
+        spec_decode = cfg.spec_decode
+        spec_draft_units = cfg.spec_draft_units
 
         self.slots = [Slot() for _ in range(n_slots)]
         self._pending_weights: Optional[Tuple] = None
@@ -179,29 +201,12 @@ class RolloutEngine:
         self.weight_streams_torn = 0
 
         # decode fast paths (DESIGN.md §Fused decode tail,
-        # §Self-speculative decoding)
-        if fused_decode not in (None, "fused", "split"):
-            raise ValueError(f"fused_decode must be None, 'fused' or "
-                             f"'split', got {fused_decode!r}")
-        if fused_decode is not None and cache != "paged":
-            raise ValueError("fused_decode requires cache='paged': the "
-                             "fused tail is a paged-pool kernel "
-                             "(DESIGN.md §Fused decode tail)")
+        # §Self-speculative decoding); pure-config invariants (spec x
+        # fused exclusivity, spec-forces-greedy, fused-needs-paged) are
+        # validated by EngineConfig — only MODEL-capability checks remain
         self.fused_decode = fused_decode
         self.spec_decode = int(spec_decode)
         if self.spec_decode:
-            if self.spec_decode < 2:
-                raise ValueError("spec_decode is the total tokens per "
-                                 "round (1 committed + drafts); needs >= 2")
-            if temperature > 0.0:
-                raise ValueError(
-                    "spec_decode requires temperature <= 0 (greedy): "
-                    "acceptance compares draft tokens against the full "
-                    "model's argmax, which is only exact without sampling "
-                    "(DESIGN.md §Self-speculative decoding)")
-            if fused_decode is not None:
-                raise ValueError("spec_decode and fused_decode are "
-                                 "separate decode fast paths; enable one")
             chunk_attr = ("prefill_chunk_paged" if cache == "paged"
                           else "prefill_chunk")
             if not hasattr(model, chunk_attr):
@@ -227,6 +232,8 @@ class RolloutEngine:
         self.prefix_reused_blocks = 0
         self.deferred = 0                  # requests bounced on pool pressure
         self.deferred_last = 0             # ... by the most recent admit()
+        self.preemptions = 0               # slots preempted by the gateway
+        self.resumes = 0                   # preempted requests re-admitted
         self.decode_steps_during_prefill = 0
         self.continuations = 0             # multi-turn episode extensions
         self.continuation_tokens = 0       # appended-span tokens ingested
@@ -242,31 +249,18 @@ class RolloutEngine:
         # fn(finished, turn, budget) -> env tokens to
         # append (the trajectory continues in place, reusing its cache
         # and pool blocks) or None to finish.  Appending re-enters the
-        # FIFO ingest queue, so it requires the chunked-prefill engine.
+        # FIFO ingest queue, so it requires the chunked-prefill engine
+        # (enforced by EngineConfig).
         self.continuation = continuation
-        if continuation is not None and not prefill_chunk:
-            raise ValueError(
-                "continuation (multi-turn environments) requires "
-                "prefill_chunk > 0: appended env tokens are ingested "
-                "through the FIFO span queue "
-                "(DESIGN.md §Environments and reward service)")
 
         # RNG discipline: "step" folds a global step counter into one key
         # per jit call (the legacy scheme — trajectories depend on batch
         # timing); "request" derives every draw from (seed, rid,
         # draw_index), making trajectories independent of admission
         # timing, interrupts, and chunking (DESIGN.md §Chunked prefill).
-        self.prefill_chunk = int(prefill_chunk)
-        if rng == "auto":
-            rng = "request" if self.prefill_chunk else "step"
-        assert rng in ("step", "request"), rng
-        if self.prefill_chunk and rng != "request":
-            raise ValueError("prefill_chunk > 0 requires rng='request': "
-                             "the step-counter scheme cannot reproduce "
-                             "monolithic trajectories under chunking")
-        self.rng_mode = rng
+        self.prefill_chunk = int(cfg.prefill_chunk)
+        self.rng_mode = cfg.resolved_rng
 
-        assert cache in ("ring", "paged"), cache
         self.cache_mode = cache
         if cache == "paged":
             if not hasattr(model, "init_paged_cache"):
@@ -275,12 +269,13 @@ class RolloutEngine:
                     "support (DESIGN.md §Arch-applicability)")
             self.block_size = block_size
             self.n_entries = -(-self.max_len // block_size)
-            self.n_blocks = n_blocks or n_slots * self.n_entries
-            self.allocator = BlockAllocator(self.n_blocks, block_size)
+            self.n_blocks = cfg.n_blocks or n_slots * self.n_entries
+            self.allocator = BlockAllocator(self.n_blocks, block_size,
+                                            evict=cfg.evict)
             self.tables = np.full((n_slots, self.n_entries), -1, np.int32)
             self._tables_dev = None        # device copy, refreshed on change
             self.cache = model.init_paged_cache(n_slots, self.n_blocks,
-                                                block_size, dtype)
+                                                block_size, self.dtype)
             if self.fused_decode == "fused":
                 self._jit_decode_paged = jax.jit(self._decode_paged_fused_fn)
             else:
@@ -301,7 +296,7 @@ class RolloutEngine:
                 raise ValueError(
                     "prefill_chunk > 0 needs a decoder-only LM with chunked "
                     "prefill support (DESIGN.md §Chunked prefill)")
-            self.cache = model.init_cache(n_slots, self.max_len, dtype)
+            self.cache = model.init_cache(n_slots, self.max_len, self.dtype)
             self._jit_decode = jax.jit(self._decode_fn)
             self._jit_prefill = jax.jit(self._prefill_fn)
             self._jit_insert = jax.jit(self.model.cache_insert)
@@ -579,6 +574,12 @@ class RolloutEngine:
             "prefix_reused_blocks": self.prefix_reused_blocks,
             "deferred": self.deferred,
             "deferred_last": self.deferred_last,
+            "preemptions": self.preemptions,
+            "resumes": self.resumes,
+            "evictions": (self.allocator.evictions
+                          if self.cache_mode == "paged" else 0),
+            "revivals": (self.allocator.revivals
+                         if self.cache_mode == "paged" else 0),
             "decode_steps_during_prefill": self.decode_steps_during_prefill,
             "ingest_backlog_tokens": self.ingest_backlog_tokens(),
             "continuations": self.continuations,
@@ -693,8 +694,16 @@ class RolloutEngine:
             prefix, reused = self.allocator.plan_prefix(self.version, prompt)
         except MemoryError:
             return None
-        if self.allocator.n_free < need - n_full:
-            for b in prefix:
+        if self.allocator.n_available < need - n_full:
+            # Rollback must not leak resources OR registrations: a fresh
+            # block was registered by plan_prefix but never written, so
+            # withdraw the registration before releasing — otherwise LRU
+            # mode parks it as a garbage-content prefix holder and the
+            # eviction cache serves wrong reuse (the continuation-re-entry
+            # deferral leak; DESIGN.md §Prefix eviction policy).
+            for j, b in enumerate(prefix):
+                if j >= reused:
+                    self.allocator.invalidate(b)
                 self.allocator.release(b)
             return None                    # pool full: request stays queued
         tag = -1 if fresh_unwritten else self.version
@@ -820,6 +829,101 @@ class RolloutEngine:
         ids = np.full((self.n_slots,), self.n_slots + 1, np.int32)
         ids[:len(slot_ids)] = slot_ids
         self.cache = self._jit_reset(self.cache, jnp.asarray(ids))
+
+    # ---- preempt / resume (DESIGN.md §Serving gateway) --------------------
+    def preempt_slot(self, i: int) -> Dict:
+        """Evict an ACTIVE slot mid-generation, returning a host-side
+        snapshot ``admit_resume`` can later re-admit bit-exactly.
+
+        This is the gateway's SLA lever (DESIGN.md §Serving gateway): a
+        low-priority slot is preempted to make room for an urgent
+        request, exactly like a weight-update interrupt except only one
+        slot is touched and the trajectory is parked host-side instead
+        of re-queued immediately.  Bit-exactness rests on the
+        per-request RNG discipline: every draw is a pure function of
+        (seed, rid, draw_index), so replaying the history through the
+        chunked ingest queue and continuing the decode loop reproduces
+        the uninterrupted trajectory (requires ``prefill_chunk > 0``)."""
+        self._assert_single_driver()
+        if not self.prefill_chunk:
+            raise ValueError("preempt/resume requires prefill_chunk > 0: "
+                             "resumption replays the history through the "
+                             "chunked ingest queue "
+                             "(DESIGN.md §Serving gateway)")
+        s = self.slots[i]
+        if not s.active:
+            raise ValueError(f"slot {i} is not active")
+        snap = {
+            "rid": s.rid,
+            "prompt_id": s.prompt_id,
+            "prompt": list(s.prompt),
+            "response": list(s.response),
+            "logprobs": list(s.logprobs),
+            "versions": list(s.versions),
+            "behavior_version": s.behavior_version,
+            "answer": s.answer,
+            "submit_time": s.submit_time,
+            "turns": s.turns,
+            "env_spans": list(s.env_spans),
+        }
+        if i in self._ingest_queue:
+            self._ingest_queue.remove(i)
+        if self.cache_mode == "paged":
+            self._release_slot_blocks(i)
+        self.slots[i] = Slot()
+        self.preemptions += 1
+        return snap
+
+    def admit_resume(self, snap: Dict, clock: float = 0.0) -> Optional[int]:
+        """Re-admit a ``preempt_slot`` snapshot.  Returns the slot index,
+        or None when no slot / no pool headroom exists (the caller keeps
+        the snapshot and retries).  The history (prompt +
+        response[:-1]) re-enters the FIFO ingest queue; prefix-shared
+        pool blocks still current are skipped by the chunked dest rule,
+        evicted ones are recomputed — either way the decode continues
+        from the snapshot's pending token with the per-request RNG at
+        draw index len(response), which is what makes the resumed
+        trajectory bit-exact (tested in tests/test_gateway.py)."""
+        self._assert_single_driver()
+        if not self.prefill_chunk:
+            raise ValueError("admit_resume requires prefill_chunk > 0")
+        free = self.free_slots()
+        if not free:
+            return None
+        i = free[0]
+        p = list(snap["prompt"])[: self.prompt_len]
+        if self.cache_mode == "paged":
+            plan = self._plan_blocks(p, fresh_unwritten=True)
+            if plan is None:
+                self.deferred += 1         # pool pressure: retry later
+                return None
+            row, _ = plan
+            self.tables[i, :] = -1
+            self.tables[i, :len(row)] = row
+            self._tables_dev = None
+        s = self.slots[i] = Slot()
+        s.active = True
+        s.rid = snap["rid"]
+        s.prompt_id = snap["prompt_id"]
+        s.prompt = p
+        s.answer = snap["answer"]
+        s.submit_time = snap["submit_time"]
+        s.behavior_version = snap["behavior_version"]
+        s.turns = snap["turns"]
+        s.env_spans = [tuple(x) for x in snap["env_spans"]]
+        resp = list(snap["response"])
+        if resp:
+            s.response = resp
+            s.logprobs = list(snap["logprobs"])
+            s.versions = list(snap["versions"])
+            s.pending = int(resp[-1])
+        # an empty response resumes as a fresh admission: the span that
+        # completes the prompt samples draw index 0, same as first time
+        hist = ((p or [0]) + resp[:-1])[: self.max_len]
+        self._queue_ingest(i, hist, reingest=True)
+        self._reset_rows([i])
+        self.resumes += 1
+        return i
 
     def _ingest_one_chunk(self) -> None:
         """Feed the head-of-queue slot's next span.  Strictly FIFO across

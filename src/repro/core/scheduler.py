@@ -48,6 +48,7 @@ flag so a requeued or re-offered request is never double-counted.
 """
 from __future__ import annotations
 
+import heapq
 import math
 import threading
 from dataclasses import dataclass, field
@@ -422,6 +423,65 @@ class AsyncScheduler:
     def tokens_consumed(self) -> int:
         with self._lock:
             return sum(h.n_tokens for h in self.history)
+
+
+class SLAQueue:
+    """Priority/deadline admission queue for the serving gateway
+    (DESIGN.md §Serving gateway).
+
+    Orders pending requests by ``(priority, deadline, arrival)``: lower
+    priority value = more urgent tier; within a tier the earliest
+    deadline wins (EDF); ties break FIFO by arrival sequence.  The
+    gateway drains it into engine slots and consults ``head_key`` to
+    decide preemption — a queued request beats a RUNNING one only when
+    its priority tier is strictly more urgent, so same-tier traffic
+    never thrashes slots.
+
+    Thread-safe: HTTP handler threads push concurrently with the single
+    driver thread popping."""
+
+    def __init__(self):
+        self._heap: List[tuple] = []
+        self._seq = 0
+        self._lock = threading.Lock()
+        self.pushed_total = 0
+        self.popped_total = 0
+
+    def push(self, item, *, priority: int = 1,
+             deadline: float = math.inf) -> None:
+        with self._lock:
+            heapq.heappush(self._heap,
+                           (int(priority), float(deadline), self._seq, item))
+            self._seq += 1
+            self.pushed_total += 1
+
+    def pop(self):
+        """Most-urgent pending item, or None when empty."""
+        with self._lock:
+            if not self._heap:
+                return None
+            self.popped_total += 1
+            return heapq.heappop(self._heap)[3]
+
+    def head_key(self) -> Optional[tuple]:
+        """(priority, deadline) of the most-urgent pending item, or
+        None.  The gateway compares this against the least-urgent
+        ACTIVE slot's key to decide preemption."""
+        with self._lock:
+            if not self._heap:
+                return None
+            p, d, _, _ = self._heap[0]
+            return (p, d)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._heap)
+
+    def overdue(self, now: float) -> int:
+        """Pending items whose deadline already passed (diagnostics —
+        the SLA-miss pressure gauge in gateway stats)."""
+        with self._lock:
+            return sum(1 for _, d, _, _ in self._heap if d < now)
 
 
 class SchedulerExecutorMixin:

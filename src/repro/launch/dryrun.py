@@ -33,7 +33,7 @@ from repro import optim
 from repro.configs import get_model_config, get_shape, ASSIGNED_ARCHS, SHAPES
 from repro.configs.base import RLConfig
 from repro.dist import sharding
-from repro.launch import hlo_analysis
+from repro.launch import cli, hlo_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.launch import steps as steps_mod
 from repro.models import model as model_mod
@@ -299,21 +299,8 @@ def main(argv=None):
     ap.add_argument("--remat-policy", default="none", choices=["none", "dots"])
     ap.add_argument("--accum", type=int, default=8,
                     help="grad-accumulation micro-steps inside train_step")
-    ap.add_argument("--paged-cache", action="store_true",
-                    help="decode shapes: lower the paged block-pool decode "
-                         "step (DESIGN.md §Paged KV-cache pool) instead of "
-                         "the ring-buffer serve_step")
-    ap.add_argument("--block-size", type=int, default=16,
-                    help="KV block width (tokens) for --paged-cache")
-    ap.add_argument("--prefill-chunk", type=int, default=0,
-                    help="decode shapes with --paged-cache: also lower + "
-                         "compile the chunked-prefill ingest step with "
-                         "spans of N tokens (DESIGN.md §Chunked prefill)")
-    ap.add_argument("--fused-decode", action="store_true",
-                    help="decode shapes with --paged-cache: lower the fused "
-                         "fast-path step (hoisted block-table gather + "
-                         "fused attention/projection tail; DESIGN.md "
-                         "§Fused decode tail)")
+    # engine flags (dry-run boolean variants) come from launch/cli.py
+    cli.add_engine_flags(ap, dryrun=True)
     ap.add_argument("--extra", default="", help="free-form variant tag")
     ap.add_argument("--out", default=None, help="output dir for JSON records")
     args = ap.parse_args(argv)

@@ -1,10 +1,20 @@
-"""Serving launcher: batched request serving through the interruptible
-rollout engine (no RL) — the standalone inference-side of AReaL, with
-optional periodic weight refresh from a checkpoint directory (the
-production pattern: rollout pods polling the trainer's parameter store).
+"""Serving launcher: a thin CLI over the production gateway
+(repro/serve/, DESIGN.md §Serving gateway).
 
-    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --requests 32
-    PYTHONPATH=src python -m repro.launch.serve --cache paged --block-size 16
+Two modes share one engine + gateway construction path:
+
+  * ``--port N`` — serve HTTP: streaming ``POST /v1/completions`` plus
+    ``/stats`` and ``/healthz`` (serve/http.py).  Handler threads only
+    enqueue; a single driver thread owns the engine.
+  * offline (default) — submit ``--requests`` synthetic requests drawn
+    from ``--env`` through the gateway (optionally spread over
+    ``--sessions`` logical sessions so consecutive requests in a
+    session prefix-share KV blocks), pump to completion, verify, and
+    print a JSON summary.
+
+    PYTHONPATH=src python -m repro.launch.serve --cache paged --prefill-chunk 16
+    PYTHONPATH=src python -m repro.launch.serve --cache paged --evict lru \
+        --port 8000 --sla-ms 2000
 """
 from __future__ import annotations
 
@@ -12,6 +22,7 @@ import argparse
 import dataclasses
 import json
 import time
+from types import SimpleNamespace
 
 import jax
 
@@ -19,79 +30,15 @@ from repro import checkpoint
 from repro.configs import get_model_config, reduced
 from repro.core import RolloutEngine
 from repro.data import tokenizer
-from repro.env import AsyncRewardService, make_env
+from repro.env import make_env
+from repro.launch import cli
 from repro.models.model import build_model
+from repro.serve import Gateway, GatewayServer
 
 
-class _ServeSink:
-    """Deposit target for served-request scoring (no replay buffer):
-    counts verdicts for the summary line."""
-
-    def __init__(self):
-        self.n = 0
-        self.n_ok = 0
-
-    def deposit_scored(self, fin, verdict, finish_time):
-        self.n += 1
-        self.n_ok += int(verdict.ok)
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="areal-qwen-1.5b")
-    ap.add_argument("--requests", type=int, default=32)
-    ap.add_argument("--env", default="math",
-                    choices=["math", "code", "multiturn"],
-                    help="workload to serve + verify (repro/env/, "
-                         "DESIGN.md §Environments and reward service); "
-                         "multiturn installs the continuation hook and "
-                         "auto-enables chunked prefill")
-    ap.add_argument("--reward-workers", type=int, default=0,
-                    help="score finished generations on an async reward "
-                         "worker pool instead of inline after the serve "
-                         "loop (0 = inline)")
-    ap.add_argument("--slots", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=24)
-    ap.add_argument("--max-gen", type=int, default=16)
-    ap.add_argument("--ckpt", default="", help="load weights from checkpoint")
-    ap.add_argument("--refresh-every", type=int, default=0,
-                    help="decode steps between weight refresh interrupts")
-    ap.add_argument("--cache", default="ring", choices=["ring", "paged"],
-                    help="KV-cache organization: 'ring' = per-slot ring "
-                         "buffers (default); 'paged' = global block pool + "
-                         "per-slot block tables with prompt-prefix sharing "
-                         "(DESIGN.md §Paged KV-cache pool)")
-    ap.add_argument("--block-size", type=int, default=16,
-                    help="tokens per KV block for --cache paged "
-                         "(default: 16)")
-    ap.add_argument("--pool-blocks", type=int, default=0,
-                    help="paged pool size in blocks; 0 = worst-case "
-                         "(slots * ceil(max_len / block_size))")
-    ap.add_argument("--prefill-chunk", type=int, default=0,
-                    help="chunked prefill: ingest at most N prompt tokens "
-                         "per engine step so admission and weight-refresh "
-                         "re-prefills never stall decoding (0 = monolithic; "
-                         "DESIGN.md §Chunked prefill)")
-    ap.add_argument("--fused-decode", default="", choices=["", "fused",
-                                                           "split"],
-                    help="paged decode fast path: 'fused' = one dispatch "
-                         "per step (shared block-table gather, fused "
-                         "attention+projection tail, in-jit sampling); "
-                         "'split' = logits and sampling as separate "
-                         "dispatches (measurement baseline; DESIGN.md "
-                         "§Fused decode tail)")
-    ap.add_argument("--spec-decode", type=int, default=0,
-                    help="self-speculative decoding: total tokens per "
-                         "round (1 committed + N-1 truncated-layer "
-                         "drafts); requires greedy sampling, trajectories "
-                         "are identical to the plain engine (0 = off; "
-                         "DESIGN.md §Self-speculative decoding)")
-    ap.add_argument("--spec-draft-units", type=int, default=0,
-                    help="stacked units the draft pass runs (0 = all but "
-                         "the last)")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
+def build_gateway(args):
+    """Model + engine + gateway from parsed flags (shared by both
+    modes and by the gateway-smoke CI job)."""
     cfg = dataclasses.replace(reduced(get_model_config(args.arch)),
                               vocab_size=tokenizer.VOCAB_SIZE)
     model = build_model(cfg, remat=False)
@@ -101,86 +48,81 @@ def main():
         print(f"loaded checkpoint {args.ckpt} (version {meta.get('version')})")
     env = make_env(args.env, seed=args.seed)
     continuation = env.continuation_hook()
-    prefill_chunk = args.prefill_chunk
-    if continuation is not None and prefill_chunk <= 0:
-        prefill_chunk = args.prompt_len    # turns need the span queue
-    extra = {}
-    if args.spec_decode:
-        extra["temperature"] = 0.0         # speculation is greedy-only
-    engine = RolloutEngine(model, params, n_slots=args.slots,
-                           prompt_len=args.prompt_len,
-                           max_gen_len=args.max_gen, seed=args.seed,
-                           cache=args.cache, block_size=args.block_size,
-                           n_blocks=args.pool_blocks or None,
-                           prefill_chunk=prefill_chunk,
-                           continuation=continuation,
-                           fused_decode=args.fused_decode or None,
-                           spec_decode=args.spec_decode,
-                           spec_draft_units=args.spec_draft_units or None,
-                           **extra)
+    overrides = {}
+    if continuation is not None:
+        overrides["continuation"] = continuation
+        if args.prefill_chunk <= 0:        # turns need the span queue
+            overrides["prefill_chunk"] = args.prompt_len
+    if args.prefill_chunk <= 0 and "prefill_chunk" not in overrides:
+        # the gateway resumes preempted requests through the chunked
+        # ingest queue; default to one-span-per-step prompt ingestion
+        overrides["prefill_chunk"] = args.prompt_len
+    ec = cli.engine_config_from_args(args, **overrides)
+    engine = RolloutEngine(model, params, cfg=ec)
+    return Gateway(engine), env
 
-    pending = []
+
+def run_offline(gw: Gateway, env, args) -> dict:
+    answers = {}
+    t0 = time.time()
     for i in range(args.requests):
         p = env.sample()
-        pending.append({"rid": i, "prompt_id": p.pid,
-                        "prompt": p.prompt_tokens, "answer": p.answer})
-
-    sink = _ServeSink()
-    service = None
-    if args.reward_workers > 0:
-        service = AsyncRewardService(env, n_workers=args.reward_workers)
-        service.bind(sink)
-
-    t0 = time.time()
-    done, steps, version = [], 0, 0
-    while len(done) < args.requests:
-        n = engine.admit(pending)
-        pending = pending[n:]
-        finished = engine.step()
-        done += finished
-        if service is not None and finished:
-            # scoring overlaps the remaining decode steps (Section 4.1)
-            service.submit(finished, time.time() - t0)
-        steps += 1
-        if args.refresh_every and steps % args.refresh_every == 0:
-            version += 1              # stand-in for a parameter-store pull
-            engine.update_weights(engine.params, version)
-        if steps > 100_000:
-            raise RuntimeError("serve loop did not converge")
-    if service is not None:
-        assert service.close(), "reward workers failed to drain"
-    else:
-        for f in done:
-            sink.deposit_scored(f, env.verify(f), 0.0)
+        sid = f"s{i % args.sessions}" if args.sessions else None
+        rid = gw.submit(p.prompt_tokens, session=sid,
+                        sla=args.sla_ms or None, answer=p.answer)
+        answers[rid] = p.answer
+    ticks = gw.run_until_idle()
     dt = time.time() - t0
-    toks = sum(len(f.response) for f in done)
+    n_ok = 0
+    toks = 0
+    for rid, ans in answers.items():
+        d = gw.drain(rid)
+        assert d["end"] is not None, f"request {rid} never finished"
+        toks += len(d["tokens"])
+        fin = SimpleNamespace(response=d["tokens"], answer=ans,
+                              prompt=[], rid=rid)
+        n_ok += int(env.verify(fin).ok)
+    st = gw.stats()
     out = {
-        "requests": len(done), "decode_steps": steps,
+        "requests": len(answers), "ticks": ticks,
         "generated_tokens": toks, "tokens_per_s": round(toks / dt, 1),
-        "interruptions": engine.interruptions,
-        "mean_len": round(toks / len(done), 2),
-        "env": args.env, "verified_ok": sink.n_ok, "verified": sink.n,
+        "mean_len": round(toks / max(1, len(answers)), 2),
+        "env": args.env, "verified_ok": n_ok, "verified": len(answers),
+        "sessions": args.sessions,
     }
-    if engine.continuations:
-        out["continuations"] = engine.continuations
-        out["continuation_tokens"] = engine.continuation_tokens
-    if service is not None:
-        out["reward_service"] = service.stats()
-    if args.cache == "paged":
-        out["prefix_reused_blocks"] = engine.prefix_reused_blocks
-        out["reprefill_tokens"] = engine.reprefill_tokens
-        out["deferred"] = engine.deferred
-    if args.prefill_chunk:
-        out["decode_steps_during_prefill"] = \
-            engine.decode_steps_during_prefill
-    if args.fused_decode or args.spec_decode:
-        out["decode_dispatches"] = engine.decode_dispatches
-    if args.spec_decode:
-        out["accepted_tokens_per_step"] = \
-            round(engine.accepted_tokens_per_step, 3)
-        out["draft_acceptance_rate"] = \
-            round(engine.draft_acceptance_rate, 3)
-    print(json.dumps(out))
+    for k in ("sla_misses", "preemptions", "resumes", "evictions",
+              "revivals", "deferred", "prefix_hit_rate", "session_hits",
+              "ttft_p50", "ttft_p99"):
+        out[k] = st[k]
+    eng = gw.engine
+    if eng.continuations:
+        out["continuations"] = eng.continuations
+        out["continuation_tokens"] = eng.continuation_tokens
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="areal-qwen-1.5b")
+    ap.add_argument("--requests", type=int, default=32,
+                    help="offline mode: synthetic requests to serve")
+    ap.add_argument("--ckpt", default="", help="load weights from checkpoint")
+    cli.add_engine_flags(ap)
+    cli.add_env_flags(ap, default="math", allow_legacy=False)
+    cli.add_gateway_flags(ap)
+    args = ap.parse_args()
+
+    gw, env = build_gateway(args)
+    if args.port:
+        srv = GatewayServer(gw, host=args.host, port=args.port,
+                            default_sla_ms=args.sla_ms)
+        print(json.dumps({"serving": f"http://{args.host}:{srv.port}",
+                          "arch": args.arch,
+                          "evict": gw.engine.engine_config.evict}),
+              flush=True)
+        srv.serve_forever()
+    else:
+        print(json.dumps(run_offline(gw, env, args)))
 
 
 if __name__ == "__main__":

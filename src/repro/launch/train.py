@@ -46,12 +46,13 @@ import jax
 
 from repro.configs import get_model_config, reduced
 from repro.configs.base import RLConfig
+from repro.core.config import EngineConfig
 from repro.core import (AsyncRLController, AsyncScheduler, PPOTrainer,
                         ParameterStore, RolloutEngine, ThreadedRuntime)
 from repro.core.simulator import HardwareModel, WorkloadModel, make_llm_timing
 from repro.data import tokenizer
 from repro.data.dataset import PromptStream
-from repro.launch import disaggregated
+from repro.launch import cli, disaggregated
 from repro.models.model import build_model
 
 
@@ -96,7 +97,9 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
                  rollout_workers: int = 2, trainer_procs: int = 1,
                  elastic: bool = False, min_workers: int = 1,
                  weight_stream: str = "full", fused_decode: str = "",
-                 spec_decode: int = 0, spec_draft_units: int = 0):
+                 spec_decode: int = 0, spec_draft_units: int = 0,
+                 cache: str = "ring", block_size: int = 16,
+                 pool_blocks: int = 0, evict: str = "off"):
     """End-to-end AReaL training on a verifiable environment.
 
     ``env`` selects the workload (DESIGN.md §Environments and reward
@@ -140,7 +143,8 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
             # which only the chunked engine has
             prefill_chunk = prompt_len
 
-    eng_extra = {}
+    eng_extra = {"cache": cache, "block_size": block_size,
+                 "n_blocks": pool_blocks or None, "evict": evict}
     if fused_decode:
         eng_extra["cache"] = "paged"       # the fused tail is a paged-path jit
         eng_extra["fused_decode"] = fused_decode
@@ -153,10 +157,10 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
     engine = trainer = None
     if runtime != "fleet":                 # fleet workers build their own
         params = model.init(jax.random.key(seed))
-        engine = RolloutEngine(model, params, n_slots=n_slots,
-                               prompt_len=prompt_len, max_gen_len=max_gen_len,
-                               seed=seed, prefill_chunk=prefill_chunk,
-                               continuation=continuation, **eng_extra)
+        engine = RolloutEngine(model, params, cfg=EngineConfig(
+            n_slots=n_slots, prompt_len=prompt_len, max_gen_len=max_gen_len,
+            seed=seed, prefill_chunk=prefill_chunk,
+            continuation=continuation, **eng_extra))
         trainer = PPOTrainer(model, rl, params)
     store = ParameterStore(ckpt_dir=ckpt_dir or None,
                            ckpt_every=10 if ckpt_dir else 0)
@@ -267,87 +271,10 @@ def main():
     ap.add_argument("--arch", default="areal-qwen-1.5b")
     ap.add_argument("--steps", type=int, default=25)
     ap.add_argument("--scale", default="laptop", choices=["laptop", "pod"])
-    ap.add_argument("--runtime", default="virtual",
-                    choices=["virtual", "threaded", "fleet"],
-                    help="virtual-clock executor (deterministic), the "
-                         "threaded disaggregated runtime (real concurrency) "
-                         "or the multi-process elastic fleet (supervised "
-                         "worker processes, DESIGN.md §Fleet runtime)")
-    ap.add_argument("--rollout-workers", type=int, default=2,
-                    help="--runtime fleet: initial number of rollout worker "
-                         "processes")
-    ap.add_argument("--trainer-procs", type=int, default=1,
-                    help="--runtime fleet: trainer replica processes "
-                         "(stateless executors — any M reproduces the "
-                         "single-trainer step sequence)")
-    ap.add_argument("--elastic", action="store_true",
-                    help="--runtime fleet: grow the rollout fleet while "
-                         "generation starves admission, shrink (graceful "
-                         "drain) while the reward backlog saturates")
-    ap.add_argument("--min-workers", type=int, default=1,
-                    help="--runtime fleet --elastic: floor for shrink")
-    ap.add_argument("--weight-stream", default="full",
-                    choices=["full", "delta", "delta-q"],
-                    help="trainer→rollout publication transport for the "
-                         "threaded/fleet runtimes "
-                         "(DESIGN.md §Streaming weight publication): "
-                         "full = whole param tree per "
-                         "update; delta = chunked bitwise-exact XOR delta "
-                         "stream applied under a version fence; delta-q = "
-                         "int8-quantized delta chunks (lossy within a "
-                         "declared per-chunk tolerance)")
-    ap.add_argument("--train-fraction", type=float, default=0.25,
-                    help="trainer share of the device pool for the threaded "
-                         "runtime's submesh split (Sec 7.1: 0.25)")
-    ap.add_argument("--run-timeout", type=float, default=0.0,
-                    help="hard wall-clock bound (s) on a threaded run; "
-                         "0 = unbounded")
-    ap.add_argument("--prefill-chunk", type=int, default=0,
-                    help="chunked prefill: ingest at most N prompt tokens "
-                         "per engine step (0 = monolithic; switches the "
-                         "engine to per-request RNG streams — trajectories "
-                         "differ from the default scheme at equal seed; "
-                         "DESIGN.md §Chunked prefill)")
-    ap.add_argument("--env", default="",
-                    choices=["", "math", "code", "multiturn"],
-                    help="verifiable environment (repro/env/, DESIGN.md "
-                         "§Environments and reward service): math = "
-                         "arithmetic string-match, code = sandboxed "
-                         "snippet vs unit tests, multiturn = the "
-                         "environment answers back (auto-enables chunked "
-                         "prefill).  Default '' keeps the legacy "
-                         "synchronous math path bit-for-bit")
-    ap.add_argument("--reward-workers", type=int, default=0,
-                    help="async reward service worker threads (threaded "
-                         "runtime): finished generations are scored off "
-                         "the rollout thread and buffered only once "
-                         "scored; 0 = synchronous scoring")
-    ap.add_argument("--reward-latency", type=float, default=0.0,
-                    help="virtual runtime only: modeled pipelined "
-                         "verification latency (seconds) per trajectory")
-    ap.add_argument("--reward-backlog", type=int, default=64,
-                    help="async reward backlog bound: fresh admission "
-                         "pauses while this many trajectories await "
-                         "scoring")
-    ap.add_argument("--sandbox-timeout", type=float, default=2.0,
-                    help="--env code: wall-clock kill deadline (s) for "
-                         "the verification sandbox subprocess")
-    ap.add_argument("--fused-decode", default="", choices=["", "fused",
-                                                           "split"],
-                    help="paged decode fast path for the rollout engine "
-                         "(forces --cache paged semantics inside the "
-                         "engine): 'fused' = one dispatch per decode step, "
-                         "'split' = measurement baseline (DESIGN.md "
-                         "§Fused decode tail)")
-    ap.add_argument("--spec-decode", type=int, default=0,
-                    help="self-speculative decoding: tokens per round "
-                         "(DESIGN.md §Self-speculative decoding).  Forces "
-                         "greedy sampling — a decode-throughput/debug mode, "
-                         "not a training recipe (greedy collapses GRPO "
-                         "groups)")
-    ap.add_argument("--spec-draft-units", type=int, default=0,
-                    help="stacked units the draft pass runs (0 = all but "
-                         "the last)")
+    # engine / env / runtime flags are declared once, in launch/cli.py
+    cli.add_engine_flags(ap, slots=16, seed=1)
+    cli.add_env_flags(ap, default="", allow_legacy=True)
+    cli.add_runtime_flags(ap)
     ap.add_argument("--eta", type=int, default=4,
                     help="max staleness (-1 = unbounded, 0 = synchronous)")
     ap.add_argument("--naive-ppo", action="store_true",
@@ -358,7 +285,6 @@ def main():
     ap.add_argument("--batch-size", type=int, default=32)
     ap.add_argument("--answers-per-prompt", type=int, default=4)
     ap.add_argument("--adv", default="grpo", choices=["grpo", "rloo", "mc"])
-    ap.add_argument("--seed", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--no-final-eval", action="store_true")
     args = ap.parse_args()
@@ -368,6 +294,8 @@ def main():
         args.arch, steps=args.steps, scale=args.scale, eta=args.eta,
         decoupled=not args.naive_ppo, interruptible=not args.no_interrupt,
         batch_size=args.batch_size, answers_per_prompt=args.answers_per_prompt,
+        n_slots=args.slots, prompt_len=args.prompt_len,
+        max_gen_len=args.max_gen,
         adv_estimator=args.adv, seed=args.seed, ckpt_dir=args.ckpt_dir,
         colocated_sync=args.sync_colocated, runtime=args.runtime,
         train_fraction=args.train_fraction, run_timeout=args.run_timeout,
@@ -380,7 +308,9 @@ def main():
         trainer_procs=args.trainer_procs, elastic=args.elastic,
         min_workers=args.min_workers, weight_stream=args.weight_stream,
         fused_decode=args.fused_decode, spec_decode=args.spec_decode,
-        spec_draft_units=args.spec_draft_units)
+        spec_draft_units=args.spec_draft_units,
+        cache=args.cache, block_size=args.block_size,
+        pool_blocks=args.pool_blocks, evict=args.evict)
     out = {
         "arch": args.arch, "runtime": args.runtime, "steps": trainer.version,
         "wall_s": round(time.time() - t0, 1),

@@ -1,0 +1,7 @@
+"""Production serving gateway (DESIGN.md §Serving gateway): SLA-aware
+scheduling, session-keyed prefix reuse and streaming HTTP on top of one
+interruptible rollout engine."""
+from repro.serve.gateway import Gateway
+from repro.serve.http import GatewayServer
+
+__all__ = ["Gateway", "GatewayServer"]

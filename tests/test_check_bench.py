@@ -142,6 +142,24 @@ def test_decode_speed_identity_violation_fails(tmp_path):
     assert any("spec.trajectories_identical" in e for e in errors)
 
 
+def test_serve_gateway_regression_fails(tmp_path):
+    """A wedged request under pool pressure, a vacuous recompute claim,
+    a broken recompute identity, and TTFT drift all fail the gate."""
+    _copy_baselines(tmp_path)
+    name = "BENCH_serve_gateway.json"
+    rec = json.loads((tmp_path / name).read_text())
+    rec["pressure"]["deferred_permanent"] = 2      # requests wedged
+    rec["recompute"]["trajectories_identical"] = False
+    rec["recompute"]["small_evictions"] = 0        # identity claim vacuous
+    rec["baseline"]["ttft_p99"] += 3               # scheduling drifted
+    (tmp_path / name).write_text(json.dumps(rec))
+    errors = check_bench.run(tmp_path, ROOT)
+    assert any("deferred_permanent" in e for e in errors)
+    assert any("recompute.trajectories_identical" in e for e in errors)
+    assert any("small_evictions" in e for e in errors)
+    assert any("ttft_p99" in e and "drifted" in e for e in errors)
+
+
 def test_decode_speed_regression_fails(tmp_path):
     """Losing the single-dispatch property, the fused>=split throughput
     floor, the >1 accepted-tokens-per-step win, or a family escaping its

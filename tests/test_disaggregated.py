@@ -115,8 +115,9 @@ def test_threaded_matches_virtual_semantics():
     import jax
 
     from repro.configs.base import ModelConfig, RLConfig
-    from repro.core import (AsyncRLController, AsyncScheduler, PPOTrainer,
-                            RolloutEngine, ThreadedRuntime, TimingModel)
+    from repro.core import (AsyncRLController, AsyncScheduler, EngineConfig,
+                            PPOTrainer, RolloutEngine, ThreadedRuntime,
+                            TimingModel)
     from repro.data import tokenizer
     from repro.data.dataset import PromptStream
     from repro.models.model import build_model
@@ -133,8 +134,8 @@ def test_threaded_matches_virtual_semantics():
                       lr=1e-3, max_prompt_len=16, max_gen_len=8)
         model = build_model(CFG, remat=False)
         params = model.init(jax.random.key(seed))
-        engine = RolloutEngine(model, params, n_slots=4, prompt_len=16,
-                               max_gen_len=8, seed=seed)
+        engine = RolloutEngine(model, params, cfg=EngineConfig(
+            n_slots=4, prompt_len=16, max_gen_len=8, seed=seed))
         trainer = PPOTrainer(model, rl, params)
         sched = AsyncScheduler(
             prompt_stream=PromptStream(seed=seed, answers_per_prompt=2,
@@ -189,8 +190,8 @@ def test_virtual_executor_real_model_golden_history():
     import jax
 
     from repro.configs.base import ModelConfig, RLConfig
-    from repro.core import (AsyncRLController, PPOTrainer, RolloutEngine,
-                            TimingModel)
+    from repro.core import (AsyncRLController, EngineConfig, PPOTrainer,
+                            RolloutEngine, TimingModel)
     from repro.data import tokenizer
     from repro.data.dataset import PromptStream
     from repro.models.model import build_model
@@ -205,8 +206,8 @@ def test_virtual_executor_real_model_golden_history():
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.key(5))
     ctl = AsyncRLController(
-        engine=RolloutEngine(model, params, n_slots=4, prompt_len=16,
-                             max_gen_len=8, seed=5),
+        engine=RolloutEngine(model, params, cfg=EngineConfig(
+            n_slots=4, prompt_len=16, max_gen_len=8, seed=5)),
         trainer=PPOTrainer(model, rl, params),
         prompt_stream=PromptStream(seed=5, answers_per_prompt=2,
                                    max_operand=9),

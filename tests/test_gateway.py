@@ -1,0 +1,391 @@
+"""Serving gateway: LRU prefix-cache eviction invariants, SLA
+scheduling, bit-exact preempt/resume, recompute-on-miss trajectory
+identity, the HTTP front-end, and the EngineConfig API
+(DESIGN.md §Serving gateway, §Prefix eviction policy)."""
+import dataclasses
+import json
+import threading
+import urllib.request
+
+import jax
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.core.batching import BlockAllocator
+from repro.core.config import EngineConfig
+from repro.core.rollout import RolloutEngine
+from repro.core.scheduler import SLAQueue
+from repro.data import tokenizer
+from repro.models.model import build_model
+from repro.serve import Gateway, GatewayServer
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig API (the consolidated constructor surface)
+# ---------------------------------------------------------------------------
+
+def test_engine_config_validates_pure_config_invariants():
+    with pytest.raises(ValueError, match="cache"):
+        EngineConfig(cache="bogus")
+    with pytest.raises(ValueError, match="paged-pool policy"):
+        EngineConfig(evict="lru")                       # ring + lru
+    with pytest.raises(ValueError, match="evict"):
+        EngineConfig(cache="paged", evict="mru")
+    with pytest.raises(ValueError, match="fused_decode requires"):
+        EngineConfig(fused_decode="fused")              # ring + fused
+    with pytest.raises(ValueError, match="temperature"):
+        EngineConfig(spec_decode=3)                     # sampling + spec
+    with pytest.raises(ValueError, match="rng='request'"):
+        EngineConfig(prefill_chunk=4, rng="step")
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        EngineConfig(continuation=lambda f, t, b: None)
+    with pytest.raises(ValueError, match="positive"):
+        EngineConfig(n_slots=0)
+
+
+def test_engine_config_frozen_and_replace():
+    cfg = EngineConfig(n_slots=4, cache="paged", evict="lru")
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.n_slots = 8
+    cfg2 = cfg.replace(n_slots=2)
+    assert (cfg2.n_slots, cfg2.evict) == (2, "lru") and cfg.n_slots == 4
+    with pytest.raises(ValueError):
+        cfg.replace(cache="ring")          # replace() re-validates
+    assert EngineConfig(prefill_chunk=4).resolved_rng == "request"
+    assert EngineConfig().resolved_rng == "step"
+    assert EngineConfig(prompt_len=8, max_gen_len=6).max_len == 14
+
+
+# ---------------------------------------------------------------------------
+# SLAQueue ordering
+# ---------------------------------------------------------------------------
+
+def test_sla_queue_priority_then_deadline_then_fifo():
+    q = SLAQueue()
+    q.push("b", priority=1, deadline=50)
+    q.push("a", priority=0, deadline=100)
+    q.push("c", priority=1, deadline=10)
+    q.push("d", priority=1, deadline=10)
+    assert q.head_key() == (0, 100.0)
+    assert [q.pop() for _ in range(4)] == ["a", "c", "d", "b"]
+    assert q.pop() is None and q.head_key() is None and len(q) == 0
+
+
+# ---------------------------------------------------------------------------
+# LRU eviction: property-based invariants on the allocator
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30)
+@given(st.integers(2, 6),
+       st.lists(st.sampled_from(["alloc", "release", "revive",
+                                 "pin", "unpin"]),
+                min_size=1, max_size=80))
+def test_lru_never_evicts_refcounted_or_pinned(n_blocks, ops):
+    """Random op walk: blocks we hold references on keep exactly those
+    refcounts (eviction never touched them), pinned parked blocks
+    survive every allocation, and free + parked + held == pool size."""
+    al = BlockAllocator(n_blocks, 4, evict="lru")
+    held, parked, tag = [], [], 0
+    for op in ops:
+        if op == "alloc":
+            pinned_parked = [b for b in range(n_blocks)
+                             if al.is_cached(b) and al.is_pinned(b)]
+            try:
+                b = al.alloc(0)
+            except MemoryError:
+                assert al.n_available == 0
+                continue
+            tag += 1
+            al.register(b"h%d" % tag, b)
+            held.append(b)
+            for q in pinned_parked:        # eviction skipped every pin
+                assert al.is_cached(q)
+        elif op == "release" and held:
+            b = held.pop()
+            al.release(b)
+            if al.is_cached(b):
+                parked.append(b)
+        elif op == "revive" and parked:
+            b = parked.pop()
+            if al.is_cached(b):
+                al.retain(b)               # refcount 0 -> 1, leaves LRU
+                held.append(b)
+        elif op == "pin" and parked and al.is_cached(parked[-1]):
+            al.pin(parked[-1])
+        elif op == "unpin" and parked:
+            al.unpin(parked[-1])
+        counts = {}
+        for b in held:
+            counts[b] = counts.get(b, 0) + 1
+        for b, k in counts.items():
+            assert al.refcount(b) == k     # never reclaimed under us
+        assert al.n_free + al.n_cached + len(set(held)) == n_blocks
+
+
+def test_lru_evicts_oldest_unpinned_first():
+    al = BlockAllocator(3, 4, evict="lru")
+    blocks = []
+    for t in range(3):
+        b = al.alloc(0)
+        al.register(b"p%d" % t, b)
+        blocks.append(b)
+    for b in blocks:                       # park in order 0, 1, 2
+        al.release(b)
+    assert al.n_cached == 3 and al.n_free == 0
+    al.pin(blocks[1])
+    al.alloc(0)                            # evicts blocks[0] (oldest)
+    al.alloc(0)                            # evicts blocks[2] (1 is pinned)
+    assert al.evictions == 2
+    assert al.is_cached(blocks[1]) and not al.is_cached(blocks[0])
+    assert al.lookup(b"p1") == blocks[1]   # pinned survives, registered
+    assert al.lookup(b"p0") is None        # evicted hash withdrawn
+    with pytest.raises(MemoryError):       # only the pinned block remains
+        al.alloc(0)
+
+
+def test_lru_revival_keeps_contents_version_and_registration():
+    al = BlockAllocator(2, 4, evict="lru")
+    b = al.alloc(7)
+    al.register(b"h", b)
+    al.release(b)
+    assert al.is_cached(b) and al.refcount(b) == 0
+    hit = al.lookup(b"h")
+    assert hit == b
+    al.retain(hit)
+    assert al.revivals == 1 and al.refcount(b) == 1 and al.version_of(b) == 7
+    assert not al.is_cached(b)
+
+
+def test_clear_prefix_map_flushes_lru_and_pins():
+    al = BlockAllocator(2, 4, evict="lru")
+    b = al.alloc(0)
+    al.register(b"h", b)
+    al.release(b)
+    al.pin(b)
+    al.clear_prefix_map()                  # weight change: nothing revivable
+    assert al.n_free == 2 and al.n_cached == 0 and not al.is_pinned(b)
+    assert al.lookup(b"h") is None
+
+
+# ---------------------------------------------------------------------------
+# Regression: pool-exhaustion rollback leaks nothing (the boundary-block
+# deferral bug — a partially-reserved plan must fully unwind)
+# ---------------------------------------------------------------------------
+
+def test_plan_prefix_rollback_leaks_no_refcounts():
+    al = BlockAllocator(4, 4, evict="lru")
+    blocks, _ = al.plan_prefix(0, list(range(12)))          # 3 blocks held
+    with pytest.raises(MemoryError):
+        al.plan_prefix(0, list(range(100, 124)))            # needs 6 > 1
+    # full unwind: held plan untouched, the partial reservation freed and
+    # its garbage registration withdrawn (not parked as a prefix holder)
+    assert [al.refcount(b) for b in blocks] == [1, 1, 1]
+    assert al.n_free == 1 and al.n_cached == 0
+    for b in blocks:
+        al.release(b)
+    assert al.n_free + al.n_cached == 4
+    assert all(al.refcount(b) == 0 for b in range(4))
+
+
+def test_plan_prefix_rollback_under_eviction_pressure():
+    """The failing plan may EVICT parked blocks before running dry; the
+    rollback must still leave zero refcount leaks and no reusable
+    garbage registrations."""
+    al = BlockAllocator(4, 4, evict="lru")
+    parked, _ = al.plan_prefix(0, list(range(8)))           # 2 blocks
+    for b in parked:
+        al.release(b)                                       # park both
+    held, _ = al.plan_prefix(0, list(range(50, 62)))        # 3 blocks
+    with pytest.raises(MemoryError):
+        al.plan_prefix(0, list(range(200, 224)))            # needs 6
+    assert [al.refcount(b) for b in held] == [1, 1, 1]
+    for b in held:
+        al.release(b)
+    assert all(al.refcount(b) == 0 for b in range(4))
+    assert al.n_free + al.n_cached == 4
+
+
+# ---------------------------------------------------------------------------
+# Engine-backed gateway tests
+# ---------------------------------------------------------------------------
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                  n_heads=4, n_kv_heads=2, d_ff=64,
+                  vocab_size=tokenizer.VOCAB_SIZE)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    model = build_model(CFG, remat=False)
+    params = model.init(jax.random.key(7))
+    return model, params
+
+
+def _engine(tiny, **kw):
+    model, params = tiny
+    base = dict(n_slots=2, prompt_len=8, max_gen_len=6, seed=0,
+                cache="paged", block_size=4, evict="lru", prefill_chunk=4)
+    base.update(kw)
+    return RolloutEngine(model, params, cfg=EngineConfig(**base))
+
+
+def test_legacy_kwargs_shim_warns_then_builds(tiny):
+    model, params = tiny
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        eng = RolloutEngine(model, params, n_slots=2, prompt_len=8,
+                            max_gen_len=6, seed=0)
+    assert eng.n_slots == 2 and eng.max_len == 14
+    with pytest.raises(TypeError, match="both"):
+        RolloutEngine(model, params, cfg=EngineConfig(), n_slots=2)
+
+
+def test_gateway_requires_chunked_engine(tiny):
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        Gateway(_engine(tiny, prefill_chunk=0, evict="off", cache="ring"))
+
+
+def test_preempted_request_resumes_bit_exact(tiny):
+    """A run where an urgent arrival preempts a busy slot produces the
+    SAME per-request trajectories as a run with no urgent traffic:
+    preempt_slot/admit_resume recompute the victim's KV exactly and its
+    RNG stream is a pure function of (seed, rid)."""
+    def run(with_urgent):
+        gw = Gateway(_engine(tiny))
+        rids = [gw.submit([1, 4 + i, 5, 6], priority=2) for i in range(3)]
+        for _ in range(3):                 # let generation get underway
+            gw.pump()
+        urgent = (gw.submit([1, 9, 5, 6], priority=0, sla=50)
+                  if with_urgent else None)
+        gw.run_until_idle()
+        out = {r: tuple(gw.drain(r)["tokens"]) for r in rids}
+        urg = gw.drain(urgent) if urgent is not None else None
+        return out, gw.stats(), urg
+
+    base, st0, _ = run(False)
+    same, st1, urg = run(True)
+    assert st0["preemptions"] == 0
+    assert st1["preemptions"] >= 1 and st1["resumes"] >= 1
+    assert st1["completed"] == 4 and urg["end"] is not None
+    assert same == base                    # bit-exact despite preemption
+
+
+def test_same_tier_never_preempts(tiny):
+    gw = Gateway(_engine(tiny))
+    for i in range(4):                     # 2 slots, 4 equal-tier requests
+        gw.submit([1, 4 + i, 5, 6], priority=1)
+    gw.run_until_idle()
+    assert gw.stats()["preemptions"] == 0
+    assert gw.stats()["completed"] == 4
+
+
+def test_lru_recompute_on_miss_trajectory_identity(tiny):
+    """Undersized pool + LRU: evictions happen, every request still
+    completes, and every trajectory is identical to an ample-pool run —
+    recompute-on-miss is exact (DESIGN.md §Prefix eviction policy)."""
+    shared = [1, 4, 5, 6]                  # one full shared block
+
+    def run(n_blocks):
+        gw = Gateway(_engine(tiny, n_slots=2, n_blocks=n_blocks),
+                     preempt=False)
+        rids = []
+        for i in range(6):                 # staggered: park/revive/evict
+            rids.append(gw.submit(shared + [7 + i, 8, 9, 10]))
+            gw.pump()
+            gw.pump()
+        gw.run_until_idle()
+        return ({r: tuple(gw.drain(r)["tokens"]) for r in rids}, gw.stats())
+
+    small, st_small = run(9)
+    ample, st_ample = run(64)
+    assert st_small["evictions"] > 0       # the pool actually thrashed
+    assert st_small["completed"] == 6 and st_ample["completed"] == 6
+    assert small == ample                  # recompute changed nothing
+
+
+def test_gateway_pressure_leaks_no_refcounts(tiny):
+    """After an undersized-pool run drains, every pool block is back to
+    refcount zero and free+parked covers the whole pool: the admit
+    evict-or-defer path never leaks a partially-reserved plan."""
+    eng = _engine(tiny, n_slots=2, n_blocks=9)
+    gw = Gateway(eng, preempt=False)
+    for i in range(6):
+        gw.submit([1, 4, 5, 6, 7 + i, 8, 9, 10])
+        gw.pump()
+    gw.run_until_idle()
+    al = eng.allocator
+    assert gw.stats()["completed"] == 6
+    assert all(al.refcount(b) == 0 for b in range(al.n_blocks))
+    assert al.n_free + al.n_cached == al.n_blocks
+
+
+def test_session_followup_extends_context_and_marks_hit(tiny):
+    gw = Gateway(_engine(tiny, n_slots=2))
+    r1 = gw.submit([1, 4, 5], session="u")
+    gw.run_until_idle()
+    first = gw.drain(r1)
+    r2 = gw.submit([1, 6], session="u")
+    gw.run_until_idle()
+    second = gw.drain(r2)
+    assert first["end"] is not None and second["end"] is not None
+    assert gw.stats()["session_hits"] == 1
+
+
+def test_sla_miss_is_counted(tiny):
+    gw = Gateway(_engine(tiny))
+    rid = gw.submit([1, 4, 5, 6], sla=1)   # one tick: cannot finish
+    gw.run_until_idle()
+    end = gw.drain(rid)["end"]
+    assert end["sla_missed"] is True
+    assert gw.stats()["sla_misses"] == 1
+
+
+# ---------------------------------------------------------------------------
+# HTTP front-end: concurrent streamed completions share the prefix cache
+# ---------------------------------------------------------------------------
+
+def _post(port, body):
+    req = urllib.request.Request(
+        f"http://127.0.0.1:{port}/v1/completions",
+        data=json.dumps(body).encode(),
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(req, timeout=120) as r:
+        assert r.status == 200
+        return [json.loads(ln) for ln in r.read().splitlines() if ln.strip()]
+
+
+def test_http_concurrent_sessions_hit_prefix_cache(tiny):
+    gw = Gateway(_engine(tiny, n_slots=4, prompt_len=12, evict="lru"))
+    srv = GatewayServer(gw, port=0)
+    srv.start()
+    try:
+        results = {}
+
+        def worker(i):
+            results[i] = _post(srv.port, {"prompt": "2+3=",
+                                          "session": f"u{i}"})
+
+        # wave 1 registers the shared prompt's prefix block; its park in
+        # the LRU keeps the registration alive so wave 2 revives it
+        for wave in range(2):
+            ts = [threading.Thread(target=worker, args=(wave * 2 + j,))
+                  for j in range(2)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join(timeout=120)
+        assert len(results) == 4
+        for lines in results.values():
+            assert lines[-1].get("done") is True
+            assert any("token" in ln for ln in lines[:-1])
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{srv.port}/stats", timeout=30) as r:
+            st = json.loads(r.read())
+        assert st["completed"] >= 4
+        assert st["prefix_reused_blocks"] > 0      # the cache was shared
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{srv.port}/healthz", timeout=30) as r:
+            assert r.status == 200
+    finally:
+        srv.shutdown()

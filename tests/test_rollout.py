@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import ModelConfig
+from repro.core.config import EngineConfig
 from repro.core.rollout import RolloutEngine
 from repro.data import tokenizer
 from repro.models.model import build_model
@@ -22,9 +23,8 @@ def _tiny(family="dense", **kw):
 def _engine(cfg, seed=0, n_slots=4, **kw):
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.key(7))
-    return model, params, RolloutEngine(model, params, n_slots=n_slots,
-                                        prompt_len=8, max_gen_len=6,
-                                        seed=seed, **kw)
+    return model, params, RolloutEngine(model, params, cfg=EngineConfig(
+        n_slots=n_slots, prompt_len=8, max_gen_len=6, seed=seed, **kw))
 
 
 def _reqs(n, start=0):
@@ -488,8 +488,8 @@ def test_threaded_runtime_with_chunked_engine():
                   max_prompt_len=8, max_gen_len=6)
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.key(2))
-    engine = RolloutEngine(model, params, n_slots=4, prompt_len=8,
-                           max_gen_len=6, seed=2, prefill_chunk=2)
+    engine = RolloutEngine(model, params, cfg=EngineConfig(
+        n_slots=4, prompt_len=8, max_gen_len=6, seed=2, prefill_chunk=2))
     trainer = PPOTrainer(model, rl, params)
     sched = AsyncScheduler(
         prompt_stream=PromptStream(seed=2, answers_per_prompt=2,
@@ -576,10 +576,10 @@ def test_controller_requeues_paged_pool_exhaustion():
 
 def _mt_run(model, params, continuation, *, cache="ring", eos=tokenizer.EOS,
             interrupt_at=(), n_reqs=3, group=False, seed=0):
-    eng = RolloutEngine(model, params, n_slots=4, prompt_len=8,
-                        max_gen_len=20, seed=seed, cache=cache, block_size=4,
-                        prefill_chunk=4, continuation=continuation,
-                        eos_id=eos)
+    eng = RolloutEngine(model, params, cfg=EngineConfig(
+        n_slots=4, prompt_len=8, max_gen_len=20, seed=seed, cache=cache,
+        block_size=4, prefill_chunk=4, continuation=continuation,
+        eos_id=eos))
     reqs = [{"rid": i, "prompt_id": 0 if group else i,
              "prompt": [1, 4, 5, 6] if group else [1, 4 + i, 5, 6],
              "answer": None} for i in range(n_reqs)]
@@ -608,8 +608,9 @@ def test_continuation_requires_chunked_engine():
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.key(7))
     with pytest.raises(ValueError, match="prefill_chunk"):
-        RolloutEngine(model, params, n_slots=2, prompt_len=8, max_gen_len=6,
-                      continuation=lambda f, t, b: None)
+        RolloutEngine(model, params, cfg=EngineConfig(
+            n_slots=2, prompt_len=8, max_gen_len=6,
+            continuation=lambda f, t, b: None))
 
 
 @pytest.mark.parametrize("cache", ["ring", "paged"])
@@ -696,11 +697,10 @@ def test_multiturn_interrupt_identity(family, extra, cache):
 def _greedy_engine(cfg, cache, prefill_chunk=0, **kw):
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.key(7))
-    return RolloutEngine(model, params, n_slots=4, prompt_len=8,
-                         max_gen_len=6, seed=3, temperature=0.0,
-                         cache=cache, block_size=4,
-                         prefill_chunk=prefill_chunk,
-                         rng="request" if prefill_chunk else "auto", **kw)
+    return RolloutEngine(model, params, cfg=EngineConfig(
+        n_slots=4, prompt_len=8, max_gen_len=6, seed=3, temperature=0.0,
+        cache=cache, block_size=4, prefill_chunk=prefill_chunk,
+        rng="request" if prefill_chunk else "auto", **kw))
 
 
 @pytest.mark.parametrize("cache", ["ring", "paged"])
@@ -773,9 +773,9 @@ def test_fused_and_split_match_default_paged():
     def run(**kw):
         model = build_model(cfg, remat=False)
         params = model.init(jax.random.key(7))
-        eng = RolloutEngine(model, params, n_slots=4, prompt_len=8,
-                            max_gen_len=6, seed=3, cache="paged",
-                            block_size=4, **kw)
+        eng = RolloutEngine(model, params, cfg=EngineConfig(
+            n_slots=4, prompt_len=8, max_gen_len=6, seed=3, cache="paged",
+            block_size=4, **kw))
         return eng, _run_to_completion(eng, _reqs(6))
 
     e_def, d_def = run()
@@ -798,8 +798,8 @@ def test_decode_fastpath_validation():
     params = model.init(jax.random.key(7))
 
     def make(**kw):
-        return RolloutEngine(model, params, n_slots=2, prompt_len=8,
-                             max_gen_len=6, **kw)
+        return RolloutEngine(model, params, cfg=EngineConfig(
+            n_slots=2, prompt_len=8, max_gen_len=6, **kw))
 
     with pytest.raises(ValueError, match="paged"):
         make(fused_decode="fused")                     # ring + fused

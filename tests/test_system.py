@@ -7,7 +7,8 @@ import numpy as np
 import pytest
 
 from repro.configs.base import ModelConfig, RLConfig
-from repro.core import (AsyncRLController, PPOTrainer, RolloutEngine,
+from repro.core import (AsyncRLController, EngineConfig, PPOTrainer,
+                        RolloutEngine,
                         TimingModel)
 from repro.data import tokenizer
 from repro.data.dataset import PromptStream
@@ -26,8 +27,8 @@ def _pipeline(eta=2, steps=3, interruptible=True, seed=0, batch=8,
                   max_prompt_len=16, max_gen_len=8)
     model = build_model(CFG, remat=False)
     params = model.init(jax.random.key(seed))
-    engine = RolloutEngine(model, params, n_slots=4, prompt_len=16,
-                           max_gen_len=8, seed=seed)
+    engine = RolloutEngine(model, params, cfg=EngineConfig(
+        n_slots=4, prompt_len=16, max_gen_len=8, seed=seed))
     trainer = PPOTrainer(model, rl, params)
     timing = TimingModel(decode_step=lambda n: 0.01,
                          prefill=lambda t: 1e-4 * t,

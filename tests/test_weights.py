@@ -361,6 +361,7 @@ def test_store_respects_ckpt_every_stride(tmp_path, monkeypatch):
 
 def _engine_pair(cache, prefill_chunk):
     from repro.configs.base import ModelConfig
+    from repro.core.config import EngineConfig
     from repro.core.rollout import RolloutEngine
     from repro.data import tokenizer
     from repro.models.model import build_model
@@ -371,10 +372,10 @@ def _engine_pair(cache, prefill_chunk):
     params = model.init(jax.random.key(7))
 
     def make():
-        return RolloutEngine(model, params, n_slots=3, prompt_len=8,
-                             max_gen_len=6, seed=11, cache=cache,
-                             block_size=4, prefill_chunk=prefill_chunk,
-                             rng="request", eos_id=-1)
+        return RolloutEngine(model, params, cfg=EngineConfig(
+            n_slots=3, prompt_len=8, max_gen_len=6, seed=11, cache=cache,
+            block_size=4, prefill_chunk=prefill_chunk, rng="request",
+            eos_id=-1))
 
     return model, params, make
 

@@ -133,6 +133,28 @@ SPECS: Dict[str, List[Dict[str, Any]]] = {
         {"path": "families.xlstm.measured_over_roofline",
          "min": 1e-9, "max": 1.0},
     ],
+    "BENCH_serve_gateway.json": [
+        # PR 9 acceptance: the Zipf session trace actually shares its
+        # chained prompt prefixes through the paged pool (floor is far
+        # below the committed ~0.9 so template tweaks don't flap it).
+        {"path": "baseline.prefix_hit_rate", "min": 0.3},
+        # the undersized-pool section must genuinely thrash the LRU ...
+        {"path": "pressure.evictions", "min": 1},
+        # ... and STILL complete everything: pool exhaustion degrades to
+        # recompute, never to a permanently deferred request.
+        {"path": "pressure.deferred_permanent", "equals": 0},
+        {"path": "pressure.completed", "rel": 0.0},
+        # recompute-on-miss is bit-exact, and the claim is non-vacuous
+        # (the small pool really evicted prefixes that were re-requested)
+        {"path": "recompute.trajectories_identical", "equals": True},
+        {"path": "recompute.small_evictions", "min": 1},
+        # the whole trace runs on the deterministic tick clock: latency
+        # percentiles are held at zero drift vs the committed baseline
+        {"path": "baseline.ttft_p50", "rel": 0.0},
+        {"path": "baseline.ttft_p99", "rel": 0.0},
+        {"path": "baseline.itl_p50", "rel": 0.0},
+        {"path": "baseline.itl_p99", "rel": 0.0},
+    ],
     "BENCH_weight_stream.json": [
         # PR 7 acceptance: unquantized streaming is bit-for-bit
         # trajectory-identical to a monolithic full-tree update at the
