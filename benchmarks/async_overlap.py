@@ -123,12 +123,27 @@ def _measure(mode: str, steps: int, seed: int = 0):
     }
 
 
-def _child(steps: int) -> None:
+def _traced(trace_path: str) -> None:
+    """Short traced re-run, SEPARATE from the timed windows above (the
+    cost of tracing has its own benchmark, trace_overhead): writes the
+    Chrome/Perfetto timeline that ``tools/trace_check.py`` validates
+    and docs/OPERATIONS.md's walkthrough opens (DESIGN.md §Telemetry)."""
+    from repro.obs import export, trace as tracing
+
+    tracing.configure(enabled=True, actor="async_overlap")
+    rt, _, _ = _build(seed=1)
+    rt.run(WARMUP_STEPS + 1, timeout=600)
+    tracing.configure(enabled=False)
+    export.write_trace(trace_path)
+
+
+def _child(steps: int, trace_path: str) -> None:
     import jax
 
     out = {"devices": len(jax.devices()), "steps": steps,
            "threaded": _measure("threaded", steps),
            "serial": _measure("serial", steps)}
+    _traced(trace_path)
     print("BENCH_JSON=" + json.dumps(out), flush=True)
 
 
@@ -136,9 +151,11 @@ def main() -> None:
     steps = STEPS                             # >=5 PPO versions, smoke or full
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={DEVICES}"
+    # resolved in the parent: the child may not see run.py's SMOKE flag
+    trace_path = os.path.abspath(bench_path("BENCH_async_overlap_trace.json"))
     r = subprocess.run(
         [sys.executable, "-m", "benchmarks.async_overlap",
-         "--child", str(steps)],
+         "--child", str(steps), trace_path],
         capture_output=True, text=True, env=env, timeout=900)
     assert r.returncode == 0, r.stderr[-3000:]
     line = [ln for ln in r.stdout.splitlines()
@@ -151,6 +168,19 @@ def main() -> None:
     rec["overlap_demonstrated"] = (
         rec["threaded"]["trainer_busy_fraction"] > 0
         and rec["threaded"]["tokens_during_train"] > 0)
+    # gate the traced re-run: well-formed timeline with at least one
+    # wall-clock-concurrent rollout/trainer span pair (the overlap the
+    # timed ratio above measures, now visible in the artifact)
+    from tools import trace_check
+    tr = trace_check.load(trace_path)
+    errors = trace_check.validate(tr)
+    rec["trace"] = {
+        "valid": not errors,
+        "events": len(tr.get("traceEvents", [])),
+        "concurrent_span_pairs": trace_check.concurrent_span_pairs(
+            tr, "rollout", "trainer"),
+        "errors": errors[:5],
+    }
     with open(bench_path("BENCH_async_overlap.json"), "w") as f:
         json.dump(rec, f, indent=2)
 
@@ -164,6 +194,6 @@ def main() -> None:
 
 if __name__ == "__main__":
     if len(sys.argv) > 1 and sys.argv[1] == "--child":
-        _child(int(sys.argv[2]))
+        _child(int(sys.argv[2]), sys.argv[3])
     else:
         main()

@@ -20,6 +20,7 @@ keeps the perf scripts from rotting); with ``name`` only that module.
   weight_stream          Streaming delta publication: identity, tokens lost
   decode_speed           Fused decode fast path + self-speculative rounds
   serve_gateway          Serving gateway: SLA load, LRU eviction, recompute
+  trace_overhead         Structured tracing: enabled vs disabled throughput
   roofline_report        Roofline terms from the dry-run artifacts
 
 Prints ``name,us_per_call,derived`` CSV.
@@ -34,7 +35,8 @@ from benchmarks import (async_overlap, chunked_prefill, decode_speed,
                         fig6a_dynamic_batching, fig6b_interruptible,
                         fleet_overlap, paged_cache, reward_overlap,
                         roofline_report, serve_gateway, table1_end_to_end,
-                        table2_staleness, table8_rloo, weight_stream)
+                        table2_staleness, table8_rloo, trace_overhead,
+                        weight_stream)
 from benchmarks.common import emit
 
 MODULES = [
@@ -54,6 +56,7 @@ MODULES = [
     ("wstream", weight_stream),
     ("decode", decode_speed),
     ("gateway", serve_gateway),
+    ("trace", trace_overhead),
     ("roofline", roofline_report),
 ]
 
@@ -76,9 +79,14 @@ MODULES = [
 # dispatch-count battery (the fast-path engine modes must not rot);
 # gateway runs the serving-gateway trace — its banded metrics are
 # tick-deterministic, so the smoke run keeps the full fixed schedule
-# (same discipline as wstream's stall section).
+# (same discipline as wstream's stall section); trace bands the
+# tracing-enabled / disabled throughput ratio and overlap's traced
+# re-run additionally gates a well-formed Perfetto timeline, so the
+# telemetry subsystem cannot silently regress serving speed or emit a
+# malformed artifact.
 SMOKE_MODULES = ("fig1", "fig6a", "paged", "chunked", "overlap", "reward",
-                 "fleet", "wstream", "decode", "gateway", "roofline")
+                 "fleet", "wstream", "decode", "gateway", "trace",
+                 "roofline")
 
 
 def main() -> None:

@@ -82,6 +82,9 @@ from repro.core.runtime import RoleLiveness, format_liveness
 from repro.core.scheduler import (AsyncScheduler, SchedulerExecutorMixin,
                                   StepLog)
 from repro.core.weights import ParameterStore
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace
+from repro.obs.recorder import FlightRecorder
 
 
 # ---- transport --------------------------------------------------------------
@@ -165,9 +168,10 @@ def _engine_stats(engine, progress: Dict) -> Dict:
         st["accepted_tokens"] = engine.accepted_tokens
         st["draft_acceptance_rate"] = engine.draft_acceptance_rate
         st["accepted_tokens_per_step"] = engine.accepted_tokens_per_step
-    ss = getattr(engine, "stream_stats", None)
-    if callable(ss):                      # streaming pickup progress
-        st.update(ss())                   # (DESIGN.md §Version fence)
+    # streaming pickup progress (DESIGN.md §Version fence), via the one
+    # shared stat-surface union (repro.obs.metrics.scrape) instead of
+    # per-call-site getattr glue
+    st.update(obs_metrics.scrape(engine, surfaces=("stream_stats",)))
     return st
 
 
@@ -198,13 +202,25 @@ def _rollout_worker_main(worker_id: str, conn, factory: Callable,
     stop = threading.Event()
     progress = {"steps": 0, "loops": 0}
     holder: List[Any] = [None]            # engine, visible to the beat thread
+    # crash flight recorder (DESIGN.md §Flight-recorder protocol): the
+    # tail ships incrementally on each heartbeat, so the supervisor
+    # holds this worker's recent past even after a SIGKILL
+    rec = FlightRecorder(capacity=int(cfg.get("flightrec_cap", 256)))
+    rec.record("start", pid=os.getpid())
+
+    def stats_fn() -> Dict:
+        st = _engine_stats(holder[0], progress)
+        st["flightrec"] = rec.drain_new()
+        return st
+
     transport.send(("register", worker_id, "rollout", os.getpid()))
-    _start_heartbeat(transport, worker_id,
-                     lambda: _engine_stats(holder[0], progress),
+    _start_heartbeat(transport, worker_id, stats_fn,
                      cfg["heartbeat_s"], stop)
     try:
         engine = holder[0] = factory(**factory_kwargs)
+        rec.record("engine_built")
     except BaseException:                 # noqa: BLE001 — shipped upstream
+        rec.record("build_error")
         transport.send(("error", worker_id, traceback.format_exc()))
         return
     pending_weights: Optional[tuple] = None
@@ -226,8 +242,10 @@ def _rollout_worker_main(worker_id: str, conn, factory: Callable,
                 elif kind == "wmsg":      # streamed chunk message
                     wmsg_q.append(msg[1])
                 elif kind == "drain":
+                    rec.record("drain")
                     draining = True
                 elif kind == "stop":
+                    rec.record("stop")
                     stop.set()
                     transport.send(("stopped", worker_id))
                     return
@@ -237,6 +255,7 @@ def _rollout_worker_main(worker_id: str, conn, factory: Callable,
                 version, params = pending_weights
                 engine.update_weights(_to_device(params), version,
                                       interruptible=cfg["interruptible"])
+                rec.record("weights", version=version)
             pending_weights = None
             # streaming pickup (DESIGN.md §Version fence): feed a bounded
             # number of chunk messages per loop so staging overlaps the
@@ -244,11 +263,14 @@ def _rollout_worker_main(worker_id: str, conn, factory: Callable,
             # stream completes
             fed = 0
             while wmsg_q and fed < chunks_per_step:
-                engine.feed_weight_message(wmsg_q.popleft(),
-                                           interruptible=cfg["interruptible"])
+                if engine.feed_weight_message(
+                        wmsg_q.popleft(),
+                        interruptible=cfg["interruptible"]):
+                    rec.record("stream_flip", version=engine.version)
                 fed += 1
             need_full = getattr(engine, "consume_stream_need_full", None)
             if callable(need_full) and need_full():
+                rec.record("need_full", version=engine.version)
                 # decoder lost the base (missed a publication): ask the
                 # supervisor for one full tree to resynchronize
                 # (DESIGN.md §Torn-stream recovery)
@@ -257,20 +279,24 @@ def _rollout_worker_main(worker_id: str, conn, factory: Callable,
             while admit_q and not engine.has_pending_weights:
                 reqs, clock = admit_q.popleft()
                 n = 0 if draining else engine.admit(reqs, clock=clock)
+                rec.record("admit", rids=reqs_key(reqs), n=n)
                 transport.send(("admitted", worker_id, reqs_key(reqs), n,
                                 getattr(engine, "deferred_last", 0)))
             if engine.n_active:
                 finished = engine.step()
                 progress["steps"] += 1
                 if finished:
+                    rec.record("finished", rids=[f.rid for f in finished])
                     transport.send(("finished", worker_id, finished))
                 drained_sent = False
             elif draining and not drained_sent and not admit_q:
+                rec.record("drained")
                 transport.send(("drained", worker_id))
                 drained_sent = True
     except (EOFError, BrokenPipeError, OSError):
         return                            # supervisor is gone: just exit
-    except BaseException:                 # noqa: BLE001 — shipped upstream
+    except BaseException as e:            # noqa: BLE001 — shipped upstream
+        rec.record("error", exc=type(e).__name__)
         try:
             transport.send(("error", worker_id, traceback.format_exc()))
         except (OSError, ValueError):
@@ -290,8 +316,16 @@ def _trainer_worker_main(worker_id: str, conn, factory: Callable,
     transport = PipeTransport(conn)
     stop = threading.Event()
     progress = {"steps": 0}
+    rec = FlightRecorder(capacity=int(cfg.get("flightrec_cap", 256)))
+    rec.record("start", pid=os.getpid())
+
+    def stats_fn() -> Dict:
+        st = dict(progress)
+        st["flightrec"] = rec.drain_new()
+        return st
+
     transport.send(("register", worker_id, "trainer", os.getpid()))
-    _start_heartbeat(transport, worker_id, lambda: dict(progress),
+    _start_heartbeat(transport, worker_id, stats_fn,
                      cfg["heartbeat_s"], stop)
     try:
         trainer = factory(**factory_kwargs)
@@ -317,6 +351,7 @@ def _trainer_worker_main(worker_id: str, conn, factory: Callable,
                 trainer.version = version
                 metrics = trainer.train_step(batch)
                 progress["steps"] += 1
+                rec.record("train", version=trainer.version)
                 transport.send((
                     "trained", worker_id, trainer.version, metrics,
                     host_weights(trainer.params),
@@ -497,7 +532,8 @@ class FleetRuntime(SchedulerExecutorMixin):
                  idle_sleep: float = 1e-3,
                  weight_stream: str = "full",
                  stream_chunk_elems: int = 65536,
-                 stream_chunks_per_step: int = 8):
+                 stream_chunks_per_step: int = 8,
+                 flightrec_dir: Optional[str] = None):
         assert rollout_workers >= 1 and trainer_procs >= 1
         self.sched = scheduler
         self.rl = scheduler.rl
@@ -529,6 +565,14 @@ class FleetRuntime(SchedulerExecutorMixin):
         self.stream_chunks_per_step = stream_chunks_per_step
         self._stream_base = None          # previous published host tree
         self._stream_base_version: Optional[int] = None
+
+        # supervisor-side accumulation of each worker's shipped
+        # flight-recorder tail (DESIGN.md §Flight-recorder protocol);
+        # dumped to ``flightrec_dir`` when a worker is failed
+        import tempfile
+        self.flightrec_dir = flightrec_dir or os.path.join(
+            tempfile.gettempdir(), "repro-flightrec")
+        self._flightrec: Dict[str, FlightRecorder] = {}
 
         self.registry = FleetRegistry()
         self._ctx = mp.get_context("spawn")   # never fork a jax process
@@ -661,8 +705,12 @@ class FleetRuntime(SchedulerExecutorMixin):
         h.last_beat = now                 # any message proves liveness
         if kind == "heartbeat":
             h.beats += 1
+            payload = dict(msg[3])
+            entries = payload.pop("flightrec", None)
+            if entries:                   # worker's shipped recorder tail
+                self.flight_recorder(h.worker_id).extend(entries)
             prev_v = h.stats.get("version")
-            h.stats.update(msg[3])
+            h.stats.update(payload)
             new_v = h.stats.get("version")
             if new_v is not None and new_v != prev_v:
                 # first heartbeat at a new version = publication pickup
@@ -763,6 +811,7 @@ class FleetRuntime(SchedulerExecutorMixin):
         hung = reason == "hung"
         self.registry.note("worker-dead", worker=h.worker_id, role=h.role,
                            reason=reason, hung=hung)
+        self._dump_flightrec(h.worker_id, reason)
         self.registry.retire(h, "dead")
         h.transport.close()
         h.sent_admits.clear()
@@ -899,7 +948,9 @@ class FleetRuntime(SchedulerExecutorMixin):
                         break
                     continue
                 self.sched.record_consumed(batch)
-                reply = self._train_remote(batch)
+                with trace.span("trainer.train_step",
+                                version=self._version + 1, n=len(batch)):
+                    reply = self._train_remote(batch)
                 if reply is None:
                     break
                 _, _, new_version, metrics, params_np, opt_np = reply
@@ -949,6 +1000,36 @@ class FleetRuntime(SchedulerExecutorMixin):
                 pass                      # liveness check handles the rest
 
     # ---- diagnostics --------------------------------------------------------
+    def flight_recorder(self, worker_id: str) -> FlightRecorder:
+        """Supervisor-side copy of one worker's flight-recorder tail,
+        accumulated from heartbeats (DESIGN.md §Flight-recorder
+        protocol).  Survives the worker's death — this is the record a
+        SIGKILL post-mortem reads."""
+        rec = self._flightrec.get(worker_id)
+        if rec is None:
+            rec = self._flightrec[worker_id] = FlightRecorder(capacity=256)
+        return rec
+
+    def _dump_flightrec(self, worker_id: str, reason: str) -> Optional[str]:
+        """Dump one worker's tail to ``flightrec_dir`` on failure."""
+        rec = self._flightrec.get(worker_id)
+        if rec is None or not len(rec):
+            return None
+        path = os.path.join(self.flightrec_dir,
+                            f"{worker_id}-{reason}.json")
+        try:
+            rec.dump(path)
+        except OSError:
+            return None
+        self.registry.note("flightrec-dump", worker=worker_id,
+                           path=path, events=len(rec))
+        return path
+
+    def _flightrec_tails(self, per_worker: int = 6) -> str:
+        parts = [f"{wid}: {rec.format_tail(per_worker)}"
+                 for wid, rec in sorted(self._flightrec.items()) if len(rec)]
+        return "; ".join(parts) if parts else "(empty)"
+
     def liveness(self) -> List[RoleLiveness]:
         """Per-role liveness snapshot (shared diagnostic format with
         ``ThreadedRuntime.run``'s TimeoutError — DESIGN.md §Supervision
@@ -1010,9 +1091,15 @@ class FleetRuntime(SchedulerExecutorMixin):
         self._pump_thread.join(timeout)
         if self._pump_thread.is_alive():
             liveness = format_liveness(self.liveness())
+            # per-worker streaming-pickup counters arrive on heartbeats;
+            # aggregate them before teardown wipes handle stats
+            stream = {k: self.registry.total(k)
+                      for k in ("streams_completed", "streams_torn")}
             self._stop.set()
             self._pump_thread.join(10.0)
             self.close()
+            for wid in list(self._flightrec):
+                self._dump_flightrec(wid, "timeout")
             self.clock = time.perf_counter() - self._t0
             raise TimeoutError(
                 f"fleet runtime exceeded {timeout}s at version "
@@ -1020,7 +1107,10 @@ class FleetRuntime(SchedulerExecutorMixin):
                 f"(buffered={len(self.sched.buffer)}, "
                 f"unscored={self.sched.pending_rewards()}, "
                 f"requeued={self.requeued}, respawns={self.respawns}): "
-                + liveness)
+                + liveness
+                + f"; publication={self.sched.publication_stats()}"
+                + f"; stream={stream}"
+                + f"; flight-recorder tails: {self._flightrec_tails()}")
         self._sup_thread.join(10.0)
         self.clock = time.perf_counter() - self._t0
         if self._errors:

@@ -67,6 +67,7 @@ from repro.core.batching import (BlockAllocator, plan_prefill_chunks,
                                  prefix_block_hashes)
 from repro.core.config import EngineConfig
 from repro.data import tokenizer
+from repro.obs import trace
 
 
 @dataclass
@@ -624,6 +625,9 @@ class RolloutEngine:
         by free pool blocks — prefix-shared blocks don't count).  Requests
         bounced on pool pressure are counted in ``deferred_last``."""
         self._assert_single_driver()
+        if trace.get().enabled and requests:
+            trace.instant("engine.admit", n=len(requests),
+                          rids=[r["rid"] for r in requests])
         self.deferred_last = 0
         if self.prefill_chunk:
             return self._admit_chunked(requests, clock)
@@ -931,6 +935,16 @@ class RolloutEngine:
         starts, which is what makes prefix-shared pool blocks safe to
         skip — a "current" block observed by a later slot was fully
         written by an earlier, completed one."""
+        tr = trace.get()
+        if not tr.enabled:
+            return self._ingest_one_chunk_impl()
+        i = self._ingest_queue[0]
+        s = self.slots[i]
+        b, e = s.chunk_plan[0]
+        with tr.span("engine.ingest", slot=i, rid=s.rid, begin=b, end=e):
+            return self._ingest_one_chunk_impl()
+
+    def _ingest_one_chunk_impl(self) -> None:
         i = self._ingest_queue[0]
         s = self.slots[i]
         begin, end = s.chunk_plan.pop(0)
@@ -1024,6 +1038,18 @@ class RolloutEngine:
         fully in the cache.  Returns finished trajectories.  Monolithic
         engines (prefill_chunk=0) never have a span queued, so this is
         exactly one decode step across all active slots."""
+        tr = trace.get()
+        if not tr.enabled:                 # inert path: zero overhead
+            return self._step_impl()
+        with tr.span("engine.step", version=self.version,
+                     n_active=self.n_active):
+            fin = self._step_impl()
+        if fin:
+            tr.instant("engine.finished", n=len(fin),
+                       rids=[f.rid for f in fin])
+        return fin
+
+    def _step_impl(self) -> List[Finished]:
         self._assert_single_driver()
         if self._ingest_queue:
             self._ingest_one_chunk()
@@ -1397,6 +1423,10 @@ class RolloutEngine:
         """Returns True if applied now; False if deferred (non-interruptible
         mode with in-flight requests — the Fig. 6b baseline)."""
         self._assert_single_driver()
+        trace.instant("engine.weight_flip", version=version,
+                      n_active=self.n_active,
+                      interruptible=interruptible,
+                      stream=self._in_stream_flip)
         if not self._in_stream_flip:
             self._invalidate_stream_decoder()
         if not interruptible and self.n_active > 0:

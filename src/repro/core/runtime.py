@@ -56,6 +56,9 @@ from typing import List, Optional, Protocol, runtime_checkable
 from repro.core.scheduler import (AsyncScheduler, SchedulerExecutorMixin,
                                   StepLog)
 from repro.core.weights import ParameterStore
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace
+from repro.obs.recorder import FlightRecorder
 
 
 @runtime_checkable
@@ -171,6 +174,10 @@ class ThreadedRuntime(SchedulerExecutorMixin):
         self._t0 = 0.0
         self._stop = threading.Event()
         self._errors: List[BaseException] = []
+        # crash flight recorder (DESIGN.md §Flight-recorder protocol):
+        # always on — notable events only (pickups, train steps), so the
+        # TimeoutError can show the recent past of a hung run
+        self.flightrec = FlightRecorder(capacity=256)
         # per-role loop-top heartbeats: rollout/trainer touch these every
         # iteration so a timed-out run can say WHICH side stalled
         self._last_beat = {}
@@ -211,6 +218,8 @@ class ThreadedRuntime(SchedulerExecutorMixin):
                 if self.engine.feed_weight_message(
                         msg, interruptible=self.rl.interruptible):
                     self.sched.note_pickup(self.engine.version, self._now())
+                    self.flightrec.record("stream_flip",
+                                          version=self.engine.version)
             return
         latest = self.store.latest()
         if latest is not None and latest[0] > self.engine.version:
@@ -218,6 +227,7 @@ class ThreadedRuntime(SchedulerExecutorMixin):
             self.engine.update_weights(params, version,
                                        interruptible=self.rl.interruptible)
             self.sched.note_pickup(version, self._now())
+            self.flightrec.record("pickup", version=version)
 
     def _rollout_tick(self) -> bool:
         """One admission + decode round; returns True if any slot advanced."""
@@ -262,10 +272,15 @@ class ThreadedRuntime(SchedulerExecutorMixin):
         self._train_busy = True
         t0 = time.perf_counter()
         try:
-            metrics = self.trainer.train_step(batch)
+            with trace.span("trainer.train_step",
+                            version=self.trainer.version + 1,
+                            n=len(batch)):
+                metrics = self.trainer.train_step(batch)
         finally:
             self._train_busy = False
             self.trainer_busy_s += time.perf_counter() - t0
+        self.flightrec.record("train_step", version=self.trainer.version,
+                              n=len(batch))
         # publication OFF the generation critical path: the cross-submesh
         # device_put runs on THIS thread; rollout picks the result up at
         # its next step boundary
@@ -362,13 +377,22 @@ class ThreadedRuntime(SchedulerExecutorMixin):
             trainer.join(10.0)
             rollout.join(10.0)
             self.clock = time.perf_counter() - self._t0
+            # the full diagnostic bundle (see DESIGN.md
+            # §Flight-recorder protocol): liveness, pub-to-pickup,
+            # streaming-pickup counters, and the flight-recorder tail —
+            # a hung run is diagnosable from the exception alone
+            stream = obs_metrics.scrape(self.engine,
+                                        surfaces=("stream_stats",))
             raise TimeoutError(
                 f"threaded runtime exceeded {timeout}s at version "
                 f"{self.trainer.version}/{target} "
                 f"(buffered={len(self.sched.buffer)}, "
                 f"active={self.engine.n_active}, "
                 f"unscored={self.sched.pending_rewards()}): "
-                + format_liveness(liveness))
+                + format_liveness(liveness)
+                + f"; publication={self.sched.publication_stats()}"
+                + f"; stream={stream}"
+                + f"; flight-recorder tail: {self.flightrec.format_tail()}")
         rollout.join(30.0)
         self.clock = time.perf_counter() - self._t0
         if rollout.is_alive():

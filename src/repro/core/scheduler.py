@@ -58,6 +58,7 @@ from repro.configs.base import RLConfig
 from repro.core.buffer import ReplayBuffer, Trajectory
 from repro.core.reward import RewardService
 from repro.core.staleness import StalenessController, StalenessStats
+from repro.obs import trace
 
 
 @dataclass
@@ -360,6 +361,7 @@ class AsyncScheduler:
         benchmark reads (benchmarks/weight_stream.py)."""
         with self._lock:
             self._published_t[version] = t
+        trace.instant("weights.published", version=version)
 
     def note_pickup(self, version: int, t: float, who: str = "engine") -> None:
         """A rollout engine flipped to ``version``: record the
@@ -371,6 +373,8 @@ class AsyncScheduler:
             t0 = self._published_t.get(version)
             if t0 is not None:
                 self.pickup_latencies.append((version, who, t - t0))
+                trace.instant("weights.pickup", version=version, who=who,
+                              latency=t - t0)
 
     def publication_stats(self) -> Dict:
         """Aggregate publication-to-pickup latencies (seconds — or the
@@ -390,9 +394,16 @@ class AsyncScheduler:
         measured against the policy version consuming it (i.e. BEFORE the
         version bump this batch produces)."""
         with self._lock:
-            for t in batch:
-                self.stal_stats.record(
-                    max(0, self.stal.policy_version - t.behavior_version))
+            stals = [max(0, self.stal.policy_version - t.behavior_version)
+                     for t in batch]
+            for s in stals:
+                self.stal_stats.record(s)
+        if trace.get().enabled and stals:
+            # staleness-at-consumption annotation on the trainer lane
+            trace.instant("train.consume",
+                          n=len(stals),
+                          staleness_mean=sum(stals) / len(stals),
+                          staleness_max=max(stals))
 
     def note_policy_update(self, version: int) -> None:
         """A train step completed: admission now gates against ``version``."""
@@ -415,6 +426,10 @@ class AsyncScheduler:
                 interruptions=interruptions,
                 loss=metrics.loss, diag=metrics.diag)
             self.history.append(log)
+        if trace.get().enabled:
+            trace.counter("reward_mean", log.reward_mean)
+            trace.counter("staleness_mean", log.staleness_mean)
+            trace.counter("version", float(version))
         if self.on_step:                   # user code: outside the lock
             self.on_step(log)
         return log

@@ -50,6 +50,7 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 import numpy as np
 
 from repro import checkpoint
+from repro.obs import trace
 
 # ---- stream framing (DESIGN.md §Chunk framing) ------------------------------
 
@@ -341,7 +342,11 @@ class StreamDecoder:
                 # deltas against a version we don't hold: unusable whole
                 self.base_mismatches += 1
                 self.need_full = True
+                trace.instant("stream.base_mismatch", version=msg.version,
+                              base=msg.base_version)
                 return None
+            trace.instant("stream.begin", version=msg.version,
+                          encoding=msg.encoding, n_chunks=msg.n_chunks)
             self._cur = {"begin": msg, "seen": 0, "bad": False,
                          "leaves": {}, "base": self._base_leaves()}
             return None
@@ -361,10 +366,12 @@ class StreamDecoder:
                 return None
             if cur["seen"] != cur["begin"].n_chunks or cur["bad"]:
                 self._discard()        # torn: keep the last complete version
+                trace.instant("stream.torn", version=msg.version)
                 return None
             self._cur = None
             self.completed += 1
             self.version = msg.version
+            trace.instant("stream.complete", version=msg.version)
             leaves = cur["leaves"]
             if self.params is None:
                 self.params = dict(leaves)

@@ -43,6 +43,7 @@ import time
 from typing import Dict, List, Optional
 
 from repro.env.base import Environment, Verdict
+from repro.obs import trace
 
 
 class AsyncRewardService:
@@ -141,10 +142,12 @@ class AsyncRewardService:
                 self._in_progress += 1
             try:
                 t0 = time.perf_counter()
-                try:
-                    verdict = self.env.verify(fin)
-                except Exception as e:     # noqa: BLE001 — scored as a miss
-                    verdict = Verdict(False, {"error": repr(e)})
+                with trace.span("reward.verify", env=self.env.name,
+                                rid=getattr(fin, "rid", -1)):
+                    try:
+                        verdict = self.env.verify(fin)
+                    except Exception as e:  # noqa: BLE001 — scored as a miss
+                        verdict = Verdict(False, {"error": repr(e)})
                 dt = time.perf_counter() - t0
                 try:
                     self._sink.deposit_scored(fin, verdict, finish_time)

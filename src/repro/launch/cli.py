@@ -15,6 +15,12 @@ ENVIRONMENT, RUNTIME and GATEWAY flag is defined:
   * ``add_gateway_flags`` — the serving gateway's own flags (``--port``,
     ``--sla-ms``, ``--sessions``; the eviction policy ``--evict`` is an
     engine flag).
+  * ``add_obs_flags``     — the telemetry surface shared by every
+    launcher (DESIGN.md §Telemetry): ``--trace`` / ``--trace-out``
+    enable the structured tracer and export a Chrome/Perfetto timeline;
+    ``--metrics-snapshot`` dumps the metrics registry as JSON at exit.
+    ``obs_setup`` / ``obs_finish`` are the two call sites a launcher
+    needs — everything between them is instrumented library code.
 
 ``engine_config_from_args`` is the one bridge from parsed args to a
 validated ``EngineConfig`` — launchers never assemble engine kwargs by
@@ -24,6 +30,7 @@ field and its flag) instead of once per launcher.
 from __future__ import annotations
 
 import argparse
+from typing import Dict, Optional
 
 from repro.core.config import EngineConfig
 
@@ -206,3 +213,68 @@ def add_gateway_flags(ap: argparse.ArgumentParser) -> None:
                          "synthetic trace draws from (session-keyed "
                          "requests prefix-share their KV blocks; 0 = "
                          "sessionless)")
+
+
+def add_obs_flags(ap: argparse.ArgumentParser) -> None:
+    """Telemetry flags shared by serve/train/dryrun (DESIGN.md
+    §Telemetry).  Tracing is strictly opt-in: without ``--trace`` the
+    tracer stays disabled and provably inert (DESIGN.md §Disabled-mode
+    guarantee), so default runs stay bit-for-bit."""
+    g = ap.add_argument_group("observability")
+    g.add_argument("--trace", action="store_true",
+                   help="enable the structured tracer: engine step / "
+                        "ingest spans, trainer steps, weight-stream "
+                        "fences, gateway request lifecycle (DESIGN.md "
+                        "§Telemetry)")
+    g.add_argument("--trace-out", default="",
+                   help="write the collected events as Chrome/Perfetto "
+                        "trace_event JSON to this path at exit (implies "
+                        "--trace; open in ui.perfetto.dev)")
+    g.add_argument("--metrics-snapshot", default="",
+                   help="write a JSON snapshot of the metrics registry "
+                        "(counters / gauges / histograms, DESIGN.md "
+                        "§Metrics registry) to this path at exit")
+
+
+def obs_setup(args: argparse.Namespace, *, actor: str) -> bool:
+    """Enable the global tracer from ``--trace`` / ``--trace-out``.
+    Called once at launcher start, BEFORE any instrumented code runs;
+    ``actor`` becomes the Perfetto process name (DESIGN.md §Clock
+    domains — launchers running in a virtual time base re-point the
+    clock afterwards with ``trace.get().set_clock``)."""
+    enabled = bool(getattr(args, "trace", False)
+                   or getattr(args, "trace_out", ""))
+    if enabled:
+        from repro.obs import trace
+        trace.configure(enabled=True, actor=actor)
+    return enabled
+
+
+def obs_finish(args: argparse.Namespace, *,
+               stats: Optional[Dict[str, Dict]] = None,
+               registry=None) -> Dict[str, str]:
+    """Write the telemetry artifacts a launcher owes at exit: the
+    ``--trace-out`` timeline and the ``--metrics-snapshot`` JSON (the
+    final ``stats`` dicts are absorbed under their prefix first, so the
+    snapshot carries every legacy counter surface).  ``registry``
+    overrides the global registry — the serve launcher passes the
+    gateway's own, which already holds the TTFT/ITL/queue-wait
+    histograms.  Returns ``{artifact: path}`` for the launcher's
+    summary line."""
+    written: Dict[str, str] = {}
+    if getattr(args, "trace", False) or getattr(args, "trace_out", ""):
+        from repro.obs import export
+        path = getattr(args, "trace_out", "") or "trace.json"
+        export.write_trace(path)
+        written["trace"] = path
+    snap_path = getattr(args, "metrics_snapshot", "")
+    if snap_path:
+        from repro.obs import metrics as obs_metrics
+        reg = registry if registry is not None else obs_metrics.get()
+        for prefix, st in (stats or {}).items():
+            if st:
+                reg.absorb(prefix, st)
+        with open(snap_path, "w") as f:
+            f.write(reg.snapshot_json(indent=2, sort_keys=True))
+        written["metrics"] = snap_path
+    return written

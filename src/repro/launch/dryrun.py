@@ -37,6 +37,7 @@ from repro.launch import cli, hlo_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.launch import steps as steps_mod
 from repro.models import model as model_mod
+from repro.obs import trace
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
                 "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
@@ -301,9 +302,11 @@ def main(argv=None):
                     help="grad-accumulation micro-steps inside train_step")
     # engine flags (dry-run boolean variants) come from launch/cli.py
     cli.add_engine_flags(ap, dryrun=True)
+    cli.add_obs_flags(ap)
     ap.add_argument("--extra", default="", help="free-form variant tag")
     ap.add_argument("--out", default=None, help="output dir for JSON records")
     args = ap.parse_args(argv)
+    cli.obs_setup(args, actor="dryrun")
 
     pairs = []
     if args.all:
@@ -315,17 +318,18 @@ def main(argv=None):
     ok = True
     for arch, shp in pairs:
         try:
-            rec = build_dryrun(arch, shp, multi_pod=args.multi_pod,
-                               fsdp=not args.no_fsdp,
-                               fsdp_pods=args.fsdp_pods,
-                               vocab_parallel=args.vocab_parallel,
-                               remat_policy=args.remat_policy,
-                               accum_steps=args.accum,
-                               paged_cache=args.paged_cache,
-                               block_size=args.block_size,
-                               prefill_chunk=args.prefill_chunk,
-                               fused_decode=args.fused_decode,
-                               extra=args.extra)
+            with trace.span("dryrun.build", arch=arch, shape=shp):
+                rec = build_dryrun(arch, shp, multi_pod=args.multi_pod,
+                                   fsdp=not args.no_fsdp,
+                                   fsdp_pods=args.fsdp_pods,
+                                   vocab_parallel=args.vocab_parallel,
+                                   remat_policy=args.remat_policy,
+                                   accum_steps=args.accum,
+                                   paged_cache=args.paged_cache,
+                                   block_size=args.block_size,
+                                   prefill_chunk=args.prefill_chunk,
+                                   fused_decode=args.fused_decode,
+                                   extra=args.extra)
         except Exception as e:  # a dry-run failure is a bug in the system
             rec = {"arch": arch, "shape": shp,
                    "mesh": "2x16x16" if args.multi_pod else "16x16",
@@ -344,6 +348,7 @@ def main(argv=None):
                 "fused" if args.fused_decode else "", args.extra]))
             with open(os.path.join(args.out, tag + ".json"), "w") as f:
                 json.dump(rec, f, indent=2)
+    cli.obs_finish(args)
     return 0 if ok else 1
 
 

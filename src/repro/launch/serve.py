@@ -33,6 +33,7 @@ from repro.data import tokenizer
 from repro.env import make_env
 from repro.launch import cli
 from repro.models.model import build_model
+from repro.obs import trace
 from repro.serve import Gateway, GatewayServer
 
 
@@ -110,7 +111,9 @@ def main():
     cli.add_engine_flags(ap)
     cli.add_env_flags(ap, default="math", allow_legacy=False)
     cli.add_gateway_flags(ap)
+    cli.add_obs_flags(ap)
     args = ap.parse_args()
+    cli.obs_setup(args, actor="serve")
 
     gw, env = build_gateway(args)
     if args.port:
@@ -120,9 +123,20 @@ def main():
                           "arch": args.arch,
                           "evict": gw.engine.engine_config.evict}),
               flush=True)
-        srv.serve_forever()
+        try:
+            srv.serve_forever()
+        finally:
+            cli.obs_finish(args, stats={"gateway": gw.stats()},
+                           registry=gw.metrics_registry())
     else:
-        print(json.dumps(run_offline(gw, env, args)))
+        if trace.get().enabled:
+            # offline mode runs on the gateway's deterministic tick
+            # clock — trace in that time base (DESIGN.md §Clock domains)
+            trace.get().set_clock(gw.now)
+        out = run_offline(gw, env, args)
+        out.update(cli.obs_finish(args, stats={"gateway": gw.stats()},
+                                  registry=gw.metrics_registry()))
+        print(json.dumps(out))
 
 
 if __name__ == "__main__":

@@ -54,6 +54,8 @@ from repro.data import tokenizer
 from repro.data.dataset import PromptStream
 from repro.launch import cli, disaggregated
 from repro.models.model import build_model
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace
 
 
 def _place_disaggregated(engine, trainer, train_fraction: float):
@@ -252,6 +254,11 @@ def run_training(arch: str = "areal-qwen-1.5b", *, steps: int = 25,
         timing.reward_latency = reward_latency
         ctl = AsyncRLController(engine=engine, trainer=trainer,
                                 scheduler=sched, rl=rl, timing=timing)
+        if trace.get().enabled:
+            # the virtual executor traces in its own time base: spans
+            # carry the simulated clock, not wall time (DESIGN.md
+            # §Clock domains)
+            trace.get().set_clock(lambda: ctl.clock)
         ctl.run(steps)
     if (scale == "laptop" and final_eval and env in ("", "math")
             and trainer.params is not None):
@@ -275,6 +282,7 @@ def main():
     cli.add_engine_flags(ap, slots=16, seed=1)
     cli.add_env_flags(ap, default="", allow_legacy=True)
     cli.add_runtime_flags(ap)
+    cli.add_obs_flags(ap)
     ap.add_argument("--eta", type=int, default=4,
                     help="max staleness (-1 = unbounded, 0 = synchronous)")
     ap.add_argument("--naive-ppo", action="store_true",
@@ -288,6 +296,7 @@ def main():
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--no-final-eval", action="store_true")
     args = ap.parse_args()
+    cli.obs_setup(args, actor="train")
 
     t0 = time.time()
     ctl, trainer, reward = run_training(
@@ -349,6 +358,15 @@ def main():
         out["respawns"] = ctl.respawns
         out["requeued"] = ctl.requeued
         out["fleet_events"] = len(ctl.registry.events)
+    snap_stats = {"scheduler": obs_metrics.scrape(
+        ctl.sched, surfaces=("publication_stats",))}
+    eng = getattr(ctl, "engine", None)
+    if eng is not None and hasattr(eng, "stats"):
+        snap_stats["engine"] = obs_metrics.scrape(
+            eng, surfaces=("stats", "stream_stats"))
+    if reward is not None and hasattr(reward, "stats"):
+        snap_stats["reward"] = reward.stats()
+    out.update(cli.obs_finish(args, stats=snap_stats))
     print(json.dumps(out))
 
 

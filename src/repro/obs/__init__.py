@@ -1,0 +1,15 @@
+"""Unified observability layer (DESIGN.md §Telemetry).
+
+Four small pieces, one time-base discipline:
+
+* :mod:`repro.obs.trace`    — structured tracer (spans / instants /
+  counters into per-thread buffers; inert when disabled).
+* :mod:`repro.obs.metrics`  — typed counter/gauge/histogram registry
+  that absorbs the existing ``stats()`` surfaces behind dotted names.
+* :mod:`repro.obs.export`   — Chrome/Perfetto ``trace_event`` JSON.
+* :mod:`repro.obs.recorder` — bounded crash flight recorder shipped
+  over the fleet transport and embedded in ``TimeoutError``.
+"""
+from repro.obs import export, metrics, recorder, trace
+
+__all__ = ["trace", "metrics", "export", "recorder"]

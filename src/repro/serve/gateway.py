@@ -30,6 +30,14 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.scheduler import SLAQueue
+from repro.obs import trace
+from repro.obs.metrics import MetricsRegistry, scrape
+
+# TTFT/ITL/queue-wait buckets wide enough for both gateway clock
+# domains (DESIGN.md §Clock domains): deterministic ticks (offline,
+# O(1..100)) and wall milliseconds (HTTP mode, O(10..10000)).
+GATEWAY_LATENCY_BUCKETS = (0.5, 1, 2, 4, 8, 16, 32, 64, 128, 256,
+                           512, 1024, 2048, 4096, 8192, 16384)
 
 
 @dataclass
@@ -93,6 +101,19 @@ class Gateway:
         self._ttfts: List[float] = []
         self._itls: List[float] = []       # inter-token latencies (driver side)
         self._last_tok_clock: Dict[int, float] = {}
+        # typed metrics (DESIGN.md §Metrics registry): histograms are
+        # observed live on the driver path; counters/gauges are absorbed
+        # from stats() at scrape time (GET /metrics, --metrics-snapshot)
+        self.metrics = MetricsRegistry()
+        self._h_ttft = self.metrics.histogram(
+            "gateway.ttft", GATEWAY_LATENCY_BUCKETS,
+            help="submit-to-first-token latency (gateway clock units)")
+        self._h_itl = self.metrics.histogram(
+            "gateway.itl", GATEWAY_LATENCY_BUCKETS,
+            help="inter-token latency (gateway clock units)")
+        self._h_queue_wait = self.metrics.histogram(
+            "gateway.queue_wait", GATEWAY_LATENCY_BUCKETS,
+            help="submit-to-slot-admission wait (gateway clock units)")
 
     # ---- clock ------------------------------------------------------------
     def now(self) -> float:
@@ -129,6 +150,8 @@ class Gateway:
                            submit_clock=now, answer=answer)
             self._live[rid] = rec
         self.queue.push(rec, priority=rec.priority, deadline=rec.deadline)
+        trace.instant("gw.submit", rid=rid, priority=int(priority),
+                      session=session or "")
         return rid
 
     def events(self, rid: int) -> "queue.SimpleQueue":
@@ -163,6 +186,7 @@ class Gateway:
             return False                   # pool pressure: retry next pump
         self._parked.pop(0)
         self._running[rec.rid] = rec
+        trace.instant("gw.resume", rid=rec.rid, slot=i)
         return True
 
     def _admit_one(self) -> bool:
@@ -185,6 +209,9 @@ class Gateway:
         self._shareable_blocks += len(rec.prompt) // self.engine.block_size \
             if self.engine.cache_mode == "paged" else 0
         self._running[rec.rid] = rec
+        wait = self.now() - rec.submit_clock
+        self._h_queue_wait.observe(wait)
+        trace.instant("gw.admit", rid=rec.rid, queue_wait=wait)
         return True
 
     def _maybe_preempt(self) -> bool:
@@ -210,6 +237,8 @@ class Gateway:
         del self._running[victim.rid]
         victim.preempted += 1
         self._parked.append((self._key(victim), victim, snap))
+        trace.instant("gw.preempt", rid=victim.rid, slot=i,
+                      by_priority=head_p)
         return True
 
     def pump(self) -> int:
@@ -252,9 +281,14 @@ class Gateway:
         for t in response[rec.streamed:]:
             if rec.first_token_clock < 0:
                 rec.first_token_clock = now
-                self._ttfts.append(now - rec.submit_clock)
+                ttft = now - rec.submit_clock
+                self._ttfts.append(ttft)
+                self._h_ttft.observe(ttft)
+                trace.instant("gw.ttft", rid=rec.rid, ttft=ttft)
             else:
-                self._itls.append(now - self._last_tok_clock[rec.rid])
+                itl = now - self._last_tok_clock[rec.rid]
+                self._itls.append(itl)
+                self._h_itl.observe(itl)
             self._last_tok_clock[rec.rid] = now
             rec.sink.put(("tok", int(t)))
             rec.streamed += 1
@@ -267,6 +301,8 @@ class Gateway:
         self.sla_misses += int(missed)
         self.completed += 1
         self._last_tok_clock.pop(rec.rid, None)
+        trace.instant("gw.done", rid=rec.rid, sla_missed=missed,
+                      preempted=rec.preempted, tokens=len(f.response))
         rec.sink.put(("end", {
             "rid": rec.rid, "tokens": list(f.response),
             "truncated": f.truncated, "turns": f.turns,
@@ -342,3 +378,19 @@ class Gateway:
             "itl_p99": self._pct(self._itls, 0.99),
             "ticks": self._ticks,
         }
+
+    def metrics_registry(self) -> "MetricsRegistry":
+        """Fold the live counter surfaces into ``self.metrics`` and
+        return it (DESIGN.md §Metrics registry).  The TTFT/ITL/queue-wait
+        histograms accumulate online in ``_stream_delta``/``_admit_one``;
+        scalar gauges are refreshed here at scrape time so ``GET
+        /metrics`` always reflects the current tick."""
+        self.metrics.absorb("gateway", self.stats())
+        self.metrics.absorb("engine", scrape(
+            self.engine, surfaces=("stats", "stream_stats")))
+        return self.metrics
+
+    def prometheus_text(self) -> str:
+        """Prometheus text exposition of the gateway + engine metrics
+        (served by ``GET /metrics`` in serve/http.py)."""
+        return self.metrics_registry().prometheus_text()

@@ -14,6 +14,9 @@ Endpoints:
     "text": str}`` object per generated token, then a final
     ``{"done": true, ...}`` summary;
   * ``GET /stats`` — gateway + engine counters as JSON;
+  * ``GET /metrics`` — Prometheus text exposition (DESIGN.md §Metrics
+    registry): TTFT/ITL/queue-wait histograms plus every gateway and
+    engine counter under stable ``repro_*`` names;
   * ``GET /healthz`` — liveness probe.
 
 Wall-clock mode: the server installs a monotonic millisecond clock on
@@ -108,6 +111,14 @@ def _make_handler(server: "GatewayServer"):
                 self._json(200, {"ok": True})
             elif self.path == "/stats":
                 self._json(200, gw.stats())
+            elif self.path == "/metrics":
+                body = gw.prometheus_text().encode()
+                self.send_response(200)
+                self.send_header("Content-Type",
+                                 "text/plain; version=0.0.4")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
             else:
                 self._json(404, {"error": "unknown path"})
 

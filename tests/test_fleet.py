@@ -8,6 +8,7 @@ fleet — simulator-stub workers for supervision/elastic behaviour and a
 tiny real model for the trajectory-equivalence and kill-mid-ingest
 acceptance criteria (DESIGN.md §Fleet runtime).
 """
+import json
 import os
 import signal
 import threading
@@ -164,6 +165,13 @@ def test_threaded_timeout_reports_per_role_liveness():
     assert "unscored=" in msg
     assert "role=rollout" in msg and "role=trainer" in msg
     assert "last-beat" in msg or "never beat" in msg
+    # the timeout post-mortem carries every diagnostic surface
+    # (DESIGN.md §Flight-recorder protocol): weight-publication
+    # counters, streaming-pickup counters, the flight-recorder tail
+    assert "publication={" in msg and "'published'" in msg
+    assert "stream=" in msg
+    assert "flight-recorder tail:" in msg
+    assert "train_step" in msg or "(empty)" in msg
 
 
 def test_executor_protocol_covers_both_runtimes():
@@ -303,10 +311,11 @@ def test_fleet_sim_run_completes_and_counts():
 
 
 @pytest.mark.slow
-def test_fleet_survives_sigkill_and_requeues_inflight():
+def test_fleet_survives_sigkill_and_requeues_inflight(tmp_path):
     sched = _sched(eta=4, batch=8)
     cap = _capture(sched)
-    rt = _fleet(sched, engine_factory_kwargs={
+    rt = _fleet(sched, flightrec_dir=str(tmp_path),
+                engine_factory_kwargs={
         "n_slots": 4, "mean_len": 16, "max_len": 48, "slow_step_s": 0.05})
     killed = {}
 
@@ -316,6 +325,7 @@ def test_fleet_survives_sigkill_and_requeues_inflight():
             for h in rt.registry.ready("rollout"):
                 if h.beats > 0 and rt.sched.inflight_of(h.worker_id):
                     killed["pid"] = h.proc.pid
+                    killed["worker_id"] = h.worker_id
                     os.kill(h.proc.pid, signal.SIGKILL)
                     return
             time.sleep(0.02)
@@ -334,6 +344,21 @@ def test_fleet_survives_sigkill_and_requeues_inflight():
     assert rt.duplicates_dropped == 0
     dead = rt.registry.events_of("worker-dead")
     assert any(e["reason"] == "crashed" for e in dead)
+    # SIGKILL post-mortem (DESIGN.md §Flight-recorder protocol): the
+    # victim beat at least once before dying, so the supervisor holds a
+    # nonempty copy of its recorder tail — shipped over heartbeats, it
+    # survives the process — and dumped it to flightrec_dir on failure.
+    victim = killed["worker_id"]
+    tail = rt.flight_recorder(victim)
+    assert len(tail) > 0
+    kinds = {e[2] for e in tail.tail(256)}
+    assert "start" in kinds                  # first heartbeat shipped it
+    dump = tmp_path / f"{victim}-crashed.json"
+    assert dump.exists()
+    events = json.loads(dump.read_text())
+    assert events and events[0]["kind"] == "start"
+    assert any(e["worker"] == victim
+               for e in rt.registry.events_of("flightrec-dump"))
 
 
 @pytest.mark.slow

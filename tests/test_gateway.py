@@ -271,6 +271,39 @@ def test_preempted_request_resumes_bit_exact(tiny):
     assert same == base                    # bit-exact despite preemption
 
 
+def test_gateway_stats_and_metrics_under_preemption(tiny):
+    """Gateway.stats() stays coherent through a preempt/resume cycle
+    and the online metrics registry (DESIGN.md §Metrics registry) saw
+    every lifecycle edge: one queue-wait and one TTFT observation per
+    completed request, latency percentiles in tick units > 0."""
+    gw = Gateway(_engine(tiny))
+    rids = [gw.submit([1, 4 + i, 5, 6], priority=2) for i in range(3)]
+    for _ in range(3):
+        gw.pump()
+    rids.append(gw.submit([1, 9, 5, 6], priority=0, sla=50))
+    gw.run_until_idle()
+    for r in rids:
+        assert gw.drain(r)["end"] is not None
+    st = gw.stats()
+    assert st["preemptions"] >= 1 and st["resumes"] >= 1
+    assert st["completed"] == 4
+    assert st["queued"] == 0 and st["running"] == 0 and st["parked"] == 0
+    assert st["ttft_p50"] > 0 and st["ttft_p99"] >= st["ttft_p50"]
+    assert st["itl_p99"] >= st["itl_p50"] > 0
+    # the preempted victim re-admits through admit_resume, not
+    # _admit_one, so queue-wait is observed exactly once per request
+    reg = gw.metrics_registry()
+    assert gw._h_queue_wait.count == 4
+    assert gw._h_ttft.count == 4
+    assert gw._h_itl.count > 0
+    snap = reg.snapshot()
+    assert snap["gateway.completed"] == 4.0
+    assert snap["gateway.ttft"]["count"] == 4
+    txt = gw.prometheus_text()
+    assert "repro_gateway_preemptions" in txt
+    assert "repro_gateway_queue_wait_bucket" in txt
+
+
 def test_same_tier_never_preempts(tiny):
     gw = Gateway(_engine(tiny))
     for i in range(4):                     # 2 slots, 4 equal-tier requests

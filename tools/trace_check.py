@@ -1,0 +1,186 @@
+#!/usr/bin/env python3
+"""Validate exported Chrome/Perfetto trace_event JSON (stdlib-only).
+
+Checks, per trace file:
+
+  1. well-formed JSON with a ``traceEvents`` list;
+  2. every event has ``name``/``ph``/``ts``/``pid``/``tid`` with
+     numeric timestamps, and ``X`` events carry a non-negative ``dur``;
+  3. ``B``/``E`` duration events balance per (pid, tid) track with
+     LIFO name matching;
+  4. per-track timestamps are monotonically non-decreasing in file
+     order (the exporter sorts by start time; a violation means a
+     clock-domain mix-up — see DESIGN.md §Clock domains).
+
+``--require-overlap A B`` additionally demands at least one pair of
+concurrently-open ``X`` spans between a track whose thread name
+contains A and one containing B — the gate the async-overlap benchmark
+uses to prove rollout and trainer lanes actually overlap.
+
+Run in the benchmark-smoke CI lane against the trace emitted by
+``benchmarks/async_overlap.py``.
+
+Usage:
+    python tools/trace_check.py TRACE.json [...] [--require-overlap A B]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Tuple
+
+VALID_PH = {"B", "E", "X", "i", "I", "C", "M", "b", "e", "n", "s", "t", "f"}
+
+
+def load(path: str) -> Dict[str, Any]:
+    with open(path, "r", encoding="utf-8") as f:
+        return json.load(f)
+
+
+def validate(trace: Dict[str, Any]) -> List[str]:
+    """Return a list of human-readable errors (empty == valid)."""
+    errors: List[str] = []
+    events = trace.get("traceEvents")
+    if not isinstance(events, list):
+        return ["top-level 'traceEvents' missing or not a list"]
+    if not events:
+        errors.append("trace has no events")
+
+    last_ts: Dict[Tuple[Any, Any], float] = {}
+    open_spans: Dict[Tuple[Any, Any], List[str]] = {}
+
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"event #{i}: not an object")
+            continue
+        ph = ev.get("ph")
+        name = ev.get("name")
+        if ph not in VALID_PH:
+            errors.append(f"event #{i} ({name!r}): bad ph {ph!r}")
+            continue
+        if not isinstance(name, str) or not name:
+            errors.append(f"event #{i}: missing name")
+        if ph == "M":
+            continue                       # metadata carries no ts
+        ts = ev.get("ts")
+        pid, tid = ev.get("pid"), ev.get("tid")
+        if not isinstance(ts, (int, float)):
+            errors.append(f"event #{i} ({name!r}): non-numeric ts {ts!r}")
+            continue
+        if pid is None or tid is None:
+            errors.append(f"event #{i} ({name!r}): missing pid/tid")
+            continue
+        track = (pid, tid)
+        prev = last_ts.get(track)
+        if prev is not None and ts < prev:
+            errors.append(
+                f"event #{i} ({name!r}): ts {ts} < previous {prev} "
+                f"on track pid={pid} tid={tid} (non-monotonic)")
+        last_ts[track] = ts
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(
+                    f"event #{i} ({name!r}): X span with bad dur {dur!r}")
+        elif ph == "B":
+            open_spans.setdefault(track, []).append(name)
+        elif ph == "E":
+            stack = open_spans.get(track) or []
+            if not stack:
+                errors.append(
+                    f"event #{i} ({name!r}): E without matching B on "
+                    f"track pid={pid} tid={tid}")
+            else:
+                top = stack.pop()
+                if name and top != name:
+                    errors.append(
+                        f"event #{i}: E {name!r} closes B {top!r} "
+                        f"(interleaved, not nested)")
+    for (pid, tid), stack in open_spans.items():
+        if stack:
+            errors.append(
+                f"unbalanced spans on track pid={pid} tid={tid}: "
+                f"{stack} never closed")
+    return errors
+
+
+def _track_names(trace: Dict[str, Any]) -> Dict[Tuple[Any, Any], str]:
+    names: Dict[Tuple[Any, Any], str] = {}
+    for ev in trace.get("traceEvents", []):
+        if isinstance(ev, dict) and ev.get("ph") == "M" \
+                and ev.get("name") == "thread_name":
+            names[(ev.get("pid"), ev.get("tid"))] = \
+                str(ev.get("args", {}).get("name", ""))
+    return names
+
+
+def concurrent_span_pairs(trace: Dict[str, Any], needle_a: str,
+                          needle_b: str) -> int:
+    """Count pairs of X spans — one on a track whose thread name
+    contains ``needle_a``, one on a ``needle_b`` track — whose
+    [ts, ts+dur) intervals overlap in time.  > 0 proves the two lanes
+    genuinely ran concurrently."""
+    names = _track_names(trace)
+
+    def spans_on(needle: str) -> List[Tuple[float, float]]:
+        out = []
+        for ev in trace.get("traceEvents", []):
+            if not (isinstance(ev, dict) and ev.get("ph") == "X"):
+                continue
+            track = (ev.get("pid"), ev.get("tid"))
+            if needle.lower() in names.get(track, "").lower():
+                ts = float(ev["ts"])
+                out.append((ts, ts + float(ev.get("dur", 0))))
+        return out
+
+    a_spans, b_spans = spans_on(needle_a), spans_on(needle_b)
+    pairs = 0
+    for a0, a1 in a_spans:
+        for b0, b1 in b_spans:
+            if a0 < b1 and b0 < a1:
+                pairs += 1
+    return pairs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("traces", nargs="+", help="trace JSON file(s)")
+    ap.add_argument("--require-overlap", nargs=2, metavar=("A", "B"),
+                    help="fail unless an A-track span and a B-track "
+                         "span overlap in time")
+    args = ap.parse_args(argv)
+
+    failed = False
+    for path in args.traces:
+        try:
+            trace = load(path)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"FAIL {path}: unreadable or invalid JSON: {e}")
+            failed = True
+            continue
+        errors = validate(trace)
+        n_events = len(trace.get("traceEvents") or [])
+        if errors:
+            failed = True
+            print(f"FAIL {path}: {len(errors)} error(s) in "
+                  f"{n_events} events")
+            for e in errors[:20]:
+                print(f"  - {e}")
+        else:
+            print(f"OK   {path}: {n_events} events")
+        if args.require_overlap:
+            a, b = args.require_overlap
+            pairs = concurrent_span_pairs(trace, a, b)
+            if pairs > 0:
+                print(f"     overlap {a!r}×{b!r}: "
+                      f"{pairs} concurrent span pair(s)")
+            else:
+                failed = True
+                print(f"FAIL {path}: no concurrent span pairs between "
+                      f"{a!r} and {b!r} tracks")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
